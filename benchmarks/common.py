@@ -1,0 +1,93 @@
+"""Shared benchmark harness utilities: dataset construction + timing."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def timer(fn, *args, repeats: int = 1):
+    """Returns (result, us_per_call). Blocks on jax arrays."""
+    out = fn(*args)  # warmup + result
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+@functools.lru_cache(maxsize=4)
+def ahe_dataset(name: str, n_records: int, n_beats: int, n_test: int, seed: int = 0):
+    """Synthetic MIMIC-like dataset via the paper's rolling-window pipeline."""
+    from repro.data import abp, windows
+
+    cfgw = {"AHE-301-30c": windows.AHE_301_30C, "AHE-51-5c": windows.AHE_51_5C}[name]
+    cfg = abp.ABPConfig(n_beats=n_beats, episode_rate=1.0 / 2500.0)
+    mapv, valid = abp.synth_dataset_beats(jax.random.PRNGKey(seed), n_records, cfg)
+    ds = windows.build_dataset(np.asarray(mapv), np.asarray(valid), cfgw)
+    train, qx, qy = windows.train_test_split(ds, n_test=n_test, seed=seed)
+    return train, qx, qy, ds["pct_no_ahe"]
+
+
+def slsh_cfg(**kw):
+    from repro.core import slsh
+
+    base = dict(
+        m_out=32, L_out=16, m_in=12, L_in=4, alpha=0.005, k=10,
+        val_lo=20.0, val_hi=180.0, c_max=256, c_in=16, h_max=16, p_max=512,
+        build_chunk=4096, query_chunk=50,
+    )
+    base.update(kw)
+    return slsh.SLSHConfig(**base)
+
+
+def evaluate(points, labels, qx, qy, cfg, grid, key=None):
+    """Build + query DSLSH and PKNN; returns the paper's metrics."""
+    from repro.core import distributed as D
+    from repro.core import predict
+
+    key = key if key is not None else jax.random.PRNGKey(7)
+    pts, labs, _ = D.pad_to_multiple(np.asarray(points), np.asarray(labels), grid.cells)
+    pts_j, labs_j = jnp.asarray(pts), jnp.asarray(labs)
+    qx_j, qy_j = jnp.asarray(qx), jnp.asarray(qy)
+
+    t0 = time.perf_counter()
+    idx = D.simulate_build(key, pts_j, cfg, grid)
+    jax.block_until_ready(idx)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    kd, ki, comps = D.simulate_query(idx, pts_j, qx_j, cfg, grid)
+    jax.block_until_ready((kd, ki, comps))
+    query_s = time.perf_counter() - t0
+
+    pred = predict.predict_batch(labs_j, ki, kd)
+    mcc_slsh = float(predict.mcc(pred, qy_j))
+
+    pkd, pki, pcomps = D.pknn_query(pts_j, qx_j, cfg.k, grid)
+    pred_p = predict.predict_batch(labs_j, pki, pkd)
+    mcc_pknn = float(predict.mcc(pred_p, qy_j))
+
+    max_comps = np.asarray(comps).max(axis=(0, 1)).astype(np.float64)  # per query
+    med = float(np.median(max_comps))
+    lo, hi = np.percentile(max_comps, [2.5, 97.5])
+    pknn_per_proc = float(np.asarray(pcomps)[0, 0, 0])
+    return dict(
+        mcc_slsh=mcc_slsh,
+        mcc_pknn=mcc_pknn,
+        mcc_loss=mcc_pknn - mcc_slsh,
+        median_comps=med,
+        comps_ci=(float(lo), float(hi)),
+        pknn_comps=pknn_per_proc,
+        speedup=pknn_per_proc / max(med, 1.0),
+        build_s=build_s,
+        query_s=query_s,
+        us_per_query=query_s / qx.shape[0] * 1e6,
+    )

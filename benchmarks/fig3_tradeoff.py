@@ -1,0 +1,33 @@
+"""Figure 3: speed vs MCC trade-off of the outer LSH layer.
+
+Sweeps (m_out, L_out) with the inner layer disabled and reports the
+comparison speedup over PKNN and the MCC loss — the paper's trade-off
+frontier, on the synthetic AHE-301-30c-scale dataset.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import distributed as D
+
+M_GRID_FULL = (100, 125, 150, 175, 200)
+L_GRID_FULL = (72, 96, 120)
+M_GRID = (16, 24, 32, 40)
+L_GRID = (8, 16, 24)
+
+
+def run():
+    n_rec, n_beats, n_test = (40, 800_000, 2000) if common.FULL else (24, 400_000, 500)
+    train, qx, qy, pct = common.ahe_dataset("AHE-301-30c", n_rec, n_beats, n_test)
+    grid = D.Grid(nu=2, p=8)  # paper: p=8, nu=2
+    ms = M_GRID_FULL if common.FULL else M_GRID
+    ls = L_GRID_FULL if common.FULL else L_GRID
+    for m in ms:
+        for L in ls:
+            cfg = common.slsh_cfg(m_out=m, L_out=L, use_inner=False)
+            r = common.evaluate(train["points"], train["labels"], qx, qy, cfg, grid)
+            yield (
+                f"fig3/m{m}_L{L}",
+                r["us_per_query"],
+                f"speedup={r['speedup']:.2f};mcc_slsh={r['mcc_slsh']:.3f};"
+                f"mcc_pknn={r['mcc_pknn']:.3f};median_comps={r['median_comps']:.0f}",
+            )

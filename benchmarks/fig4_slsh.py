@@ -1,0 +1,46 @@
+"""Figure 4: the stratified (inner) layer at the SLSH onset.
+
+At the onset configuration (best outer point within 10% MCC loss), sweep
+(m_in, L_in) with the cosine inner layer enabled.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import distributed as D
+
+ONSET = dict(m_out=32, L_out=16)  # scaled analogue of paper's (125, 120)
+M_IN = (8, 12, 16, 24)
+L_IN = (4, 8)
+
+
+def run():
+    n_rec, n_beats, n_test = (40, 800_000, 2000) if common.FULL else (24, 400_000, 500)
+    train, qx, qy, _ = common.ahe_dataset("AHE-301-30c", n_rec, n_beats, n_test)
+    grid = D.Grid(nu=2, p=8)
+    onset_cfg = common.slsh_cfg(**ONSET, use_inner=False)
+    r0 = common.evaluate(train["points"], train["labels"], qx, qy, onset_cfg, grid)
+    yield (
+        "fig4/onset",
+        r0["us_per_query"],
+        f"speedup={r0['speedup']:.2f};mcc_slsh={r0['mcc_slsh']:.3f}",
+    )
+    for mi in M_IN:
+        for li in L_IN:
+            cfg = common.slsh_cfg(**ONSET, m_in=mi, L_in=li, use_inner=True)
+            r = common.evaluate(train["points"], train["labels"], qx, qy, cfg, grid)
+            yield (
+                f"fig4/min{mi}_Lin{li}",
+                r["us_per_query"],
+                f"speedup={r['speedup']:.2f};mcc_slsh={r['mcc_slsh']:.3f};"
+                f"median_comps={r['median_comps']:.0f}",
+            )
+    # beyond-paper optimized point (EXPERIMENTS.md §Perf iteration C3):
+    # fewer/wider outer tables, the stratified layer absorbs the heavy mass
+    cfg = common.slsh_cfg(m_out=24, L_out=8)
+    r = common.evaluate(train["points"], train["labels"], qx, qy, cfg, grid)
+    yield (
+        "fig4/beyond_m24_L8",
+        r["us_per_query"],
+        f"speedup={r['speedup']:.2f};mcc_slsh={r['mcc_slsh']:.3f};"
+        f"median_comps={r['median_comps']:.0f}",
+    )

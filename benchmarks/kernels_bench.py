@@ -1,0 +1,32 @@
+"""Kernel microbenchmarks (interpret mode on CPU — correctness-scale only;
+the BlockSpec tiling targets TPU v5e)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+
+def run():
+    from repro.kernels.l1_topk import ops as l1
+    from repro.kernels.hash_pack import ops as hp
+    from repro.kernels.flash_attention import ops as fa
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.uniform(key, (8, 30))
+    cands = jax.random.uniform(key, (8, 2048, 30))
+    mask = jnp.ones((8, 2048), bool)
+    _, us = common.timer(lambda: l1.l1_topk(q, cands, mask, k=10), repeats=3)
+    yield ("kernel/l1_topk_8x2048", us, "interpret=True")
+
+    x = jax.random.normal(key, (512, 30))
+    proj = jax.random.normal(key, (30, 128))
+    _, us = common.timer(lambda: hp.signrp_pack(x, proj), repeats=3)
+    yield ("kernel/hash_pack_512x128", us, "interpret=True")
+
+    qkv = jax.random.normal(key, (1, 4, 256, 64))
+    _, us = common.timer(
+        lambda: fa.flash_attention(qkv, qkv[:, :2], qkv[:, :2], causal=True), repeats=3
+    )
+    yield ("kernel/flash_attn_256", us, "interpret=True")

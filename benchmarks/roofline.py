@@ -1,0 +1,229 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch, cell, mesh), in seconds:
+
+  compute    = FLOPs            / (chips * 197e12 bf16 FLOP/s)
+  memory     = HBM bytes        / (chips * 819e9  B/s)
+  collective = collective bytes / (chips * 50e9   B/s per ICI link)
+
+Methodology (documented in EXPERIMENTS.md §Roofline): XLA's
+``cost_analysis()`` counts every ``while`` body ONCE (loops are opaque to
+HloCostAnalysis), and our steps are scan-over-layers x scan-over-microbatches
+x chunked inner loops — so raw HLO numbers undercount by the trip products.
+We therefore compute the terms ANALYTICALLY from the model configs (the
+formulas below) and use the dry-run artifacts for (i) the compile/fit proof,
+(ii) the collective-op inventory (which collectives XLA actually emitted),
+and (iii) a single-layer HLO cross-check of the analytic FLOPs
+(tests/test_roofline.py asserts <15% disagreement on a loop-free lowering).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e-class target)
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+# --------------------------------------------------------- analytic model
+def _attn_flops(cfg, tokens, kv_len, causal=True):
+    """Score+value matmul flops for one full pass over ``tokens`` queries."""
+    if cfg.n_heads == 0:
+        return 0.0
+    dh = cfg.head_dim
+    eff = 0.5 if causal and tokens == kv_len else 1.0
+    if cfg.window and kv_len > cfg.window:
+        eff = min(eff, cfg.window / kv_len)
+    return 2 * 2 * tokens * kv_len * cfg.n_heads * dh * eff
+
+
+def _ssd_flops(cfg, tokens):
+    if cfg.ssm_state == 0:
+        return 0.0
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_headdim
+    q = cfg.ssm_chunk
+    n, p = cfg.ssm_state, cfg.ssm_headdim
+    # intra: (Q,Q) scores vs N + (Q,Q)x(Q,P) per head; states: Q*N*P per head
+    per_chunk = 2 * q * q * n + 2 * q * q * h * p + 2 * 2 * q * n * p * h
+    return (tokens / q) * per_chunk
+
+
+def _layer_matmul_flops(cfg, tokens):
+    d, f = cfg.d_model, cfg.d_ff
+    fl = 0.0
+    if cfg.n_heads:
+        dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        fl += 2 * tokens * d * (hq + 2 * hkv) * dh  # qkv
+        fl += 2 * tokens * hq * dh * d  # out proj
+    if cfg.ssm_state:
+        d_inner, n_heads, conv_dim, d_proj = _ssm_dims(cfg)
+        fl += 2 * tokens * d * d_proj + 2 * tokens * d_inner * d
+        fl += 2 * tokens * conv_dim * cfg.conv_kernel
+    if cfg.n_experts:
+        fl += 2 * tokens * d * cfg.n_experts  # router
+        fl += cfg.top_k * 3 * 2 * tokens * d * f  # swiglu per routed copy
+    elif f:
+        n_mats = 3 if cfg.mlp == "swiglu" else 2
+        fl += n_mats * 2 * tokens * d * f
+    return fl
+
+
+def _ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    d_proj = 2 * d_inner + 2 * cfg.ssm_state + n_heads
+    return d_inner, n_heads, conv_dim, d_proj
+
+
+def param_count(cfg) -> int:
+    from repro.models import api as mapi
+
+    return mapi.build_model(cfg).n_params
+
+
+def analytic_terms(cfg, cell: str, mesh_shape: tuple) -> dict:
+    """FLOPs / HBM bytes / collective bytes for one step, whole system."""
+    from repro.models.api import SHAPE_CELLS
+
+    c = SHAPE_CELLS[cell]
+    chips = 1
+    for s in mesh_shape:
+        chips *= s
+    seq, batch = c["seq"], c["batch"]
+    n_params = param_count(cfg)
+    dp = chips // mesh_shape[-1]  # data-parallel degree (pod*data)
+    tp = mesh_shape[-1]
+    pdt = 2 if cfg.param_dtype == "bfloat16" else 4
+    meta = cfg.meta_tokens
+
+    if c["kind"] == "train":
+        tokens = batch * (seq + meta)
+        fwd = cfg.n_layers * (_layer_matmul_flops(cfg, tokens) + _ssd_flops(cfg, tokens))
+        fwd += cfg.n_layers * batch * _attn_flops(cfg, seq + meta, seq + meta, cfg.causal)
+        fwd += 2 * tokens * cfg.d_model * cfg.vocab  # lm head
+        remat_mult = 4 if cfg.remat == "full" else 3  # fwd+bwd(2x) [+refwd]
+        flops = remat_mult * fwd
+        # HBM: params + grads + opt read/write per step, activations ~2 passes
+        opt_bytes = n_params * (10 if cfg.opt_state_bits == 8 else 16)
+        act_bytes = remat_mult * cfg.n_layers * tokens * cfg.d_model * 2 * 4
+        bytes_hbm = n_params * pdt * (2 * cfg.microbatches + 1) + opt_bytes + act_bytes
+        # collectives: FSDP all-gather params (per microbatch) + grad
+        # reduce-scatter + TP 2 all-reduce of (tokens, d) per layer
+        coll = n_params * pdt * (cfg.microbatches + 1)  # ag + rs over dp
+        coll += cfg.n_layers * 2 * (tokens / dp) * cfg.d_model * 2  # TP ars
+        coll *= (dp - 1) / dp if dp > 1 else 0.0
+    elif c["kind"] == "prefill":
+        tokens = batch * (seq + meta)
+        flops = cfg.n_layers * (_layer_matmul_flops(cfg, tokens) + _ssd_flops(cfg, tokens))
+        flops += cfg.n_layers * batch * _attn_flops(cfg, seq + meta, seq + meta, cfg.causal)
+        flops += 2 * batch * cfg.d_model * cfg.vocab
+        bytes_hbm = n_params * pdt + 2 * cfg.n_layers * tokens * cfg.d_model * 2
+        coll = cfg.n_layers * 2 * (tokens / dp) * cfg.d_model * 2
+    else:  # decode: one token per sequence against a seq_len cache
+        tokens = batch
+        kv_len = seq
+        flops = cfg.n_layers * (_layer_matmul_flops(cfg, tokens) + _ssd_flops(cfg, tokens))
+        if cfg.n_heads:
+            n_global = (
+                len(cfg.global_layers) if cfg.global_layers else cfg.n_layers
+            )
+            n_local = cfg.n_layers - n_global
+            flops += n_global * batch * _attn_flops(cfg, 1, kv_len, causal=False)
+            win = cfg.window or kv_len
+            flops += n_local * batch * _attn_flops(cfg, 1, min(win, kv_len), causal=False)
+        flops += 2 * batch * cfg.d_model * cfg.vocab
+        # decode is memory-bound: read params + the KV cache slice
+        cache_bytes = _cache_bytes(cfg, batch, kv_len)
+        bytes_hbm = n_params * pdt + cache_bytes
+        coll = batch * cfg.d_model * 2 * cfg.n_layers  # cp-attn psum of acc
+    return dict(
+        flops=float(flops),
+        bytes_hbm=float(bytes_hbm),
+        coll_bytes=float(max(coll, 0.0)),
+        chips=chips,
+        n_params=n_params,
+        tokens=float(tokens),
+    )
+
+
+def _cache_bytes(cfg, batch, kv_len):
+    if cfg.family == "ssm" or cfg.ssm_state and not cfg.n_heads:
+        d_inner, h, conv_dim, _ = _ssm_dims(cfg)
+        return cfg.n_layers * batch * (h * cfg.ssm_state * cfg.ssm_headdim * 4 + conv_dim * 12)
+    per_layer_full = 2 * batch * kv_len * cfg.n_kv_heads * cfg.head_dim * 2
+    if cfg.global_layers:
+        n_global = len(cfg.global_layers)
+        n_local = cfg.n_layers - n_global
+        win = min(cfg.window or kv_len, kv_len)
+        per_layer_win = 2 * batch * win * cfg.n_kv_heads * cfg.head_dim * 2
+        ssm = 0.0
+        if cfg.ssm_state:
+            d_inner, h, conv_dim, _ = _ssm_dims(cfg)
+            ssm = cfg.n_layers * batch * h * cfg.ssm_state * cfg.ssm_headdim * 4
+        return n_global * per_layer_full + n_local * per_layer_win + ssm
+    return cfg.n_layers * per_layer_full
+
+
+def model_flops_6nd(cfg, cell: str) -> float:
+    """The classic 6*N*D (train) / 2*N*D (inference) useful-FLOPs yardstick."""
+    from repro.models.api import SHAPE_CELLS
+
+    c = SHAPE_CELLS[cell]
+    n = param_count(cfg)
+    if cfg.n_experts:  # active params only
+        from repro.models import api as mapi
+
+        dense_like = n - cfg.n_layers * (cfg.n_experts - cfg.top_k) * 3 * cfg.d_model * cfg.d_ff
+        n = dense_like
+    tokens = c["batch"] * (c["seq"] if c["kind"] != "decode" else 1)
+    return (6 if c["kind"] == "train" else 2) * n * tokens
+
+
+def terms_seconds(t: dict) -> dict:
+    chips = t["chips"]
+    return dict(
+        compute_s=t["flops"] / (chips * PEAK_FLOPS),
+        memory_s=t["bytes_hbm"] / (chips * HBM_BW),
+        collective_s=t["coll_bytes"] / (chips * ICI_BW),
+    )
+
+
+def load_artifacts(mesh: str = "16x16") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*_{mesh}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run():
+    """Benchmark-runner entry: one row per (arch, cell) on the 16x16 mesh."""
+    from repro import configs
+    from repro.models import api as mapi
+
+    arts = {(a["arch"], a["cell"]): a for a in load_artifacts("16x16")}
+    for arch_id in configs.ARCH_IDS:
+        cfg = configs.get(arch_id)
+        for cell in mapi.SHAPE_CELLS:
+            if mapi.cell_skip_reason(cfg, cell):
+                continue
+            t = analytic_terms(cfg, cell, (16, 16))
+            s = terms_seconds(t)
+            dom = max(s, key=s.get)
+            mf = model_flops_6nd(cfg, cell)
+            art = arts.get((arch_id, cell), {})
+            status = art.get("status", "n/a")
+            frac = mf / t["flops"] if t["flops"] else 0.0
+            yield (
+                f"roofline/{arch_id}/{cell}",
+                s[dom] * 1e6,  # dominant term in us = the step floor
+                f"dom={dom[:-2]};compute_s={s['compute_s']:.3e};"
+                f"memory_s={s['memory_s']:.3e};collective_s={s['collective_s']:.3e};"
+                f"model_flops_ratio={frac:.2f};dryrun={status}",
+            )

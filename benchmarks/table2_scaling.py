@@ -1,0 +1,36 @@
+"""Table 2: strong scaling on AHE-301-30c (p=8, nu=1..5).
+
+Median (95% CI) of the max #comparisons per processor, speedup S_8 relative
+to the single-node run, and the PKNN/DSLSH ratio.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import distributed as D
+
+DATASET = "AHE-301-30c"
+SIZES_FULL = (40, 800_000, 2000)
+SIZES_SMALL = (24, 400_000, 500)
+
+
+def run(dataset=DATASET, tag="table2"):
+    n_rec, n_beats, n_test = SIZES_FULL if common.FULL else SIZES_SMALL
+    train, qx, qy, _ = common.ahe_dataset(dataset, n_rec, n_beats, n_test)
+    base_median = None
+    for nu in (1, 2, 3, 4, 5):
+        grid = D.Grid(nu=nu, p=8)
+        cfg = common.slsh_cfg()
+        r = common.evaluate(train["points"], train["labels"], qx, qy, cfg, grid)
+        if base_median is None:
+            base_median = r["median_comps"]
+        s8 = base_median / max(r["median_comps"], 1.0)
+        lo, hi = r["comps_ci"]
+        yield (
+            f"{tag}/nu{nu}_p8",
+            r["us_per_query"],
+            f"median_comps={r['median_comps']:.0f};ci=[{lo:.0f},{hi:.0f}];"
+            f"S8={s8:.2f};pknn_ratio={r['speedup']:.2f};"
+            f"mcc_loss={r['mcc_loss']:.3f}",
+        )

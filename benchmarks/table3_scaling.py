@@ -1,0 +1,11 @@
+"""Table 3: strong scaling on AHE-51-5c (the larger dataset) — the paper's
+evidence that the DSLSH/PKNN ratio grows with n."""
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks import table2_scaling
+
+
+def run():
+    # AHE-51-5c yields ~1.7x more windows from the same beats (paper Table 1)
+    yield from table2_scaling.run(dataset="AHE-51-5c", tag="table3")

@@ -1,0 +1,7 @@
+# Ensures the repo root (for the ``benchmarks`` package) is importable when
+# running ``PYTHONPATH=src pytest tests/``. Deliberately does NOT set any
+# XLA flags: smoke tests and benches must see 1 device (dry-run sets its own).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,326 @@
+"""DSLSH — the paper's distributed SLSH system (§3), mapped to a JAX mesh.
+
+Paper -> mesh mapping (DESIGN.md §2):
+  * nu SLSH nodes, each owning O(n/nu) points  -> mesh axis ``data``
+  * p cores per node, each owning L_out/p outer tables -> mesh axis ``model``
+  * Root's hash-function broadcast -> same PRNG key everywhere; each core
+    slices its own rows out of the full (L_out, m) family, so table t uses
+    identical hash functions on every node (required for correctness).
+  * Forwarder -> queries replicated to all cells.
+  * Reducer / Master -> top-K merges: all-gather (small K) or a ppermute
+    butterfly tree; both implemented, selectable.
+
+Two execution paths share the same per-cell functions:
+  * ``dslsh_*``     — shard_map over a real device mesh (dry-run / production)
+  * ``simulate_*``  — vmap over the cell grid on one device (CPU benchmarks;
+    the paper's #comparisons metric is device-count independent)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hashing, slsh, topk
+
+# --------------------------------------------------------------------- grid
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    nu: int  # nodes  (mesh axis "data")
+    p: int  # cores  (mesh axis "model")
+
+    @property
+    def cells(self) -> int:
+        return self.nu * self.p
+
+
+def pad_to_multiple(
+    points, labels, multiple: int, sentinel: float = 1e9
+):
+    """Pad dataset so n divides the shard grid; pads never enter any K-NN."""
+    import numpy as np
+
+    n = points.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return points, labels, n
+    pad_pts = np.full((rem, points.shape[1]), sentinel, points.dtype)
+    pad_lab = np.zeros((rem,), labels.dtype)
+    return (
+        np.concatenate([points, pad_pts]),
+        np.concatenate([labels, pad_lab]),
+        n,
+    )
+
+
+# ---------------------------------------------------------------- per-cell
+
+
+def _local_tables(cfg: slsh.SLSHConfig, p: int) -> int:
+    assert cfg.L_out % p == 0, "L_out must divide across cores (paper: p < L_out)"
+    return cfg.L_out // p
+
+
+def cell_build(
+    root_key: jax.Array,
+    data_local: jax.Array,
+    core_id: jax.Array,
+    cfg: slsh.SLSHConfig,
+    grid: Grid,
+) -> slsh.SLSHIndex:
+    """Build this cell's L_out/p tables over the node's data slice.
+
+    The full (L_out, m) hash family is generated from the *root* key on every
+    cell and each core keeps rows [core_id*L_loc, ...) — the SPMD form of the
+    Root broadcasting the same family instances to all nodes.
+    """
+    l_loc = _local_tables(cfg, grid.p)
+    d = data_local.shape[1]
+    k_out, k_in = jax.random.split(root_key)
+    full = hashing.make_bitsample(k_out, cfg.L_out, cfg.m_out, d, cfg.val_lo, cfg.val_hi)
+    rows = core_id * l_loc + jnp.arange(l_loc)
+    outer_params = hashing.BitSampleParams(
+        full.dims[rows], full.thrs[rows], full.salts[rows]
+    )
+    inner_params = hashing.make_signrp(k_in, cfg.L_in, cfg.m_in, d)
+
+    cfg_loc = dataclasses.replace(cfg, L_out=l_loc)
+    # Re-create build_index's body with externally-sliced params.
+    keys = hashing.hash_points_chunked(outer_params, data_local, cfg.build_chunk)
+    from repro.core import tables as T
+
+    outer = T.build_tables(keys)
+    n_loc = data_local.shape[0]
+    alpha_n = jnp.maximum((cfg.alpha * n_loc), 1.0).astype(jnp.int32)
+    heavy = T.find_heavy(outer, alpha_n, cfg.h_max)
+    if cfg.use_inner:
+        def per_table(args):
+            sk_row, si_row, hv_start, hv_size, hv_valid = args
+            return jax.vmap(
+                lambda s, z, v: slsh._build_inner_for_bucket(
+                    inner_params, data_local, si_row, s, z, v, cfg.p_max
+                )
+            )(hv_start, hv_size, hv_valid)
+
+        inner_keys, inner_idx = jax.lax.map(
+            per_table,
+            (outer.sorted_keys, outer.sorted_idx, heavy.start, heavy.size, heavy.valid),
+        )
+    else:
+        from repro.core.tables import PAD_KEY
+
+        inner_keys = jnp.full((l_loc, cfg.h_max, cfg.L_in, cfg.p_max), PAD_KEY)
+        inner_idx = jnp.full((l_loc, cfg.h_max, cfg.L_in, cfg.p_max), -1, jnp.int32)
+    del cfg_loc
+    return slsh.SLSHIndex(
+        outer_params, inner_params, outer, heavy, inner_keys, inner_idx, jnp.int32(n_loc)
+    )
+
+
+class CellResult(NamedTuple):
+    knn_dist: jax.Array  # (Q, K) partial distances
+    knn_idx: jax.Array  # (Q, K) GLOBAL indices (-1 pad)
+    comparisons: jax.Array  # (Q,) unique candidates scanned in this cell
+
+
+def cell_query(
+    index: slsh.SLSHIndex,
+    data_local: jax.Array,
+    node_offset: jax.Array,
+    queries: jax.Array,
+    cfg: slsh.SLSHConfig,
+    grid: Grid,
+) -> CellResult:
+    cfg_loc = dataclasses.replace(cfg, L_out=_local_tables(cfg, grid.p))
+    res = slsh.query_batch(index, data_local, queries, cfg_loc)
+    gidx = jnp.where(res.knn_idx >= 0, res.knn_idx + node_offset, -1)
+    return CellResult(res.knn_dist, gidx, res.comparisons)
+
+
+# ----------------------------------------------------------------- reducers
+
+
+def merge_axis_allgather(axis: str, kd: jax.Array, ki: jax.Array, k: int):
+    """Reducer via all-gather: (Q,K)->(Q,K) merged over mesh axis ``axis``."""
+    gd = jax.lax.all_gather(kd, axis)  # (S, Q, K)
+    gi = jax.lax.all_gather(ki, axis)
+    s = gd.shape[0]
+    gd = jnp.moveaxis(gd, 0, 1).reshape(kd.shape[0], s * k)
+    gi = jnp.moveaxis(gi, 0, 1).reshape(kd.shape[0], s * k)
+    return jax.vmap(lambda d, i: topk.masked_topk_smallest(d, i, k))(gd, gi)
+
+
+def merge_axis_tree(axis: str, kd: jax.Array, ki: jax.Array, k: int, size: int):
+    """Reducer via a ppermute butterfly (log2(size) exchange+merge rounds)."""
+    assert size & (size - 1) == 0, "tree reducer needs power-of-two axis"
+    step = 1
+    while step < size:
+        perm = [(i, i ^ step) for i in range(size)]
+        pd = jax.lax.ppermute(kd, axis, perm)
+        pi = jax.lax.ppermute(ki, axis, perm)
+        kd, ki = jax.vmap(
+            lambda a, b, c, d_: topk.merge_topk(a, b, c, d_, k)
+        )(kd, ki, pd, pi)
+        step *= 2
+    return kd, ki
+
+
+# ------------------------------------------------------------- shard_map API
+
+
+def dslsh_build(mesh, root_key, data, cfg: slsh.SLSHConfig, grid: Grid):
+    """Build the distributed index. data: (n, d) sharded over ``data`` axis.
+
+    Returns a per-cell-stacked SLSHIndex with leading (nu, p) dims.
+    """
+
+    def body(key, data_local):
+        core = jax.lax.axis_index("model")
+        idx = cell_build(key, data_local, core, cfg, grid)
+        return jax.tree.map(lambda a: a[None, None], idx)
+
+    out_specs = jax.tree.map(
+        lambda _: P("data", "model"),
+        jax.eval_shape(
+            lambda: cell_build(root_key, data[: data.shape[0] // grid.nu], jnp.int32(0), cfg, grid)
+        ),
+    )
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P("data", None)),
+        out_specs=out_specs,
+        check_vma=False,
+    )(root_key, data)
+
+
+def dslsh_query(
+    mesh,
+    index,
+    data,
+    queries,
+    cfg: slsh.SLSHConfig,
+    grid: Grid,
+    reducer: str = "allgather",
+    drop_mask: jax.Array | None = None,
+):
+    """Resolve queries on the distributed index.
+
+    Returns (knn_dist (Q,K), knn_idx (Q,K) global, comparisons (nu, p, Q)).
+    ``drop_mask`` (nu,) bool marks nodes dropped by the straggler deadline —
+    the Reducer proceeds without their partials (paper's latency-first mode).
+    """
+    if drop_mask is None:
+        drop_mask = jnp.zeros((grid.nu,), bool)
+
+    def body(index_local, data_local, qs, dropm):
+        index_local = jax.tree.map(lambda a: a[0, 0], index_local)
+        node = jax.lax.axis_index("data")
+        n_loc = data_local.shape[0]
+        res = cell_query(index_local, data_local, node * n_loc, qs, cfg, grid)
+        kd, ki = res.knn_dist, res.knn_idx
+        dropped = dropm[node]
+        kd = jnp.where(dropped, jnp.inf, kd)
+        ki = jnp.where(dropped, -1, ki)
+        # Master: merge within the node (over cores)
+        if reducer == "tree":
+            kd, ki = merge_axis_tree("model", kd, ki, cfg.k, grid.p)
+            kd, ki = merge_axis_tree("data", kd, ki, cfg.k, grid.nu)
+        else:
+            kd, ki = merge_axis_allgather("model", kd, ki, cfg.k)
+            kd, ki = merge_axis_allgather("data", kd, ki, cfg.k)
+        return kd, ki, res.comparisons[None, None]
+
+    qd, qi, comps = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            jax.tree.map(lambda _: P("data", "model"), index),
+            P("data", None),
+            P(),
+            P(),
+        ),
+        out_specs=(P(), P(), P("data", "model")),
+        check_vma=False,
+    )(index, data, queries, drop_mask)
+    return qd, qi, comps
+
+
+# ------------------------------------------------------------ simulated API
+
+
+def simulate_build(root_key, data, cfg: slsh.SLSHConfig, grid: Grid):
+    """vmap-over-cells build on a single device (benchmark path)."""
+    n, d = data.shape
+    assert n % grid.nu == 0
+    data_n = data.reshape(grid.nu, n // grid.nu, d)
+
+    def node_build(data_local):
+        return jax.vmap(
+            lambda c: cell_build(root_key, data_local, c, cfg, grid)
+        )(jnp.arange(grid.p, dtype=jnp.int32))
+
+    return jax.lax.map(node_build, data_n)  # leading dims (nu, p)
+
+
+def simulate_query(
+    index,
+    data,
+    queries,
+    cfg: slsh.SLSHConfig,
+    grid: Grid,
+    drop_mask: jax.Array | None = None,
+):
+    """vmap-over-cells query + host-side reduction. Same math as dslsh_query."""
+    n, d = data.shape
+    data_n = data.reshape(grid.nu, n // grid.nu, d)
+    if drop_mask is None:
+        drop_mask = jnp.zeros((grid.nu,), bool)
+
+    def node_query(args):
+        node_id, data_local, index_node = args
+        res = jax.lax.map(
+            lambda ix: cell_query(
+                ix, data_local, node_id * (n // grid.nu), queries, cfg, grid
+            ),
+            index_node,
+        )  # stacked over p
+        return res
+
+    res = jax.lax.map(
+        node_query,
+        (jnp.arange(grid.nu, dtype=jnp.int32), data_n, index),
+    )  # (nu, p, ...)
+    kd = jnp.where(drop_mask[:, None, None, None], jnp.inf, res.knn_dist)
+    ki = jnp.where(drop_mask[:, None, None, None], -1, res.knn_idx)
+    q = queries.shape[0]
+    kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
+    ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
+    fd, fi = jax.vmap(lambda a, b: topk.masked_topk_smallest(a, b, cfg.k))(kd, ki)
+    return fd, fi, res.comparisons  # comparisons: (nu, p, Q)
+
+
+# ----------------------------------------------------------------- PKNN
+
+
+def pknn_query(
+    data: jax.Array, queries: jax.Array, k: int, grid: Grid
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Data-parallel exhaustive l1 K-NN baseline (paper's PKNN).
+
+    Every processor scans n/(p*nu) points; comparisons are exactly that.
+    Single-device evaluation (exhaustive search is shard-agnostic).
+    """
+    from repro.core import pknn as _p
+
+    kd, ki = _p.knn_batch(data, queries, k)
+    comps = jnp.full(
+        (grid.nu, grid.p, queries.shape[0]), data.shape[0] // grid.cells, jnp.int32
+    )
+    return kd, ki, comps

@@ -1,0 +1,37 @@
+"""Exhaustive K-NN (the paper's PKNN baseline, single-shard form).
+
+The distributed data-parallel version lives in ``core.distributed``; this
+module is the local scan each processor performs over its n/(p*nu) slice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk
+
+
+def knn_exhaustive(
+    data: jax.Array, q: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Exact l1 K-NN of one query over ``data``; returns (k,) dists & idx."""
+    dists = topk.l1_distances(q, data)
+    kd, ki = topk.masked_topk_smallest(
+        dists, jnp.arange(data.shape[0], dtype=jnp.int32), k
+    )
+    return kd, ki
+
+
+def knn_batch(
+    data: jax.Array, queries: jax.Array, k: int, chunk: int = 64
+) -> tuple[jax.Array, jax.Array]:
+    nq = queries.shape[0]
+    chunk = min(chunk, nq)
+    n_chunks = (nq + chunk - 1) // chunk
+    pad = n_chunks * chunk - nq
+    qp = jnp.pad(queries, ((0, pad), (0, 0))).reshape(n_chunks, chunk, -1)
+    kd, ki = jax.lax.map(
+        lambda qs: jax.vmap(lambda q: knn_exhaustive(data, q, k))(qs), qp
+    )
+    flat = lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:])[:nq]
+    return flat(kd), flat(ki)

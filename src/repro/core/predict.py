@@ -1,0 +1,44 @@
+"""Prediction layer: weighted K-NN voting + Matthews correlation coefficient.
+
+The paper predicts AHE with weighted voting over the K=10 nearest neighbours
+and evaluates with MCC (robust under the ~96-98% class imbalance, Table 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_vote(
+    labels: jax.Array, knn_idx: jax.Array, knn_dist: jax.Array
+) -> jax.Array:
+    """Distance-weighted binary vote. labels: (n,) {0,1}; returns () {0,1}."""
+    valid = knn_idx >= 0
+    w = jnp.where(valid, 1.0 / (knn_dist + 1e-6), 0.0)
+    y = labels[jnp.clip(knn_idx, 0, labels.shape[0] - 1)].astype(jnp.float32)
+    score = jnp.sum(w * y) / jnp.maximum(jnp.sum(w), 1e-9)
+    return (score >= 0.5).astype(jnp.int32)
+
+
+def predict_batch(
+    labels: jax.Array, knn_idx: jax.Array, knn_dist: jax.Array
+) -> jax.Array:
+    return jax.vmap(lambda i, d: weighted_vote(labels, i, d))(knn_idx, knn_dist)
+
+
+def confusion(pred: jax.Array, true: jax.Array) -> tuple[jax.Array, ...]:
+    pred = pred.astype(jnp.int32)
+    true = true.astype(jnp.int32)
+    tp = jnp.sum((pred == 1) & (true == 1))
+    tn = jnp.sum((pred == 0) & (true == 0))
+    fp = jnp.sum((pred == 1) & (true == 0))
+    fn = jnp.sum((pred == 0) & (true == 1))
+    return tp, tn, fp, fn
+
+
+def mcc(pred: jax.Array, true: jax.Array) -> jax.Array:
+    """Matthews correlation coefficient in [-1, 1]."""
+    tp, tn, fp, fn = (x.astype(jnp.float32) for x in confusion(pred, true))
+    num = tp * tn - fp * fn
+    den = jnp.sqrt((tp + fp) * (tp + fn)) * jnp.sqrt((tn + fp) * (tn + fn))
+    return jnp.where(den > 0, num / den, 0.0).astype(jnp.float32)

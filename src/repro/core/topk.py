@@ -1,0 +1,44 @@
+"""Masked top-K-smallest utilities and K-NN merge (the paper's Reducer op)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def masked_topk_smallest(
+    dists: jax.Array, idx: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k smallest distances with -1/inf padding.
+
+    dists: (C,) float, inf where invalid. idx: (C,) int32, -1 where invalid.
+    Returns (k,) dists ascending and matching idx.
+    """
+    if dists.shape[0] < k:  # pad so top_k is well-defined
+        pad = k - dists.shape[0]
+        dists = jnp.concatenate([dists, jnp.full((pad,), INF, dists.dtype)])
+        idx = jnp.concatenate([idx, jnp.full((pad,), -1, idx.dtype)])
+    neg = -dists
+    top_neg, pos = jax.lax.top_k(neg, k)
+    return -top_neg, jnp.where(jnp.isfinite(top_neg), idx[pos], -1)
+
+
+def merge_topk(
+    dists_a: jax.Array, idx_a: jax.Array, dists_b: jax.Array, idx_b: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Merge two K-NN partial results (the Reducer's reduction operation)."""
+    d = jnp.concatenate([dists_a, dists_b])
+    i = jnp.concatenate([idx_a, idx_b])
+    return masked_topk_smallest(d, i, k)
+
+
+def l1_distances(q: jax.Array, pts: jax.Array) -> jax.Array:
+    """q: (d,), pts: (C, d) -> (C,) l1 distances."""
+    return jnp.sum(jnp.abs(pts - q[None, :]), axis=-1)
+
+
+def cosine_distances(q: jax.Array, pts: jax.Array) -> jax.Array:
+    qn = q / (jnp.linalg.norm(q) + 1e-9)
+    pn = pts / (jnp.linalg.norm(pts, axis=-1, keepdims=True) + 1e-9)
+    return 1.0 - pn @ qn

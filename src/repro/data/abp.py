@@ -1,0 +1,101 @@
+"""Synthetic arterial-blood-pressure (MAP) waveform generation.
+
+MIMIC-III requires credentialed PhysioNet access and is unavailable offline,
+so we synthesize per-beat Mean Arterial Pressure series with the statistical
+shape the paper's pipeline expects (DESIGN.md §7):
+
+* a slowly drifting patient baseline (healthy MAP ~70-95 mmHg),
+* beat-to-beat noise + respiratory oscillation,
+* sparse hypotensive episodes: smooth excursions below 60 mmHg lasting
+  minutes-to-hours (these generate the positive AHE labels),
+* occasional invalid beats (artifacts) which the windowing layer drops,
+  mirroring the beatDB validity checks [15].
+
+The generator is pure JAX and deterministic in its PRNG key.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ABPConfig:
+    n_beats: int = 200_000  # beats per record (~1 beat/second)
+    beats_per_min: int = 60
+    baseline_lo: float = 68.0
+    baseline_hi: float = 95.0
+    drift_scale: float = 4.0  # mmHg, slow random-walk amplitude
+    noise_scale: float = 2.0  # mmHg, per-beat noise
+    resp_amp: float = 1.5  # respiratory oscillation amplitude
+    resp_period: float = 17.0  # beats
+    episode_rate: float = 1.0 / 40_000.0  # episode onsets per beat
+    episode_depth_lo: float = 12.0  # mmHg below 60 at trough
+    episode_depth_hi: float = 30.0
+    episode_len_lo: int = 1_200  # beats (~20 min)
+    episode_len_hi: int = 5_400  # beats (~90 min)
+    artifact_rate: float = 0.01
+
+
+def synth_record(key: jax.Array, cfg: ABPConfig) -> tuple[jax.Array, jax.Array]:
+    """One patient record -> (map_mmHg (n_beats,), valid (n_beats,) bool)."""
+    k_base, k_drift, k_noise, k_on, k_depth, k_len, k_art, k_phase = jax.random.split(key, 8)
+    n = cfg.n_beats
+    t = jnp.arange(n, dtype=jnp.float32)
+
+    base = jax.random.uniform(k_base, (), jnp.float32, cfg.baseline_lo, cfg.baseline_hi)
+    # slow drift: smoothed random walk (EMA of white noise)
+    steps = jax.random.normal(k_drift, (n,), jnp.float32)
+    drift = jax.lax.associative_scan(
+        lambda a, b: a * 0.999 + b, steps * cfg.drift_scale * 0.045
+    )
+    resp = cfg.resp_amp * jnp.sin(
+        2 * jnp.pi * t / cfg.resp_period
+        + jax.random.uniform(k_phase, (), jnp.float32, 0, 2 * jnp.pi)
+    )
+    noise = cfg.noise_scale * jax.random.normal(k_noise, (n,), jnp.float32)
+
+    # hypotensive episodes: onset process + smooth (raised-cosine) excursions
+    onset = jax.random.bernoulli(k_on, cfg.episode_rate, (n,))
+    depth = jax.random.uniform(
+        k_depth, (n,), jnp.float32, cfg.episode_depth_lo, cfg.episode_depth_hi
+    )
+    length = jax.random.randint(
+        k_len, (n,), cfg.episode_len_lo, cfg.episode_len_hi
+    ).astype(jnp.float32)
+
+    # Build the episode envelope with a scan: carry = (remaining, total, depth)
+    def step(carry, x):
+        rem, tot, dep = carry
+        on, d_i, l_i = x
+        start = on & (rem <= 0)
+        rem = jnp.where(start, l_i, rem)
+        tot = jnp.where(start, l_i, tot)
+        dep = jnp.where(start, d_i, dep)
+        # raised-cosine dip over the episode
+        phase = jnp.where(tot > 0, 1.0 - rem / jnp.maximum(tot, 1.0), 0.0)
+        dip = jnp.where(rem > 0, dep * jnp.sin(jnp.pi * phase) ** 2, 0.0)
+        rem = rem - 1.0
+        return (rem, tot, dep), dip
+
+    _, dip = jax.lax.scan(
+        step,
+        (jnp.float32(0), jnp.float32(0), jnp.float32(0)),
+        (onset, depth, length),
+    )
+
+    # target trough = 60 - (depth - 12) => dips reach well below the AHE line
+    mapv = base + drift + resp + noise - dip * (base - 45.0) / jnp.maximum(base, 1.0)
+    mapv = jnp.clip(mapv, 20.0, 180.0)
+    valid = ~jax.random.bernoulli(k_art, cfg.artifact_rate, (n,))
+    return mapv, valid
+
+
+def synth_dataset_beats(
+    key: jax.Array, n_records: int, cfg: ABPConfig
+) -> tuple[jax.Array, jax.Array]:
+    """(n_records, n_beats) MAP values + validity masks."""
+    keys = jax.random.split(key, n_records)
+    return jax.lax.map(lambda k: synth_record(k, cfg), keys)

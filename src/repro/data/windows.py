@@ -1,0 +1,122 @@
+"""beatDB-style rolling-window dataset construction (paper §4, Table 1).
+
+A *point* is the d=30 vector of per-subwindow mean MAP over valid beats in a
+lag window of length ``l``. The label is positive iff the following condition
+window of length ``c`` is an AHE: >= 90% of its (valid) per-beat MAP values
+are below 60 mmHg. The rolling step is 10% of (l+c) after a negative window
+and the full (l+c) after a positive one [15].
+
+This layer is host-side numpy (it is the offline dataset builder); prefix
+sums make each rolling step O(1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+AHE_THRESHOLD_MMHG = 60.0
+AHE_FRACTION = 0.90
+D_SUBWINDOWS = 30
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowConfig:
+    name: str
+    lag_beats: int  # l, in beats (1 beat ~ 1 second)
+    cond_beats: int  # c
+    d: int = D_SUBWINDOWS
+    stride_frac: float = 0.10
+
+
+# The paper's two datasets (Table 1). 1 beat/second.
+AHE_301_30C = WindowConfig("AHE-301-30c", lag_beats=30 * 60, cond_beats=30 * 60)
+AHE_51_5C = WindowConfig("AHE-51-5c", lag_beats=5 * 60, cond_beats=5 * 60)
+
+
+def _prefix(x: np.ndarray) -> np.ndarray:
+    out = np.zeros(x.shape[0] + 1, np.float64)
+    np.cumsum(x, out=out[1:])
+    return out
+
+
+def windows_from_record(
+    mapv: np.ndarray, valid: np.ndarray, cfg: WindowConfig
+) -> tuple[np.ndarray, np.ndarray]:
+    """One record -> (points (N, d) f32, labels (N,) i8)."""
+    n = mapv.shape[0]
+    l, c = cfg.lag_beats, cfg.cond_beats
+    total = l + c
+    stride = max(int(cfg.stride_frac * total), 1)
+
+    cs_val = _prefix(valid.astype(np.float64))
+    cs_map = _prefix(np.where(valid, mapv, 0.0).astype(np.float64))
+    cs_below = _prefix((valid & (mapv < AHE_THRESHOLD_MMHG)).astype(np.float64))
+
+    def frac_below(a: int, b: int) -> float:
+        nv = cs_val[b] - cs_val[a]
+        return (cs_below[b] - cs_below[a]) / nv if nv > 0 else 0.0
+
+    starts, labels = [], []
+    i = 0
+    while i + total <= n:
+        pos = frac_below(i + l, i + total) >= AHE_FRACTION
+        starts.append(i)
+        labels.append(pos)
+        i += total if pos else stride
+
+    if not starts:
+        return np.zeros((0, cfg.d), np.float32), np.zeros((0,), np.int8)
+
+    starts_a = np.asarray(starts, np.int64)
+    # subwindow edges: d+1 boundaries across the lag window
+    edges = np.linspace(0, l, cfg.d + 1).astype(np.int64)
+    a = starts_a[:, None] + edges[None, :-1]
+    b = starts_a[:, None] + edges[None, 1:]
+    nv = cs_val[b] - cs_val[a]
+    sm = cs_map[b] - cs_map[a]
+    feats = np.divide(sm, nv, out=np.zeros_like(sm), where=nv > 0)
+    # empty subwindows fall back to the window mean (beatDB gap handling)
+    row_nv = nv.sum(axis=1)
+    row_mean = np.divide(
+        sm.sum(axis=1), row_nv, out=np.full_like(row_nv, 80.0), where=row_nv > 0
+    )
+    feats = np.where(nv > 0, feats, row_mean[:, None])
+    return feats.astype(np.float32), np.asarray(labels, np.int8)
+
+
+def build_dataset(
+    records_map: np.ndarray, records_valid: np.ndarray, cfg: WindowConfig
+) -> dict:
+    """Stack windows from all records. Returns dict(points, labels, meta)."""
+    pts, labs = [], []
+    for r in range(records_map.shape[0]):
+        p, y = windows_from_record(records_map[r], records_valid[r], cfg)
+        if p.shape[0]:
+            pts.append(p)
+            labs.append(y)
+    points = np.concatenate(pts, axis=0) if pts else np.zeros((0, cfg.d), np.float32)
+    labels = np.concatenate(labs, axis=0) if labs else np.zeros((0,), np.int8)
+    frac_neg = float((labels == 0).mean()) if labels.size else 1.0
+    return {
+        "name": cfg.name,
+        "points": points,
+        "labels": labels,
+        "pct_no_ahe": 100.0 * frac_neg,
+    }
+
+
+def train_test_split(
+    dataset: dict, n_test: int, seed: int = 0
+) -> tuple[dict, np.ndarray, np.ndarray]:
+    """Out-of-sample query split (paper uses 2000 test queries)."""
+    rng = np.random.default_rng(seed)
+    n = dataset["points"].shape[0]
+    perm = rng.permutation(n)
+    test, train = perm[:n_test], perm[n_test:]
+    train_ds = dict(
+        dataset,
+        points=dataset["points"][train],
+        labels=dataset["labels"][train],
+    )
+    return train_ds, dataset["points"][test], dataset["labels"][test]

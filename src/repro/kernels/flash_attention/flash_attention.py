@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention.
+
+Forward-only (the serving path: prefill_32k / stratified-LSH attention).
+Training uses the XLA path with remat (DESIGN.md §4).
+
+* MXU tiles: (Q_BLK, DH_PAD) @ (DH_PAD, KV_BLK) scores and (Q_BLK, KV_BLK)
+  @ (KV_BLK, DH_PAD) value accumulation.
+* Online softmax state (m, l, acc) lives in VMEM scratch and persists over
+  the KV grid dimension (fastest-varying).
+* GQA: the kv-head index map is ``h // (Hq // Hkv)`` — no KV replication in
+  HBM.
+* causal / sliding-window / kv-length masks are applied in-kernel. Fully
+  masked KV blocks still occupy grid steps; a production variant would use
+  a dynamic grid (noted in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, Q_BLK, DH)
+    k_ref,  # (1, 1, KV_BLK, DH)
+    v_ref,  # (1, 1, KV_BLK, DH)
+    o_ref,  # (1, 1, Q_BLK, DH)
+    m_scr,  # (Q_BLK, 1) f32
+    l_scr,  # (Q_BLK, 1) f32
+    acc_scr,  # (Q_BLK, DH) f32
+    *,
+    q_blk: int,
+    kv_blk: int,
+    kv_steps: int,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    kv_len: int,
+    q_offset: int,
+):
+    i_q = pl.program_id(2)
+    i_kv = pl.program_id(3)
+
+    @pl.when(i_kv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (Q, DH)
+    k = k_ref[0, 0].astype(jnp.float32)  # (K, DH)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (Q, K)
+
+    q_pos = q_offset + i_q * q_blk + jax.lax.broadcasted_iota(
+        jnp.int32, (q_blk, kv_blk), 0
+    )
+    k_pos = i_kv * kv_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 1)
+    allowed = k_pos < kv_len
+    if causal:
+        allowed &= k_pos <= q_pos
+    if window is not None:
+        allowed &= k_pos > q_pos - window
+    s = jnp.where(allowed, s, NEG_INF)
+
+    m_old = m_scr[...]  # (Q, 1)
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (Q, K); rows with all NEG_INF give ~0
+    corr = jnp.exp(m_old - m_new)  # (Q, 1)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(i_kv == kv_steps - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "kv_len", "q_offset", "q_blk", "kv_blk", "scale",
+        "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Hq, Sq, DH_PAD)
+    k: jax.Array,  # (B, Hkv, Skv, DH_PAD)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: int | None = None,
+    q_offset: int = 0,
+    q_blk: int = 128,
+    kv_blk: int = 128,
+    scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0 and sq % q_blk == 0 and skv % kv_blk == 0
+    group = hq // hkv
+    kv_steps = skv // kv_blk
+    kv_len = skv if kv_len is None else kv_len
+    kernel = functools.partial(
+        _flash_kernel,
+        q_blk=q_blk, kv_blk=kv_blk, kv_steps=kv_steps,
+        scale=scale if scale is not None else 1.0 / (dh ** 0.5),
+        causal=causal, window=window, kv_len=kv_len, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, sq // q_blk, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, dh), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, kv_blk, dh), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, kv_blk, dh), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, q_blk, dh), lambda bi, hi, qi, ki: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,50 @@
+"""jit'd public wrapper for flash attention (padding + dtype handling)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "q_blk", "kv_blk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, dh)
+    k: jax.Array,  # (B, Hkv, Skv, dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_blk: int = 128,
+    kv_blk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked attention; pads Sq/Skv/dh to tile multiples and unpads."""
+    b, hq, sq, dh = q.shape
+    skv = k.shape[2]
+    q_blk = min(q_blk, max(8, 1 << (sq - 1).bit_length()))
+    kv_blk = min(kv_blk, max(8, 1 << (skv - 1).bit_length()))
+    qp = _pad_to(_pad_to(q, 2, q_blk), 3, 128)
+    kp = _pad_to(_pad_to(k, 2, kv_blk), 3, 128)
+    vp = _pad_to(_pad_to(v, 2, kv_blk), 3, 128)
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        causal=causal, window=window, kv_len=skv, q_offset=q_offset,
+        q_blk=q_blk, kv_blk=kv_blk, scale=1.0 / (dh ** 0.5), interpret=interpret,
+    )
+    return out[:, :, :sq, :dh]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash_attention kernel (GQA + causal + window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, dh)
+    k: jax.Array,  # (B, Hkv, Skv, dh)
+    v: jax.Array,  # (B, Hkv, Skv, dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Exact softmax attention. ``q_offset`` places q positions at
+    [q_offset, q_offset+Sq) within the kv sequence (decode: Sq=1)."""
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(dh))
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    allowed = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        allowed &= k_pos <= q_pos
+    if window is not None:
+        allowed &= k_pos > q_pos - window
+    if kv_len is not None:
+        allowed &= k_pos < kv_len
+    s = jnp.where(allowed[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> zeros
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)

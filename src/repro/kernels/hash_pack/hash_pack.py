@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused LSH signature computation.
+
+``bits = (x @ proj + bias) > 0`` packed into uint32 words, so m-bit
+signatures never hit HBM as full float rows. The projection runs on the MXU
+((T_BLK, D_PAD) @ (D_PAD, M_PAD)); sign extraction and 32-way packing are
+VPU ops on the resident tile. Serves both LSH families (DESIGN.md §4):
+sign random projection (cosine) directly, and l1 bit-sampling via a one-hot
+selector matrix with bias = -thresholds.
+
+Grid: (T_blocks,). proj/bias are small (d, m <= a few hundred) and stay
+VMEM-resident across the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hash_pack_kernel(x_ref, p_ref, b_ref, o_ref, *, m: int):
+    x = x_ref[...]  # (T_BLK, D_PAD)
+    p = p_ref[...]  # (D_PAD, M_PAD)
+    bias = b_ref[...]  # (1, M_PAD)
+    s = jnp.dot(x, p, preferred_element_type=jnp.float32) + bias  # MXU
+    t_blk, m_pad = s.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (t_blk, m_pad), 1)
+    bits = (s > 0.0) & (col < m)  # zero out padded bit positions
+    w = m_pad // 32
+    b32 = bits.reshape(t_blk, w, 32).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (t_blk, w, 32), 2)
+    o_ref[...] = jnp.sum(b32 << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "t_blk", "interpret"))
+def hash_pack_pallas(
+    x: jax.Array,  # (T, D_PAD) f32, T % t_blk == 0
+    proj: jax.Array,  # (D_PAD, M_PAD) f32, M_PAD % 32 == 0
+    bias: jax.Array,  # (1, M_PAD) f32
+    m: int,
+    *,
+    t_blk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    t, d_pad = x.shape
+    m_pad = proj.shape[1]
+    assert t % t_blk == 0 and m_pad % 32 == 0
+    w = m_pad // 32
+    return pl.pallas_call(
+        functools.partial(_hash_pack_kernel, m=m),
+        grid=(t // t_blk,),
+        in_specs=[
+            pl.BlockSpec((t_blk, d_pad), lambda ti: (ti, 0)),
+            pl.BlockSpec((d_pad, m_pad), lambda ti: (0, 0)),
+            pl.BlockSpec((1, m_pad), lambda ti: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_blk, w), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, w), jnp.uint32),
+        interpret=interpret,
+    )(x, proj, bias)

@@ -1,0 +1,77 @@
+"""jit'd wrappers: signature packing for both LSH families via one kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.kernels.hash_pack.hash_pack import hash_pack_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk", "interpret"))
+def signrp_pack(
+    x: jax.Array, proj: jax.Array, *, t_blk: int = 256, interpret: bool = True
+) -> jax.Array:
+    """Sign-random-projection signatures. x: (T, d); proj: (d, m) -> (T, W)."""
+    t, d = x.shape
+    m = proj.shape[1]
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 1, 128), 0, t_blk)
+    pp = _pad_to(_pad_to(proj.astype(jnp.float32), 0, 128), 1, 128)
+    # >= 0 semantics of the family == (s + eps > 0) at s exactly 0; use > 0
+    # with +0 bias (measure-zero difference, validated against ref)
+    bias = jnp.zeros((1, pp.shape[1]), jnp.float32)
+    out = hash_pack_pallas(xp, pp, bias, m, t_blk=t_blk, interpret=interpret)
+    return out[:t, : (m + 31) // 32]
+
+
+@functools.partial(jax.jit, static_argnames=("d", "t_blk", "interpret"))
+def bitsample_pack(
+    x: jax.Array,
+    dims: jax.Array,  # (m,) int32
+    thrs: jax.Array,  # (m,) f32
+    d: int,
+    *,
+    t_blk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """l1 bit-sampling signatures via one-hot selector (bit = x[dim] > thr)."""
+    m = dims.shape[0]
+    onehot = jax.nn.one_hot(dims, d, dtype=jnp.float32).T  # (d, m)
+    t = x.shape[0]
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 1, 128), 0, t_blk)
+    pp = _pad_to(_pad_to(onehot, 0, 128), 1, 128)
+    bias = _pad_to((-thrs.astype(jnp.float32))[None, :], 1, 128)
+    out = hash_pack_pallas(xp, pp, bias, m, t_blk=t_blk, interpret=interpret)
+    return out[:t, : (m + 31) // 32]
+
+
+def hash_points_kernel(
+    params, x: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """Drop-in replacement for ``hashing.hash_points`` using the kernel.
+
+    Returns (L, n) uint32 bucket keys (same semantics incl. the FNV mix).
+    """
+    if isinstance(params, hashing.BitSampleParams):
+        words = jax.vmap(
+            lambda dims, thrs: bitsample_pack(
+                x, dims, thrs, x.shape[1], interpret=interpret
+            )
+        )(params.dims, params.thrs)  # (L, n, W)
+    else:
+        words = jax.vmap(
+            lambda p: signrp_pack(x, p, interpret=interpret)
+        )(params.proj)  # (L, n, W)
+    keys = hashing.mix32(words, params.salts[:, None])
+    return keys

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the hash_pack kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hash_pack_ref(x: jax.Array, proj: jax.Array, bias: jax.Array) -> jax.Array:
+    """Fused projection-sign-pack: bits = (x @ proj + bias) > 0, packed u32.
+
+    x: (T, d); proj: (d, m); bias: (m,). Returns (T, ceil(m/32)) uint32.
+    Covers both LSH families: sign random projection (bias=0) and l1
+    bit-sampling (proj = one-hot dim selectors, bias = -thresholds).
+    """
+    s = x @ proj + bias[None, :]
+    bits = s > 0.0
+    m = bits.shape[-1]
+    n_words = (m + 31) // 32
+    pad = n_words * 32 - m
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    b = bits.reshape(bits.shape[0], n_words, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)

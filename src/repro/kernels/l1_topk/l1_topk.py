@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: blocked masked L1 distance + streaming top-k.
+
+This is the paper's measured bottleneck ("the linear search over the
+candidates"): for each query, scan its gathered candidate vectors and keep
+the K nearest under l1. The TPU formulation (DESIGN.md §4):
+
+* candidates stream through VMEM in (C_BLK, D_PAD) tiles (D_PAD = feature
+  dim padded to the 128-lane VPU width; zero padding is l1-neutral),
+* distances are VPU reductions (no MXU — l1 is not a contraction),
+* a (B_BLK, K) running-best set lives in the *output* refs and is folded
+  block-by-block with K rounds of min/argmin selection (K is small, 10),
+  so full distance rows never round-trip to HBM.
+
+Grid: (B_blocks, C_blocks); C is the fastest-varying dimension so the
+running best for one query block persists across its candidate stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _l1_topk_kernel(
+    q_ref,  # (B_BLK, D_PAD) f32
+    c_ref,  # (B_BLK, C_BLK, D_PAD) f32
+    m_ref,  # (B_BLK, C_BLK) bool mask
+    dist_ref,  # out (B_BLK, K) f32 running best (ascending not guaranteed)
+    pos_ref,  # out (B_BLK, K) i32 global candidate positions
+    *,
+    k: int,
+    c_blk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        dist_ref[...] = jnp.full_like(dist_ref, jnp.inf)
+        pos_ref[...] = jnp.full_like(pos_ref, -1)
+
+    q = q_ref[...]  # (B, D)
+    c = c_ref[...]  # (B, C, D)
+    valid = m_ref[...]  # (B, C)
+
+    d = jnp.sum(jnp.abs(c - q[:, None, :]), axis=-1)  # (B, C) VPU reduce
+    d = jnp.where(valid, d, jnp.inf)
+
+    base = ci * c_blk
+    b = d.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (b, c_blk), 1)
+
+    best_d = dist_ref[...]
+    best_p = pos_ref[...]
+    krange = jax.lax.broadcasted_iota(jnp.int32, (b, k), 1)
+
+    # K selection rounds: pull the block minimum, displace the running worst.
+    for _ in range(k):
+        blk_min = jnp.min(d, axis=1)  # (B,)
+        blk_arg = jnp.argmin(d, axis=1).astype(jnp.int32)  # (B,)
+        run_max = jnp.max(best_d, axis=1)  # (B,)
+        run_arg = jnp.argmax(best_d, axis=1).astype(jnp.int32)
+        better = blk_min < run_max  # (B,)
+
+        sel_k = (krange == run_arg[:, None]) & better[:, None]
+        best_d = jnp.where(sel_k, blk_min[:, None], best_d)
+        best_p = jnp.where(sel_k, base + blk_arg[:, None], best_p)
+
+        sel_c = (col == blk_arg[:, None]) & better[:, None]
+        d = jnp.where(sel_c, jnp.inf, d)
+
+    dist_ref[...] = best_d
+    pos_ref[...] = best_p
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "b_blk", "c_blk", "interpret")
+)
+def l1_topk_pallas(
+    q: jax.Array,  # (B, D_PAD) f32
+    cands: jax.Array,  # (B, C, D_PAD) f32
+    mask: jax.Array,  # (B, C) bool
+    *,
+    k: int,
+    b_blk: int = 8,
+    c_blk: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    b, c, d_pad = cands.shape
+    assert b % b_blk == 0 and c % c_blk == 0, (b, c, b_blk, c_blk)
+    grid = (b // b_blk, c // c_blk)
+    kernel = functools.partial(_l1_topk_kernel, k=k, c_blk=c_blk)
+    dist, pos = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_blk, d_pad), lambda bi, ci: (bi, 0)),
+            pl.BlockSpec((b_blk, c_blk, d_pad), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((b_blk, c_blk), lambda bi, ci: (bi, ci)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_blk, k), lambda bi, ci: (bi, 0)),
+            pl.BlockSpec((b_blk, k), lambda bi, ci: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, cands, mask)
+    return dist, pos

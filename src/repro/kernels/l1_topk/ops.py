@@ -1,0 +1,62 @@
+"""jit'd public wrapper for the l1_topk kernel (padding + sorted output)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.l1_topk.l1_topk import l1_topk_pallas
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "b_blk", "c_blk", "d_pad", "interpret"))
+def l1_topk(
+    q: jax.Array,  # (B, d)
+    cands: jax.Array,  # (B, C, d)
+    mask: jax.Array,  # (B, C) bool
+    *,
+    k: int,
+    b_blk: int = 8,
+    c_blk: int = 512,
+    d_pad: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Masked L1 top-k via the Pallas kernel; output sorted ascending.
+
+    Returns (dists (B, k), positions-into-C (B, k)); inf/-1 where fewer than
+    k valid candidates exist.
+    """
+    b, c0, d = cands.shape
+    q = _pad_axis(q.astype(jnp.float32), 1, d_pad)
+    cands = _pad_axis(cands.astype(jnp.float32), 2, d_pad)
+    # feature dim may exceed d_pad; then pad to the next multiple (kernel
+    # block covers the whole padded feature dim)
+    dp = q.shape[1]
+    q = _pad_axis(q, 0, b_blk)
+    cands = _pad_axis(cands, 0, b_blk)
+    cands = _pad_axis(cands, 1, c_blk)
+    mask = _pad_axis(mask, 0, b_blk, value=False)
+    mask = _pad_axis(mask, 1, c_blk, value=False)
+    c_blk_eff = min(c_blk, cands.shape[1])
+
+    dist, pos = l1_topk_pallas(
+        q, cands, mask, k=k, b_blk=min(b_blk, q.shape[0]), c_blk=c_blk_eff,
+        interpret=interpret,
+    )
+    dist, pos = dist[:b], pos[:b]
+    # kernel keeps an unsorted running set; sort ascending for the API
+    order = jnp.argsort(dist, axis=1)
+    dist = jnp.take_along_axis(dist, order, axis=1)
+    pos = jnp.take_along_axis(pos, order, axis=1)
+    pos = jnp.where(pos < c0, pos, -1)  # padded slots can never win, but be safe
+    return dist, jnp.where(jnp.isfinite(dist), pos, -1)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the l1_topk kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l1_topk_ref(
+    q: jax.Array, cands: jax.Array, mask: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Masked L1 distances + top-k smallest.
+
+    q: (B, d) queries; cands: (B, C, d) gathered candidates per query;
+    mask: (B, C) bool (False = padded slot). Returns dists (B, k) ascending
+    (inf where fewer than k valid) and positions (B, k) into C (-1 pad).
+    """
+    dists = jnp.sum(jnp.abs(cands - q[:, None, :]), axis=-1)
+    dists = jnp.where(mask, dists, jnp.inf)
+    if dists.shape[1] < k:  # fewer candidates than k: pad with inf slots
+        pad = k - dists.shape[1]
+        dists = jnp.pad(dists, ((0, 0), (0, pad)), constant_values=jnp.inf)
+    neg, pos = jax.lax.top_k(-dists, k)
+    return -neg, jnp.where(jnp.isfinite(neg), pos, -1)

@@ -1,0 +1,60 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> --smoke``.
+
+Latency-first batched decoding (the paper's deployment kind) with optional
+SLSH-kNN-LM augmentation over a hidden-state datastore.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.lm_data import TokenStream
+from repro.models import api
+from repro.serve import engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving path")
+    if not args.smoke:
+        raise SystemExit("FULL configs need real accelerators; use --smoke on CPU")
+
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = TokenStream(cfg.vocab, seed=1)
+    reqs = [
+        engine.Request(
+            rid=i, tokens=np.asarray(stream.batch(1, args.prompt_len)[0]),
+            max_new=args.max_new,
+        )
+        for i in range(args.requests)
+    ]
+    eng = engine.ServeEngine(
+        model, params, max_batch=args.requests,
+        max_len=args.prompt_len + args.max_new + 8,
+    )
+    t0 = time.time()
+    done = eng.serve(reqs)
+    for r in done:
+        print(f"req {r.rid}: {list(r.tokens[-4:])} -> {r.result}  "
+              f"({r.latency_s*1e3:.0f} ms)")
+    print(f"served {len(done)} requests in {time.time()-t0:.2f}s "
+          f"(arch={cfg.name}, params={model.n_params/1e6:.1f}M)")
+
+
+if __name__ == "__main__":
+    main()

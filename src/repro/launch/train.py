@@ -1,0 +1,97 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On the CPU container only ``--smoke`` configs are runnable; the FULL configs
+are exercised via the dry-run (launch/dryrun.py). On a real TPU slice this
+driver is the entry point: it builds the production mesh, shards params/opt
+state per the logical rules, restores the latest checkpoint if present, and
+runs the microbatched train step with periodic (async) checkpointing.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import store
+from repro.data.lm_data import TokenStream
+from repro.models import api
+from repro.optim import adamw
+from repro.sharding import ctx
+from repro.train import loop as tl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", choices=["none", "single-pod", "multi-pod"], default="none")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    if not args.smoke and args.mesh == "none":
+        raise SystemExit("FULL configs need a mesh (and real accelerators); "
+                         "use --smoke on CPU or --mesh single-pod on a slice.")
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi-pod")
+
+    with ctx.use_mesh(mesh):
+        model = api.build_model(cfg)
+        print(f"arch={cfg.name} params={model.n_params/1e6:.1f}M "
+              f"family={cfg.family} mesh={args.mesh}")
+        opt_cfg = adamw.AdamWConfig(
+            peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+            total_steps=args.steps, state_bits=cfg.opt_state_bits,
+        )
+        params = model.init(jax.random.PRNGKey(0))
+        state = adamw.init(params, opt_cfg)
+        start = 0
+        if args.ckpt_dir:
+            restored, at = store.restore_latest(
+                {"params": params, "opt": state}, args.ckpt_dir
+            )
+            if restored is not None:
+                params, state, start = restored["params"], restored["opt"], at
+                print(f"resumed at step {at}")
+        step_fn = jax.jit(tl.make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+        stream = TokenStream(cfg.vocab, seed=0)
+        t0 = time.time()
+        m = {}
+        for i, b in enumerate(
+            stream.batches(args.steps - start, args.batch, args.seq), start=start
+        ):
+            batch = {"tokens": jnp.asarray(b["tokens"])}
+            if cfg.frontend == "vision":
+                batch["patch_embeds"] = jnp.zeros(
+                    (args.batch, cfg.frontend_len, cfg.frontend_dim)
+                )
+            elif cfg.frontend == "audio":
+                key = jax.random.PRNGKey(i)
+                batch = {
+                    "frames": jax.random.normal(key, (args.batch, args.seq, cfg.frontend_dim)),
+                    "frame_mask": jax.random.bernoulli(key, 0.3, (args.batch, args.seq)),
+                    "targets": jax.random.randint(key, (args.batch, args.seq), 0, cfg.vocab),
+                }
+            params, state, m = step_fn(params, state, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.3f} ({time.time()-t0:.1f}s)")
+            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                store.save({"params": params, "opt": state}, i + 1, args.ckpt_dir,
+                           blocking=False)
+        print("final loss:", float(m["loss"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Model registry + the (architecture x input-shape) cell contract.
+
+``build_model(cfg)`` returns a uniform handle: param defs/init/specs,
+``loss_fn`` (train), ``prefill``/``decode_step`` (serve), cache builders,
+and ``input_specs(cell)`` producing ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.models import params as PM
+from repro.sharding import ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    mlp: str = "swiglu"  # swiglu | relu2 | gelu
+    qk_norm: bool = False
+    causal: bool = True  # False => encoder-only (no decode)
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    window: int | None = None
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    moe_impl: str = "gather"  # gather (psum-combine) | a2a (all-to-all dispatch)
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    conv_kernel: int = 4
+    global_layers: tuple = ()
+    meta_tokens: int = 0
+    # modality frontends (stubs per assignment: precomputed embeddings)
+    frontend: str | None = None  # vision | audio
+    frontend_dim: int = 0
+    frontend_len: int = 0  # patches for vision
+    # perf knobs
+    q_chunk: int = 512
+    loss_chunk: int = 512
+    remat: str = "dots"  # none | dots | full
+    microbatches: int = 1  # gradient-accumulation splits of the global batch
+    param_dtype: str = "float32"  # canonical parameter dtype (bfloat16 for XXL)
+    opt_state_bits: int = 32  # 8 => blockwise-int8 Adam moments (XXL models)
+    grad_accum_dtype: str = "float32"  # microbatch grad accumulator dtype
+    # capability flags
+    sub_quadratic: bool = False
+
+    @property
+    def supports_decode(self) -> bool:
+        return self.causal
+
+
+# Shape cells assigned to every LM arch (seq_len, global_batch, kind)
+SHAPE_CELLS = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def cell_skip_reason(cfg: ModelConfig, cell: str) -> str | None:
+    """None if the (arch, cell) pair runs; otherwise the documented skip."""
+    c = SHAPE_CELLS[cell]
+    if c["kind"] == "decode" and not cfg.supports_decode:
+        return "encoder-only arch: no decode step"
+    if cell == "long_500k" and not cfg.sub_quadratic:
+        return "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return None
+
+
+def _family_module(cfg: ModelConfig):
+    from repro.models import dense, hymba, mamba2, moe
+
+    return {"dense": dense, "moe": moe, "ssm": mamba2, "hybrid": hymba}[cfg.family]
+
+
+def build_model(cfg: ModelConfig) -> SimpleNamespace:
+    mod = _family_module(cfg)
+    defs = mod.model_defs(cfg)
+    if cfg.param_dtype != "float32":
+        pd = jnp.dtype(cfg.param_dtype)
+        defs = jax.tree.map(
+            lambda p: p._replace(dtype=pd) if p.dtype == jnp.float32 else p,
+            defs,
+            is_leaf=lambda x: hasattr(x, "logical"),
+        )
+
+    def input_defs(cell: str) -> dict[str, Any]:
+        """Model inputs for a cell as (shape, dtype, logical axes) triples."""
+        c = SHAPE_CELLS[cell]
+        s, b = c["seq"], c["batch"]
+        if c["kind"] == "decode":
+            toks = {"tokens": ((b, 1), jnp.int32, ("batch", None))}
+            return toks
+        io: dict[str, Any] = {"tokens": ((b, s), jnp.int32, ("batch", None))}
+        if cfg.frontend == "vision":
+            io["patch_embeds"] = (
+                (b, cfg.frontend_len, cfg.frontend_dim),
+                jnp.float32,
+                ("batch", None, None),
+            )
+        elif cfg.frontend == "audio":
+            io = {
+                "frames": ((b, s, cfg.frontend_dim), jnp.float32, ("batch", None, None)),
+                "frame_mask": ((b, s), jnp.bool_, ("batch", None)),
+                "targets": ((b, s), jnp.int32, ("batch", None)),
+            }
+        return io
+
+    def input_specs(cell: str, mesh=None) -> dict[str, jax.ShapeDtypeStruct]:
+        mesh = mesh or ctx.get_mesh()
+        out = {}
+        for name, (shape, dtype, logical) in input_defs(cell).items():
+            if mesh is None:
+                out[name] = jax.ShapeDtypeStruct(shape, dtype)
+            else:
+                spec = ctx.logical_to_spec(mesh, ctx.get_rules(), logical, shape)
+                out[name] = jax.ShapeDtypeStruct(
+                    shape, dtype, sharding=NamedSharding(mesh, spec)
+                )
+        return out
+
+    def cache_structs(cell: str, mesh=None) -> Any:
+        c = SHAPE_CELLS[cell]
+        cache = jax.eval_shape(lambda: mod.init_cache(cfg, c["batch"], c["seq"]))
+        mesh = mesh or ctx.get_mesh()
+        if mesh is None:
+            return cache
+        axes = mod.cache_logical_axes(cfg)
+
+        def leafify(struct, logical):
+            spec = ctx.logical_to_spec(mesh, ctx.get_rules(), tuple(logical), struct.shape)
+            return jax.ShapeDtypeStruct(
+                struct.shape, struct.dtype, sharding=NamedSharding(mesh, spec)
+            )
+
+        return jax.tree.map(
+            leafify, cache, axes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        )
+
+    return SimpleNamespace(
+        cfg=cfg,
+        defs=defs,
+        init=lambda key: PM.init_params(defs, key),
+        param_specs=lambda: PM.param_specs(defs),
+        param_structs=lambda mesh=None: PM.param_structs(defs, mesh),
+        n_params=PM.count_params(defs),
+        loss_fn=lambda params, batch: mod.loss_fn(cfg, params, batch, cfg.remat),
+        prefill=lambda params, batch, max_len: mod.prefill(cfg, params, batch, max_len),
+        decode_step=lambda params, cache, tokens: mod.decode_step(cfg, params, cache, tokens),
+        init_cache=lambda b, s: mod.init_cache(cfg, b, s),
+        cache_structs=cache_structs,
+        cache_logical_axes=lambda: mod.cache_logical_axes(cfg),
+        input_specs=input_specs,
+        input_defs=input_defs,
+    )

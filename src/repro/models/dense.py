@@ -1,0 +1,234 @@
+"""Dense GQA transformer LM (covers nemotron/yi/qwen3/granite, the phi-3
+text backbone, the phi-3-vision prefix variant, and the hubert encoder).
+
+Pure functions over param dicts; layers are scanned (one compiled block) and
+rematerialized; activations are sequence-parallel between blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.params import PDef, stack
+from repro.sharding.ctx import constrain
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+# ------------------------------------------------------------ param defs
+def layer_defs(cfg) -> dict:
+    d, hq, hkv, dh, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+    defs = {
+        "ln1": PDef((d,), (None,), "ones"),
+        "ln2": PDef((d,), (None,), "ones"),
+        "wq": PDef((d, hq * dh), ("fsdp", "tensor")),
+        "wk": PDef((d, hkv * dh), ("fsdp", "tensor")),
+        "wv": PDef((d, hkv * dh), ("fsdp", "tensor")),
+        "wo": PDef((hq * dh, d), ("tensor", "fsdp")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = PDef((dh,), (None,), "ones")
+        defs["k_norm"] = PDef((dh,), (None,), "ones")
+    if cfg.mlp == "swiglu":
+        defs["w_gate"] = PDef((d, f), ("fsdp", "tensor"))
+    defs["w_up"] = PDef((d, f), ("fsdp", "tensor"))
+    defs["w_down"] = PDef((f, d), ("tensor", "fsdp"))
+    return defs
+
+
+def model_defs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    defs: dict[str, Any] = {
+        "embed": PDef((v, d), ("tensor", "fsdp"), "embed"),
+        "layers": stack(layer_defs(cfg), cfg.n_layers),
+        "final_norm": PDef((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = PDef((d, v), ("fsdp", "tensor"))
+    if cfg.frontend == "vision":
+        defs["patch_proj"] = PDef((cfg.frontend_dim, d), ("fsdp", "tensor"))
+    elif cfg.frontend == "audio":
+        defs["frame_proj"] = PDef((cfg.frontend_dim, d), ("fsdp", "tensor"))
+        defs["mask_embed"] = PDef((d,), (None,), "embed")
+    return defs
+
+
+# ------------------------------------------------------------ layer fwd
+def _qkv(cfg, p, h):
+    b, s, _ = h.shape
+    hc = h.astype(BF16)
+    q = (hc @ p["wq"].astype(BF16)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (hc @ p["wk"].astype(BF16)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (hc @ p["wv"].astype(BF16)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = C.rms_norm(q, p["q_norm"])
+        k = C.rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def block_train(cfg, p, x, positions):
+    """Full-sequence block (training / encoding). x: (B, S, D)."""
+    h = C.rms_norm(x, p["ln1"])
+    q, k, v = _qkv(cfg, p, h)
+    q = C.apply_rope(q, positions, cfg.rope_theta)
+    k = C.apply_rope(k, positions, cfg.rope_theta)
+    # head sharding flows from wq/wk's tensor axis; explicit constraints here
+    # fight XLA's propagation (observed involuntary remat copies)
+    attn = C.chunked_attention(
+        q, k, v, causal=cfg.causal, window=cfg.window, q_chunk=cfg.q_chunk
+    )
+    attn = attn.reshape(x.shape[0], x.shape[1], -1)
+    x = x + (attn.astype(BF16) @ p["wo"].astype(BF16)).astype(x.dtype)
+    x = constrain(x, "batch", "seq", None)
+    h2 = C.rms_norm(x, p["ln2"])
+    x = x + C.mlp_apply(p, h2, cfg.mlp).astype(x.dtype)
+    return constrain(x, "batch", "seq", None)
+
+
+def block_decode(cfg, p, x, k_cache, v_cache, cur_len):
+    """One-token block. x: (B, 1, D); caches (B, S_max, Hkv, dh)."""
+    b = x.shape[0]
+    h = C.rms_norm(x, p["ln1"])
+    q, k, v = _qkv(cfg, p, h)
+    pos = cur_len[:, None]  # (B, 1)
+    q = C.apply_rope(q, pos, cfg.rope_theta)
+    k = C.apply_rope(k, pos, cfg.rope_theta)
+    k_cache = k_cache.at[jnp.arange(b), cur_len].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[jnp.arange(b), cur_len].set(v[:, 0].astype(v_cache.dtype))
+    attn = C.decode_attention_cp(q, k_cache, v_cache, cur_len + 1)
+    attn = attn.reshape(b, 1, -1)
+    x = x + (attn.astype(BF16) @ p["wo"].astype(BF16)).astype(x.dtype)
+    h2 = C.rms_norm(x, p["ln2"])
+    x = x + C.mlp_apply(p, h2, cfg.mlp).astype(x.dtype)
+    return x, k_cache, v_cache
+
+
+# ------------------------------------------------------------- backbone
+def _embed_inputs(cfg, params, batch):
+    """Token (+ modality-prefix) embedding. Returns (x, loss_mask)."""
+    if cfg.frontend == "audio":
+        frames = batch["frames"].astype(BF16)  # (B, S, fd)
+        x = frames @ params["frame_proj"].astype(BF16)
+        # HuBERT masking: replace masked frames with the learned embedding
+        m = batch["frame_mask"][..., None]
+        x = jnp.where(m, params["mask_embed"].astype(BF16)[None, None], x)
+        mask = batch["frame_mask"]  # loss only on masked frames
+        return constrain(x.astype(BF16), "batch", "seq", None), mask
+    tokens = batch["tokens"]
+    x = C.embed_tokens(params["embed"], tokens)
+    mask = jnp.ones(tokens.shape, bool)
+    if cfg.frontend == "vision":
+        patches = batch["patch_embeds"].astype(BF16)  # (B, P, fd)
+        pre = patches @ params["patch_proj"].astype(BF16)
+        x = jnp.concatenate([pre, x[:, pre.shape[1] :]], axis=1)
+        mask = mask.at[:, : pre.shape[1]].set(False)
+    x = constrain(x.astype(BF16), "batch", "seq", None)
+    return x, mask
+
+
+def _run_layers(cfg, params, x, positions, remat_policy: str = "none"):
+    def body(carry, lp):
+        return block_train(cfg, lp, carry, positions), None
+
+    if remat_policy == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat_policy == "dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return C.rms_norm(x, params["final_norm"])
+
+
+def _lm_head(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ------------------------------------------------------------- public API
+def loss_fn(cfg, params, batch, remat_policy: str = "dots"):
+    x, mask = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x = _run_layers(cfg, params, x, positions, remat_policy)
+    if "targets" in batch:  # masked-prediction objective (hubert)
+        labels = batch["targets"]
+    else:  # next-token LM objective
+        labels = jnp.concatenate([batch["tokens"][:, 1:], batch["tokens"][:, :1]], 1)
+        mask = mask & (jnp.arange(s) < s - 1)[None, :]
+    return C.chunked_softmax_xent(
+        x, _lm_head(cfg, params), labels, mask, cfg.loss_chunk
+    )
+
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=BF16) -> dict:
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg) -> dict:
+    return {
+        "k": (None, "batch", "seq", None, None),
+        "v": (None, "batch", "seq", None, None),
+        "len": ("batch",),
+    }
+
+
+def prefill(cfg, params, batch, max_len: int):
+    """Encode a prompt, return (last-position logits, filled cache)."""
+    x, _ = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    ks, vs = [], []
+
+    def body(carry, lp):
+        h = C.rms_norm(carry, lp["ln1"])
+        q, k, v = _qkv(cfg, lp, h)
+        q = C.apply_rope(q, positions, cfg.rope_theta)
+        k = C.apply_rope(k, positions, cfg.rope_theta)
+        attn = C.chunked_attention(
+            q, k, v, causal=cfg.causal, window=cfg.window, q_chunk=cfg.q_chunk
+        ).reshape(b, s, -1)
+        x2 = carry + (attn.astype(BF16) @ lp["wo"].astype(BF16)).astype(carry.dtype)
+        h2 = C.rms_norm(x2, lp["ln2"])
+        x2 = x2 + C.mlp_apply(lp, h2, cfg.mlp).astype(carry.dtype)
+        x2 = constrain(x2, "batch", "seq", None)
+        return x2, (k.astype(BF16), v.astype(BF16))
+
+    x, (k_all, v_all) = jax.lax.scan(body, x, params["layers"])
+    x = C.rms_norm(x, params["final_norm"])
+    logits = (x[:, -1].astype(BF16) @ _lm_head(cfg, params).astype(BF16)).astype(F32)
+    pad = max_len - s
+    cache = {
+        "k": jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "len": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens):
+    """One decode step. tokens: (B, 1) -> (logits (B, V), new cache)."""
+    x = C.embed_tokens(params["embed"], tokens)
+    cur = cache["len"]
+
+    def body(carry, xs):
+        lp, kc, vc = xs
+        x2, kc, vc = block_decode(cfg, lp, carry, kc, vc, cur)
+        return x2, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = C.rms_norm(x, params["final_norm"])
+    logits = (x[:, 0].astype(BF16) @ _lm_head(cfg, params).astype(BF16)).astype(F32)
+    return logits, {"k": k_new, "v": v_new, "len": cur + 1}

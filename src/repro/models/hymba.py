@@ -1,0 +1,316 @@
+"""Hymba — hybrid-head LM: parallel attention + Mamba(SSD) heads per layer
+(arXiv:2411.13676), 128 learned meta tokens (attention sinks), sliding-window
+attention everywhere except a few global layers.
+
+Structure: layers are grouped into *segments* — contiguous runs of SWA layers
+are scanned; global-attention layers are unrolled (their cache shape differs).
+Sub-quadratic by construction: SWA window + SSM state, so the long_500k cell
+runs (global layers use context-parallel decode attention over the sharded
+cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models import dense, mamba2
+from repro.models.params import PDef, stack
+from repro.sharding.ctx import constrain
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------- segments
+def segments(cfg) -> list[tuple[str, int]]:
+    """[('global', 1), ('swa', n), ...] covering cfg.n_layers in order."""
+    segs: list[tuple[str, int]] = []
+    i = 0
+    while i < cfg.n_layers:
+        if i in cfg.global_layers:
+            segs.append(("global", 1))
+            i += 1
+        else:
+            j = i
+            while j < cfg.n_layers and j not in cfg.global_layers:
+                j += 1
+            segs.append(("swa", j - i))
+            i = j
+    return segs
+
+
+def layer_defs(cfg) -> dict:
+    defs = dense.layer_defs(cfg)  # attention + swiglu mlp + ln1/ln2
+    defs.update(mamba2.layer_defs(cfg))  # ssm branch ("ln" unused -> drop)
+    defs.pop("ln")
+    defs["attn_out_norm"] = PDef((cfg.d_model,), (None,), "ones")
+    defs["ssm_out_norm"] = PDef((cfg.d_model,), (None,), "ones")
+    return defs
+
+
+def model_defs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "embed": PDef((cfg.vocab, d), ("tensor", "fsdp"), "embed"),
+        "meta": PDef((cfg.meta_tokens, d), (None, None), "embed"),
+        "segments": {
+            f"seg{i}": stack(layer_defs(cfg), n)
+            for i, (_, n) in enumerate(segments(cfg))
+        },
+        "final_norm": PDef((d,), (None,), "ones"),
+        "lm_head": PDef((d, cfg.vocab), ("fsdp", "tensor")),
+    }
+
+
+# ------------------------------------------------------------- train fwd
+def _block_train(cfg, p, x, positions, window):
+    h = C.rms_norm(x, p["ln1"])
+    q, k, v = dense._qkv(cfg, p, h)
+    q = C.apply_rope(q, positions, cfg.rope_theta)
+    k = C.apply_rope(k, positions, cfg.rope_theta)
+    attn = C.chunked_attention(
+        q, k, v, causal=True, window=window, sink=cfg.meta_tokens if window else 0,
+        q_chunk=cfg.q_chunk,
+    ).reshape(x.shape[0], x.shape[1], -1)
+    attn_out = (attn.astype(BF16) @ p["wo"].astype(BF16)).astype(x.dtype)
+    ssm_out = mamba2.ssm_mix(cfg, p, h)
+    mix = 0.5 * (
+        C.rms_norm(attn_out, p["attn_out_norm"]) + C.rms_norm(ssm_out, p["ssm_out_norm"])
+    )
+    x = constrain(x + mix.astype(x.dtype), "batch", "seq", None)
+    h2 = C.rms_norm(x, p["ln2"])
+    x = x + C.mlp_apply(p, h2, cfg.mlp).astype(x.dtype)
+    return constrain(x, "batch", "seq", None)
+
+
+def _run_segments(cfg, params, x, positions, remat_policy="dots"):
+    for (kind, _), (name, seg) in zip(segments(cfg), params["segments"].items()):
+        window = cfg.window if kind == "swa" else None
+
+        def body(carry, lp, window=window):
+            return _block_train(cfg, lp, carry, positions, window), None
+
+        if remat_policy == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+                prevent_cse=False,
+            )
+        x, _ = jax.lax.scan(body, x, seg)
+    return x
+
+
+def _embed_with_meta(cfg, params, tokens):
+    x = C.embed_tokens(params["embed"], tokens)
+    meta = jnp.broadcast_to(
+        params["meta"].astype(x.dtype)[None], (x.shape[0],) + params["meta"].shape
+    )
+    return jnp.concatenate([meta, x], axis=1)
+
+
+def loss_fn(cfg, params, batch, remat_policy: str = "dots"):
+    tokens = batch["tokens"]
+    x = _embed_with_meta(cfg, params, tokens)
+    s_tot = x.shape[1]
+    positions = jnp.arange(s_tot)
+    x = _run_segments(cfg, params, x, positions, remat_policy)
+    x = C.rms_norm(x, params["final_norm"])
+    x = x[:, cfg.meta_tokens :]
+    s = tokens.shape[1]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], 1)
+    mask = (jnp.arange(s) < s - 1)[None, :] & jnp.ones(tokens.shape, bool)
+    return C.chunked_softmax_xent(x, params["lm_head"], labels, mask, cfg.loss_chunk)
+
+
+# ------------------------------------------------------------- caches
+def init_cache(cfg, batch_size: int, max_len: int, dtype=BF16) -> dict:
+    d_inner, n_heads, conv_dim, _ = mamba2.dims(cfg)
+    hkv, dh, w, mt = cfg.n_kv_heads, cfg.head_dim, cfg.window, cfg.meta_tokens
+    cache: dict = {"len": jnp.zeros((batch_size,), jnp.int32), "segments": {}}
+    for i, (kind, n) in enumerate(segments(cfg)):
+        seg: dict = {
+            "state": jnp.zeros(
+                (n, batch_size, n_heads, cfg.ssm_state, cfg.ssm_headdim), F32
+            ),
+            "conv": jnp.zeros((n, batch_size, cfg.conv_kernel - 1, conv_dim), F32),
+        }
+        if kind == "global":
+            seg["k"] = jnp.zeros((n, batch_size, max_len, hkv, dh), dtype)
+            seg["v"] = jnp.zeros((n, batch_size, max_len, hkv, dh), dtype)
+        else:
+            seg["k"] = jnp.zeros((n, batch_size, w, hkv, dh), dtype)
+            seg["v"] = jnp.zeros((n, batch_size, w, hkv, dh), dtype)
+            seg["pos"] = jnp.full((n, batch_size, w), -1, jnp.int32)
+            seg["sink_k"] = jnp.zeros((n, batch_size, mt, hkv, dh), dtype)
+            seg["sink_v"] = jnp.zeros((n, batch_size, mt, hkv, dh), dtype)
+        cache["segments"][f"seg{i}"] = seg
+    return cache
+
+
+def cache_logical_axes(cfg) -> dict:
+    axes: dict = {"len": ("batch",), "segments": {}}
+    for i, (kind, _) in enumerate(segments(cfg)):
+        seg = {
+            "state": (None, "batch", "tensor", None, None),
+            "conv": (None, "batch", None, "tensor"),
+            "k": (None, "batch", "seq" if kind == "global" else None, None, None),
+            "v": (None, "batch", "seq" if kind == "global" else None, None, None),
+        }
+        if kind == "swa":
+            seg["pos"] = (None, "batch", None)
+            seg["sink_k"] = (None, "batch", None, None, None)
+            seg["sink_v"] = (None, "batch", None, None, None)
+        axes["segments"][f"seg{i}"] = seg
+    return axes
+
+
+# ------------------------------------------------------------- decode
+def _swa_decode_attn(cfg, q, seg_k, seg_v, seg_pos, sink_k, sink_v, cur):
+    """q: (B,1,Hq,dh); ring (B,W,Hkv,dh) + sink (B,mt,Hkv,dh)."""
+    b, _, hq, dh = q.shape
+    hkv = seg_k.shape[2]
+    group = hq // hkv
+    keys = jnp.concatenate([sink_k, seg_k], axis=1)  # (B, mt+W, Hkv, dh)
+    vals = jnp.concatenate([sink_v, seg_v], axis=1)
+    mt = sink_k.shape[1]
+    sink_pos = jnp.broadcast_to(jnp.arange(mt)[None], (b, mt))
+    pos = jnp.concatenate([sink_pos, seg_pos], axis=1)  # (B, mt+W)
+    ok = (pos >= 0) & (pos <= cur[:, None]) & (
+        (pos < mt) | (pos > (cur[:, None] - cfg.window))
+    )
+    qq = q[:, 0].reshape(b, hkv, group, dh).astype(F32) / (dh**0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qq, keys.astype(F32))
+    s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
+    m = jnp.maximum(jnp.max(s, -1, keepdims=True), -1e30)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, vals.astype(F32))
+    out = out / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def _block_decode(cfg, p, x, seg, kind, cur):
+    b = x.shape[0]
+    h = C.rms_norm(x, p["ln1"])
+    q, k, v = dense._qkv(cfg, p, h)
+    pos = cur[:, None]
+    q = C.apply_rope(q, pos, cfg.rope_theta)
+    k = C.apply_rope(k, pos, cfg.rope_theta)
+    if kind == "global":
+        kc = seg["k"].at[jnp.arange(b), cur].set(k[:, 0].astype(seg["k"].dtype))
+        vc = seg["v"].at[jnp.arange(b), cur].set(v[:, 0].astype(seg["v"].dtype))
+        attn = C.decode_attention_cp(q, kc, vc, cur + 1)
+        seg = dict(seg, k=kc, v=vc)
+    else:
+        slot = cur % cfg.window
+        kc = seg["k"].at[jnp.arange(b), slot].set(k[:, 0].astype(seg["k"].dtype))
+        vc = seg["v"].at[jnp.arange(b), slot].set(v[:, 0].astype(seg["v"].dtype))
+        pc = seg["pos"].at[jnp.arange(b), slot].set(cur)
+        attn = _swa_decode_attn(
+            cfg, q, kc, vc, pc, seg["sink_k"], seg["sink_v"], cur
+        )
+        seg = dict(seg, k=kc, v=vc, pos=pc)
+    attn = attn.reshape(b, 1, -1)
+    attn_out = (attn.astype(BF16) @ p["wo"].astype(BF16)).astype(x.dtype)
+    ssm_out, hs, cs = mamba2.ssm_step(cfg, p, h, seg["state"], seg["conv"])
+    seg = dict(seg, state=hs, conv=cs)
+    mix = 0.5 * (
+        C.rms_norm(attn_out, p["attn_out_norm"])
+        + C.rms_norm(ssm_out, p["ssm_out_norm"])
+    )
+    x = x + mix.astype(x.dtype)
+    h2 = C.rms_norm(x, p["ln2"])
+    x = x + C.mlp_apply(p, h2, cfg.mlp).astype(x.dtype)
+    return x, seg
+
+
+def decode_step(cfg, params, cache, tokens):
+    x = C.embed_tokens(params["embed"], tokens)
+    cur = cache["len"]
+    new_segs = {}
+    for (kind, _), (name, seg_params) in zip(
+        segments(cfg), params["segments"].items()
+    ):
+        seg_cache = cache["segments"][name]
+
+        def body(carry, xs, kind=kind):
+            lp, sc = xs
+            x2, sc = _block_decode(cfg, lp, carry, sc, kind, cur)
+            return x2, sc
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segs[name] = new_seg
+    x = C.rms_norm(x, params["final_norm"])
+    logits = (x[:, 0].astype(BF16) @ params["lm_head"].astype(BF16)).astype(F32)
+    return logits, {"len": cur + 1, "segments": new_segs}
+
+
+def prefill(cfg, params, batch, max_len: int):
+    """Encode prompt (with meta tokens) and build all segment caches."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_with_meta(cfg, params, tokens)
+    s_tot = x.shape[1]
+    positions = jnp.arange(s_tot)
+    mt, w = cfg.meta_tokens, cfg.window
+    new_segs = {}
+    for (kind, _), (name, seg_params) in zip(
+        segments(cfg), params["segments"].items()
+    ):
+        def body(carry, lp, kind=kind):
+            h = C.rms_norm(carry, lp["ln1"])
+            q, k, v = dense._qkv(cfg, lp, h)
+            q = C.apply_rope(q, positions, cfg.rope_theta)
+            k = C.apply_rope(k, positions, cfg.rope_theta)
+            window = w if kind == "swa" else None
+            attn = C.chunked_attention(
+                q, k, v, causal=True, window=window, sink=mt if window else 0,
+                q_chunk=cfg.q_chunk,
+            ).reshape(carry.shape[0], s_tot, -1)
+            attn_out = (attn.astype(BF16) @ lp["wo"].astype(BF16)).astype(carry.dtype)
+            ssm_out, hs, cs = mamba2.ssm_mix(cfg, lp, h, return_state=True)
+            mix = 0.5 * (
+                C.rms_norm(attn_out, lp["attn_out_norm"])
+                + C.rms_norm(ssm_out, lp["ssm_out_norm"])
+            )
+            x2 = carry + mix.astype(carry.dtype)
+            h2 = C.rms_norm(x2, lp["ln2"])
+            x2 = x2 + C.mlp_apply(lp, h2, cfg.mlp).astype(carry.dtype)
+            return constrain(x2, "batch", "seq", None), (
+                k.astype(BF16), v.astype(BF16), hs, cs,
+            )
+
+        x, (k_all, v_all, states, convs) = jax.lax.scan(body, x, seg_params)
+        seg: dict = {"state": states, "conv": convs}
+        if kind == "global":
+            pad = max_len - s_tot
+            seg["k"] = jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            seg["v"] = jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            # ring buffer: last `window` positions, placed at pos % window
+            n_l = k_all.shape[0]
+            ring_shape = (n_l, b, w) + k_all.shape[3:]
+            rk = jnp.zeros(ring_shape, k_all.dtype)
+            rv = jnp.zeros(ring_shape, v_all.dtype)
+            rpos = jnp.full((n_l, b, w), -1, jnp.int32)
+            if s_tot >= w:
+                last = jnp.arange(w) + (s_tot - w)
+                slots = last % w
+                rk = rk.at[:, :, slots].set(k_all[:, :, last])
+                rv = rv.at[:, :, slots].set(v_all[:, :, last])
+                rpos = jnp.broadcast_to(
+                    last[jnp.argsort(slots)][None, None], (n_l, b, w)
+                )
+            else:
+                rk = rk.at[:, :, :s_tot].set(k_all)
+                rv = rv.at[:, :, :s_tot].set(v_all)
+                rpos = rpos.at[:, :, :s_tot].set(jnp.arange(s_tot)[None, None])
+            seg["k"], seg["v"], seg["pos"] = rk, rv, rpos
+            seg["sink_k"] = k_all[:, :, :mt]
+            seg["sink_v"] = v_all[:, :, :mt]
+        new_segs[name] = seg
+    x = C.rms_norm(x, params["final_norm"])
+    logits = (x[:, -1].astype(BF16) @ params["lm_head"].astype(BF16)).astype(F32)
+    return logits, {"len": jnp.full((b,), s_tot, jnp.int32), "segments": new_segs}

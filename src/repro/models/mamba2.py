@@ -1,0 +1,308 @@
+"""Mamba-2 (SSD, state-space duality) LM — attention-free.
+
+Chunked SSD algorithm (arXiv:2405.21060): intra-chunk quadratic form +
+inter-chunk state recurrence (lax.scan). ``ssd_reference`` is the exact
+sequential recurrence used by the tests and by the one-token decode step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.params import PDef, stack
+from repro.sharding.ctx import constrain
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state  # x + B + C (n_groups = 1)
+    d_proj = 2 * d_inner + 2 * cfg.ssm_state + n_heads  # z, x, B, C, dt
+    return d_inner, n_heads, conv_dim, d_proj
+
+
+def layer_defs(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim, d_proj = dims(cfg)
+    return {
+        "ln": PDef((d,), (None,), "ones"),
+        "in_proj": PDef((d, d_proj), ("fsdp", "tensor")),
+        "conv_w": PDef((conv_dim, cfg.conv_kernel), (None, None), scale=0.5),
+        "conv_b": PDef((conv_dim,), (None,), "zeros"),
+        "A_log": PDef((n_heads,), (None,), "zeros"),
+        "D_skip": PDef((n_heads,), (None,), "ones"),
+        "dt_bias": PDef((n_heads,), (None,), "zeros"),
+        "ssm_norm": PDef((d_inner,), (None,), "ones"),
+        "out_proj": PDef((d_inner, d), ("tensor", "fsdp")),
+    }
+
+
+def model_defs(cfg) -> dict:
+    return {
+        "embed": PDef((cfg.vocab, cfg.d_model), ("tensor", "fsdp"), "embed"),
+        "layers": stack(layer_defs(cfg), cfg.n_layers),
+        "final_norm": PDef((cfg.d_model,), (None,), "ones"),
+        "lm_head": PDef((cfg.d_model, cfg.vocab), ("fsdp", "tensor")),
+    }
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C), w: (C, K) -> (B, S, C)."""
+    k = w.shape[1]
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + s, :] * w[None, None, :, i] for i in range(k))
+    return out + b[None, None]
+
+
+def ssd_reference(xh, dt, A, Bm, Cm):
+    """Exact sequential SSD recurrence (test oracle / semantics).
+
+    xh: (B,S,H,P) f32; dt: (B,S,H); A: (H,) negative; Bm/Cm: (B,S,N).
+    Returns y (B,S,H,P) and final state (B,H,N,P).
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+
+    def step(hstate, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P) (B,H) (B,N) (B,N)
+        decay = jnp.exp(dt_t * A[None])  # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", b_t, dt_t[..., None] * x_t)
+        hstate = hstate * decay[:, :, None, None] + upd
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, hstate)
+        return hstate, y_t
+
+    h0 = jnp.zeros((b, h, n, p), F32)
+    xs = (
+        jnp.moveaxis(xh, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h_init=None):
+    """Chunked SSD. Same signature semantics as ssd_reference."""
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # dt=0 padding is state-neutral (decay 1, update 0)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // q
+    xc = xh.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = Bm.reshape(b, nc, q, n)
+    cc = Cm.reshape(b, nc, q, n)
+
+    if h_init is None:
+        h_init = jnp.zeros((b, h, n, p), F32)
+
+    # head groups bound the live (B,Q,Q,hg) decay tensor (peak-memory
+    # discipline: materializing (B,nc,Q,Q,H) at once is TBs at scale)
+    hg = h
+    for cand in (16, 8, 4, 2, 1):
+        if h % cand == 0:
+            hg = cand
+            break
+    n_hg = h // hg
+    iota = jnp.arange(q)
+    causal = (iota[:, None] >= iota[None, :])[None, :, :, None]  # (1,Q,Q,1)
+
+    def chunk_step(hstate, inp):
+        # xq: (B,Q,H,P); dtq: (B,Q,H); bq/cq: (B,Q,N)
+        xq, dtq, bq, cq = inp
+        dA = dtq * A[None, None]  # (B,Q,H)
+        cs = jnp.cumsum(dA, axis=1)
+        total = cs[:, -1]  # (B,H)
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)  # (B,Q,Q)
+
+        def head_group(g):
+            sl = slice(g * hg, (g + 1) * hg)
+            csg = cs[:, :, sl]  # (B,Q,hg)
+            li = csg[:, :, None, :] - csg[:, None, :, :]  # (B,Q,Q,hg)
+            lmat = jnp.where(causal, jnp.exp(li), 0.0)
+            m = cb[..., None] * lmat * dtq[:, None, :, sl]
+            return jnp.einsum(
+                "bijh,bjhp->bihp", m, xq[:, :, sl].astype(F32)
+            )
+
+        y_intra = jnp.concatenate(
+            [head_group(g) for g in range(n_hg)], axis=2
+        )  # (B,Q,H,P)
+        decay_out = jnp.exp(total[:, None] - cs)  # (B,Q,H)
+        xqf = xq.astype(F32)
+        s_c = jnp.einsum("bqh,bqn,bqhp->bhnp", decay_out * dtq, bq, xqf)
+        y_inter = jnp.einsum("bqn,bhnp->bqhp", cq, hstate) * jnp.exp(cs)[..., None]
+        new_h = s_c + jnp.exp(total)[:, :, None, None] * hstate
+        return new_h, (y_intra + y_inter).astype(xq.dtype)
+
+    xs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(dtc, 1, 0),
+        jnp.moveaxis(bc, 1, 0),
+        jnp.moveaxis(cc, 1, 0),
+    )
+    # checkpointed chunk body: AD otherwise stacks the (B,Q,Q,hg) decay
+    # tensors across all chunks
+    hT, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step, prevent_cse=False), h_init, xs
+    )  # ys: (nc,B,Q,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, h, p)[:, :s]
+    return y, hT
+
+
+def ssm_mix(cfg, p, x, h_init=None, conv_init=None, return_state=False):
+    """The Mamba-2 mixer. x: (B, S, D) -> (B, S, D) [+ (state, conv_state)]."""
+    b, s, d = x.shape
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    n = cfg.ssm_state
+    # keep the wide tensors bf16 (z, x, conv stream); promote only the small
+    # SSD control tensors (dt, B, C) to f32 — peak-memory discipline
+    proj = x.astype(BF16) @ p["in_proj"].astype(BF16)
+    z, xs, bm, cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    xbc = jnp.concatenate([xs, bm, cm], axis=-1)
+    if conv_init is not None:  # prepend cached conv context (prefill continue)
+        xbc_in = jnp.concatenate([conv_init.astype(BF16), xbc], axis=1)
+        conv = causal_conv(xbc_in, p["conv_w"].astype(BF16), p["conv_b"].astype(BF16))
+        conv = conv[:, conv_init.shape[1] :]
+    else:
+        conv = causal_conv(xbc, p["conv_w"].astype(BF16), p["conv_b"].astype(BF16))
+    conv = jax.nn.silu(conv.astype(F32)).astype(BF16)
+    xs, bm, cm = jnp.split(conv, [d_inner, d_inner + n], axis=-1)
+    bm, cm = bm.astype(F32), cm.astype(F32)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None].astype(F32))
+    a = -jnp.exp(p["A_log"].astype(F32))
+    xh = xs.reshape(b, s, n_heads, cfg.ssm_headdim)
+    y, h_t = ssd_chunked(xh, dt, a, bm, cm, cfg.ssm_chunk, h_init)
+    y = y + p["D_skip"].astype(F32)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner)
+    y = C.rms_norm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = (y.astype(BF16) @ p["out_proj"].astype(BF16)).astype(x.dtype)
+    if return_state:
+        conv_tail = xbc[:, -(cfg.conv_kernel - 1) :, :]  # pre-activation inputs
+        return out, h_t, conv_tail
+    return out
+
+
+def ssm_step(cfg, p, x, h_state, conv_state):
+    """One-token recurrent step. x: (B, 1, D)."""
+    b = x.shape[0]
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    n = cfg.ssm_state
+    proj = (x[:, 0].astype(BF16) @ p["in_proj"].astype(BF16)).astype(F32)
+    z, xs, bm, cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    xbc = jnp.concatenate([xs, bm, cm], axis=-1)  # (B, conv_dim)
+    k = cfg.conv_kernel
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B, K, C)
+    conv = jnp.einsum("bkc,ck->bc", window, p["conv_w"].astype(F32)) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs, bm, cm = jnp.split(conv, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None].astype(F32))  # (B, H)
+    a = -jnp.exp(p["A_log"].astype(F32))
+    xh = xs.reshape(b, n_heads, cfg.ssm_headdim)
+    decay = jnp.exp(dt * a[None])
+    h_state = h_state * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bm, dt[..., None] * xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cm, h_state)
+    y = y + p["D_skip"].astype(F32)[None, :, None] * xh
+    y = y.reshape(b, d_inner)
+    y = C.rms_norm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = (y.astype(BF16) @ p["out_proj"].astype(BF16)).astype(x.dtype)[:, None]
+    return out, h_state, window[:, 1:]
+
+
+# ------------------------------------------------------------- model API
+def loss_fn(cfg, params, batch, remat_policy: str = "dots"):
+    tokens = batch["tokens"]
+    x = C.embed_tokens(params["embed"], tokens)
+    s = x.shape[1]
+
+    def body(carry, lp):
+        h = C.rms_norm(carry, lp["ln"])
+        out = carry + ssm_mix(cfg, lp, h)
+        return constrain(out, "batch", "seq", None), None
+
+    if remat_policy == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat_policy == "dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = C.rms_norm(x, params["final_norm"])
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], 1)
+    mask = (jnp.arange(s) < s - 1)[None, :] & jnp.ones(tokens.shape, bool)
+    return C.chunked_softmax_xent(x, params["lm_head"], labels, mask, cfg.loss_chunk)
+
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=BF16) -> dict:
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    return {
+        "state": jnp.zeros(
+            (cfg.n_layers, batch_size, n_heads, cfg.ssm_state, cfg.ssm_headdim), F32
+        ),
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch_size, cfg.conv_kernel - 1, conv_dim), F32
+        ),
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg) -> dict:
+    return {
+        "state": (None, "batch", "tensor", None, None),
+        "conv": (None, "batch", None, "tensor"),
+        "len": ("batch",),
+    }
+
+
+def prefill(cfg, params, batch, max_len: int):
+    tokens = batch["tokens"]
+    x = C.embed_tokens(params["embed"], tokens)
+    b, s = tokens.shape
+
+    def body(carry, lp):
+        h = C.rms_norm(carry, lp["ln"])
+        out, h_t, conv_t = ssm_mix(cfg, lp, h, return_state=True)
+        return constrain(carry + out, "batch", "seq", None), (h_t, conv_t)
+
+    x, (states, convs) = jax.lax.scan(body, x, params["layers"])
+    x = C.rms_norm(x, params["final_norm"])
+    logits = (x[:, -1].astype(BF16) @ params["lm_head"].astype(BF16)).astype(F32)
+    cache = {"state": states, "conv": convs, "len": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens):
+    x = C.embed_tokens(params["embed"], tokens)
+
+    def body(carry, xs):
+        lp, hs, cs = xs
+        h = C.rms_norm(carry, lp["ln"])
+        out, hs, cs = ssm_step(cfg, lp, h, hs, cs)
+        return carry + out, (hs, cs)
+
+    x, (states, convs) = jax.lax.scan(
+        body, x, (params["layers"], cache["state"], cache["conv"])
+    )
+    x = C.rms_norm(x, params["final_norm"])
+    logits = (x[:, 0].astype(BF16) @ params["lm_head"].astype(BF16)).astype(F32)
+    return logits, {"state": states, "conv": convs, "len": cache["len"] + 1}

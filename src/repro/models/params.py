@@ -1,0 +1,81 @@
+"""Single-source-of-truth parameter declarations.
+
+Each model declares a nested dict of :class:`PDef` (shape, dtype, init,
+logical sharding axes). From that one tree we derive: materialized params,
+PartitionSpecs for pjit, and ShapeDtypeStructs for the allocation-free
+dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ctx
+
+
+class PDef(NamedTuple):
+    shape: tuple
+    logical: tuple  # logical sharding axis per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | embed
+    dtype: Any = jnp.float32
+    scale: float | None = None  # override fan-in scale
+
+
+def stack(defs: dict, n: int) -> dict:
+    """Prepend a scanned-layer dimension to every leaf."""
+    return jax.tree.map(
+        lambda p: PDef((n,) + p.shape, (None,) + p.logical, p.init, p.dtype, p.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, PDef),
+    )
+
+
+def _init_leaf(p: PDef, key: jax.Array) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "embed":
+        return (jax.random.normal(key, p.shape) * 0.02).astype(p.dtype)
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    scale = p.scale if p.scale is not None else 1.0 / (fan_in**0.5)
+    return (jax.random.normal(key, p.shape) * scale).astype(p.dtype)
+
+
+def init_params(defs: dict, key: jax.Array) -> dict:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, PDef))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(p, k) for p, k in zip(leaves, keys)])
+
+
+def param_specs(defs: dict) -> dict:
+    """PartitionSpec tree (uses the ambient mesh; P() without one)."""
+    return jax.tree.map(
+        lambda p: ctx.spec_for(p.shape, *p.logical),
+        defs,
+        is_leaf=lambda x: isinstance(x, PDef),
+    )
+
+
+def param_structs(defs: dict, mesh=None) -> dict:
+    """ShapeDtypeStructs (with shardings if a mesh is ambient) for dry-runs."""
+    from jax.sharding import NamedSharding
+
+    mesh = mesh or ctx.get_mesh()
+
+    def leaf(p: PDef):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(p.shape, p.dtype)
+        spec = ctx.logical_to_spec(mesh, ctx.get_rules(), p.logical, p.shape)
+        return jax.ShapeDtypeStruct(p.shape, p.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(leaf, defs, is_leaf=lambda x: isinstance(x, PDef))
+
+
+def count_params(defs: dict) -> int:
+    import math
+
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, PDef))
+    return sum(math.prod(p.shape) for p in leaves)

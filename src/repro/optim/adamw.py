@@ -1,0 +1,180 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule (pure JAX).
+
+Moments inherit the parameters' (fsdp, tensor) shardings, which is ZeRO:
+every device holds only its slice of m/v. Optional int8 state compression
+(factored out to runtime/compress.py) applies at the gradient boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+    state_bits: int = 32  # 8 => blockwise-int8 moments (bitsandbytes-style)
+    q_block: int = 128  # quantization block along the last dim
+
+
+# ---------------------------------------------------- 8-bit moment storage
+def quant_axis(shape: tuple, block: int) -> int | None:
+    """First axis evenly divisible into ``block`` chunks (None = keep f32).
+
+    Blocks never straddle shard boundaries as long as the sharded extent is
+    itself a multiple of ``block`` — true for every matrix in the model zoo.
+    """
+    for i, s in enumerate(shape):
+        if s >= block and s % block == 0:
+            return i
+    return None
+
+
+def quantize_moment(
+    x: jax.Array, block: int, axis: int
+) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization along ``axis`` (for m)."""
+    nb = x.shape[axis] // block
+    shp = x.shape[:axis] + (nb, block) + x.shape[axis + 1 :]
+    xb = x.reshape(shp)
+    scale = jnp.max(jnp.abs(xb), axis=axis + 1) / 127.0 + 1e-20
+    q = jnp.clip(
+        jnp.round(xb / jnp.expand_dims(scale, axis + 1)), -127, 127
+    ).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def dequantize_moment(
+    q: jax.Array, scale: jax.Array, block: int, axis: int
+) -> jax.Array:
+    nb = q.shape[axis] // block
+    shp = q.shape[:axis] + (nb, block) + q.shape[axis + 1 :]
+    xb = q.reshape(shp).astype(jnp.float32) * jnp.expand_dims(scale, axis + 1)
+    return xb.reshape(q.shape)
+
+
+def quantize_moment_pos(
+    x: jax.Array, block: int, axis: int
+) -> tuple[jax.Array, jax.Array]:
+    """Blockwise 4th-root-compressed uint8 quantization for the nonnegative
+    second moment. Linear int8 collapses small v entries to 0, which makes
+    m/(sqrt(v)+eps) explode; the 4th-root map preserves ~10 orders of
+    magnitude of dynamic range within a block (dynamic quantization)."""
+    nb = x.shape[axis] // block
+    shp = x.shape[:axis] + (nb, block) + x.shape[axis + 1 :]
+    xb = x.reshape(shp)
+    vmax = jnp.max(xb, axis=axis + 1) + 1e-30
+    u = (xb / jnp.expand_dims(vmax, axis + 1)) ** 0.25
+    q = jnp.clip(jnp.round(u * 255.0), 0, 255).astype(jnp.uint8)
+    return q.reshape(x.shape), vmax
+
+
+def dequantize_moment_pos(
+    q: jax.Array, vmax: jax.Array, block: int, axis: int
+) -> jax.Array:
+    nb = q.shape[axis] // block
+    shp = q.shape[:axis] + (nb, block) + q.shape[axis + 1 :]
+    u = q.reshape(shp).astype(jnp.float32) / 255.0
+    xb = (u**4) * jnp.expand_dims(vmax, axis + 1)
+    return xb.reshape(q.shape)
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array  # () int32
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * (step + 1.0) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.peak_lr * (
+        cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _moment_zeros(p: jax.Array, cfg: AdamWConfig, signed: bool = True):
+    ax = quant_axis(p.shape, cfg.q_block) if cfg.state_bits == 8 else None
+    if ax is not None:
+        q = jnp.zeros(p.shape, jnp.int8 if signed else jnp.uint8)
+        sshape = p.shape[:ax] + (p.shape[ax] // cfg.q_block,) + p.shape[ax + 1 :]
+        return {"q": q, "s": jnp.zeros(sshape, jnp.float32)}
+    return jnp.zeros_like(p, jnp.float32)
+
+
+def init(params: dict, cfg: AdamWConfig | None = None) -> AdamWState:
+    cfg = cfg or AdamWConfig()
+    zeros = jax.tree.map(lambda p: _moment_zeros(p, cfg, True), params)
+    zeros2 = jax.tree.map(lambda p: _moment_zeros(p, cfg, False), params)
+    return AdamWState(zeros, zeros2, jnp.int32(0))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def update(
+    cfg: AdamWConfig, grads: dict, state: AdamWState, params: dict
+) -> tuple[dict, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        quantized = isinstance(m, dict)
+        if quantized:
+            ax = quant_axis(p.shape, cfg.q_block)
+            m = dequantize_moment(m["q"], m["s"], cfg.q_block, ax)
+            v = dequantize_moment_pos(v["q"], v["s"], cfg.q_block, ax)
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if quantized:
+            mq, ms = quantize_moment(m, cfg.q_block, ax)
+            vq, vs = quantize_moment_pos(v, cfg.q_block, ax)
+            return newp, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        return newp, m, v
+
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    m_flat = treedef.flatten_up_to(state.m)
+    v_flat = treedef.flatten_up_to(state.v)
+
+    def upd_leaf(p, g, m, v):
+        # Layer-stacked matrices: update one layer slice at a time so the
+        # f32 dequantize/update temporaries are per-layer, not per-tree
+        # (peak-memory discipline for the XXL models).
+        if p.ndim >= 3 and p.shape[0] <= 512:
+            return jax.lax.map(lambda args: upd(*args), (p, g, m, v))
+        return upd(p, g, m, v)
+
+    res = [upd_leaf(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+    new_params = jax.tree.unflatten(treedef, [r[0] for r in res])
+    new_m = jax.tree.unflatten(treedef, [r[1] for r in res])
+    new_v = jax.tree.unflatten(treedef, [r[2] for r in res])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(new_m, new_v, step), metrics

@@ -1,0 +1,122 @@
+"""Fault tolerance: heartbeats, straggler deadlines, elastic re-sharding.
+
+The DSLSH serving path is embarrassingly data-parallel (the paper's nodes
+hold disjoint slices), so the recovery story is:
+
+* **Heartbeats / failure detection** — `HeartbeatMonitor` tracks per-node
+  liveness (simulated here; on a real cluster this is the coordinator
+  service). Missed deadline => node marked down.
+* **Straggler mitigation (serving)** — the Reducer proceeds with a
+  ``drop_mask`` excluding late nodes (core/distributed.dslsh_query):
+  bounded tail latency at a small recall cost — faithful to the paper's
+  latency-first design.
+* **Elastic re-mesh** — on permanent failure the dataset is re-sharded over
+  the surviving nodes and each node rebuilds its local SLSH tables (build is
+  embarrassingly parallel — the paper's own construction path). Training
+  restarts from the latest checkpoint with new shardings
+  (checkpoint.store.restore with target shardings).
+* **Retry wrapper** — transient errors retry with exponential backoff.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    n_nodes: int
+    deadline_s: float = 1.0
+    last_beat: dict = dataclasses.field(default_factory=dict)
+
+    def beat(self, node: int, t: float | None = None):
+        self.last_beat[node] = time.time() if t is None else t
+
+    def down_nodes(self, now: float | None = None) -> list[int]:
+        now = time.time() if now is None else now
+        return [
+            n
+            for n in range(self.n_nodes)
+            if now - self.last_beat.get(n, -1e18) > self.deadline_s
+        ]
+
+    def drop_mask(self, now: float | None = None) -> np.ndarray:
+        mask = np.zeros(self.n_nodes, bool)
+        mask[self.down_nodes(now)] = True
+        return mask
+
+
+def retry(fn: Callable, attempts: int = 3, backoff_s: float = 0.05):
+    """Retry transient failures with exponential backoff."""
+
+    def wrapped(*a, **kw):
+        err = None
+        for i in range(attempts):
+            try:
+                return fn(*a, **kw)
+            except Exception as e:  # noqa: BLE001
+                err = e
+                time.sleep(backoff_s * (2**i))
+        raise err
+
+    return wrapped
+
+
+def elastic_reshard_dslsh(key, points, labels, cfg, old_grid, failed_nodes: list[int]):
+    """Rebuild the DSLSH deployment after permanent node failures.
+
+    Surviving nodes re-partition the full dataset (in production the lost
+    slice is re-read from the durable store) and rebuild their local tables
+    with the SAME hash-family key — queries remain exactly comparable.
+    Returns (new_grid, new_index, padded_points, padded_labels, n_real).
+    """
+    from repro.core import distributed as D
+
+    nu_new = old_grid.nu - len(failed_nodes)
+    assert nu_new >= 1, "no surviving nodes"
+    grid = D.Grid(nu=nu_new, p=old_grid.p)
+    pts, labs, n_real = D.pad_to_multiple(
+        np.asarray(points), np.asarray(labels), grid.cells
+    )
+    import jax.numpy as jnp
+
+    pts_j = jnp.asarray(pts)
+    index = D.simulate_build(key, pts_j, cfg, grid)
+    return grid, index, pts_j, jnp.asarray(labs), n_real
+
+
+def simulate_training_failure_and_restart(
+    model, opt_cfg, ckpt_dir: str, steps_before: int, batch_fn
+):
+    """Train, checkpoint, 'crash', restore, continue — returns both loss
+    traces so tests can assert continuity."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint import store
+    from repro.optim import adamw
+    from repro.train import loop as tl
+
+    params = model.init(jax.random.PRNGKey(0))
+    state = adamw.init(params, opt_cfg)
+    step = jax.jit(tl.make_train_step(model, opt_cfg))
+    losses = []
+    for i in range(steps_before):
+        params, state, m = step(params, state, batch_fn(i))
+        losses.append(float(m["loss"]))
+    store.save({"params": params, "opt": state}, steps_before, ckpt_dir)
+
+    # ----- crash: lose everything; restart from checkpoint
+    params2 = model.init(jax.random.PRNGKey(999))  # fresh process, wrong init
+    state2 = adamw.init(params2, opt_cfg)
+    restored, at = store.restore_latest({"params": params2, "opt": state2}, ckpt_dir)
+    assert at == steps_before
+    params2, state2 = restored["params"], restored["opt"]
+    losses2 = []
+    for i in range(steps_before, steps_before + 3):
+        params2, state2, m = step(params2, state2, batch_fn(i))
+        losses2.append(float(m["loss"]))
+    return losses, losses2

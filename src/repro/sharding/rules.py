@@ -1,0 +1,14 @@
+"""Re-export of the sharding rules (logical-axis -> mesh-axis mapping).
+
+The implementation lives in ``repro.sharding.ctx``; this module gives the
+conventional import path ``repro.sharding.rules``.
+"""
+from repro.sharding.ctx import (  # noqa: F401
+    ShardingRules,
+    constrain,
+    get_mesh,
+    get_rules,
+    logical_to_spec,
+    spec_for,
+    use_mesh,
+)

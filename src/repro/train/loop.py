@@ -1,0 +1,110 @@
+"""Train-step builder: microbatched gradient accumulation, clipping, AdamW,
+optional int8 gradient compression — all under pjit with the ambient mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.runtime import compress as gc
+
+
+def _split_microbatches(batch: dict, m: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        assert b % m == 0, (b, m)
+        return x.reshape((m, b // m) + x.shape[1:])
+
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig, compress: bool = False):
+    """Returns step(params, opt_state, [ef_state,] batch) -> (..., metrics)."""
+
+    def grads_of(params, batch):
+        m = model.cfg.microbatches
+        if m == 1:
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            return loss, grads
+        mb = _split_microbatches(batch, m)
+        acc_dtype = jnp.dtype(getattr(model.cfg, "grad_accum_dtype", "float32"))
+
+        def acc(carry, mbatch):
+            loss_sum, g_sum = carry
+            loss, g = jax.value_and_grad(model.loss_fn)(params, mbatch)
+            g_sum = jax.tree.map(
+                lambda a, b: (a + b.astype(acc_dtype)).astype(acc_dtype), g_sum, g
+            )
+            return (loss_sum + loss, g_sum), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(acc, (jnp.float32(0), zeros), mb)
+        return loss_sum / m, jax.tree.map(lambda g: (g / m).astype(acc_dtype), g_sum)
+
+    if compress:
+
+        def step(params, opt_state, ef, batch):
+            loss, grads = grads_of(params, batch)
+            grads, ef = gc.compress_grads(grads, ef)
+            params, opt_state, metrics = adamw.update(opt_cfg, grads, opt_state, params)
+            return params, opt_state, ef, dict(metrics, loss=loss)
+
+        return step
+
+    def step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, dict(metrics, loss=loss)
+
+    return step
+
+
+def opt_state_structs(model, mesh=None, opt_cfg: adamw.AdamWConfig | None = None):
+    """ShapeDtypeStructs (sharded like params) for the dry-run."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        state_bits=getattr(model.cfg, "opt_state_bits", 32)
+    )
+    pstructs = model.param_structs(mesh)
+
+    def moment_like(s, signed=True):
+        shard = getattr(s, "sharding", None)
+        ax = (
+            adamw.quant_axis(s.shape, opt_cfg.q_block)
+            if opt_cfg.state_bits == 8
+            else None
+        )
+        if ax is not None:
+            qb = opt_cfg.q_block
+            sshape = s.shape[:ax] + (s.shape[ax] // qb,) + s.shape[ax + 1 :]
+            sshard = shard
+            if shard is not None:
+                # drop mesh axes that no longer divide the shrunken dim
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                spec = list(shard.spec) + [None] * (len(s.shape) - len(shard.spec))
+                import math
+
+                ax_names = spec[ax]
+                if ax_names is not None:
+                    names = (ax_names,) if isinstance(ax_names, str) else tuple(ax_names)
+                    size = math.prod(shard.mesh.shape[n] for n in names)
+                    if sshape[ax] % size != 0:
+                        spec[ax] = None
+                sshard = NamedSharding(shard.mesh, P(*spec))
+            return {
+                "q": jax.ShapeDtypeStruct(
+                    s.shape, jnp.int8 if signed else jnp.uint8, sharding=shard
+                ),
+                "s": jax.ShapeDtypeStruct(sshape, jnp.float32, sharding=sshard),
+            }
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=shard)
+
+    import functools as _ft
+
+    m = jax.tree.map(_ft.partial(moment_like, signed=True), pstructs)
+    v = jax.tree.map(_ft.partial(moment_like, signed=False), pstructs)
+    return adamw.AdamWState(m, v, jax.ShapeDtypeStruct((), jnp.int32))

@@ -1,0 +1,249 @@
+"""Unit + property tests for the SLSH core (hashing, tables, index, predict)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing, pknn, predict, slsh, tables, topk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- hashing
+def test_pack_bits_matches_manual():
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, size=(5, 70)).astype(bool)
+    packed = np.asarray(hashing.pack_bits(jnp.asarray(bits)))
+    assert packed.shape == (5, 3)
+    for r in range(5):
+        for w in range(3):
+            val = 0
+            for b in range(32):
+                j = w * 32 + b
+                if j < 70 and bits[r, j]:
+                    val |= 1 << b
+            assert packed[r, w] == np.uint32(val)
+
+
+def test_mix32_deterministic_and_salt_sensitive():
+    words = jnp.asarray([[1, 2, 3]], dtype=jnp.uint32)
+    h1 = hashing.mix32(words, jnp.uint32(7))
+    h2 = hashing.mix32(words, jnp.uint32(7))
+    h3 = hashing.mix32(words, jnp.uint32(8))
+    assert h1 == h2 and h1 != h3
+
+
+def test_equal_points_equal_keys():
+    key = jax.random.PRNGKey(0)
+    params = hashing.make_bitsample(key, L=4, m=33, d=8, lo=0.0, hi=1.0)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (3, 8))
+    xx = jnp.concatenate([x, x])
+    keys = hashing.hash_points(params, xx)
+    np.testing.assert_array_equal(np.asarray(keys[:, :3]), np.asarray(keys[:, 3:]))
+
+
+def test_chunked_hash_matches_unchunked():
+    key = jax.random.PRNGKey(0)
+    params = hashing.make_signrp(key, L=3, m=17, d=6)
+    x = jax.random.normal(jax.random.PRNGKey(1), (100, 6))
+    a = hashing.hash_points(params, x)
+    b = hashing.hash_points_chunked(params, x, chunk=13)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lsh_collision_property_l1():
+    """Closer points (l1) must collide more often — the (r, cr) property."""
+    key = jax.random.PRNGKey(42)
+    params = hashing.make_bitsample(key, L=64, m=8, d=16, lo=0.0, hi=1.0)
+    base = jax.random.uniform(jax.random.PRNGKey(1), (64, 16))
+    near = base + 0.01 * jax.random.normal(jax.random.PRNGKey(2), base.shape)
+    far = jax.random.uniform(jax.random.PRNGKey(3), base.shape)
+    kb = hashing.hash_points(params, base)
+    kn = hashing.hash_points(params, near)
+    kf = hashing.hash_points(params, far)
+    p_near = float(jnp.mean((kb == kn).astype(jnp.float32)))
+    p_far = float(jnp.mean((kb == kf).astype(jnp.float32)))
+    assert p_near > p_far + 0.2, (p_near, p_far)
+
+
+def test_lsh_collision_property_cosine():
+    key = jax.random.PRNGKey(7)
+    params = hashing.make_signrp(key, L=64, m=6, d=16)
+    base = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    near = base + 0.05 * jax.random.normal(jax.random.PRNGKey(2), base.shape)
+    far = jax.random.normal(jax.random.PRNGKey(3), base.shape)
+    kb = hashing.hash_points(params, base)
+    kn = hashing.hash_points(params, near)
+    kf = hashing.hash_points(params, far)
+    assert float(jnp.mean(kb == kn)) > float(jnp.mean(kb == kf)) + 0.2
+
+
+# ---------------------------------------------------------------- tables
+def test_build_tables_sorted_and_permutation():
+    keys = jnp.asarray(
+        np.random.default_rng(0).integers(0, 50, size=(3, 40)), dtype=jnp.uint32
+    )
+    ts = tables.build_tables(keys)
+    for l in range(3):
+        row = np.asarray(ts.sorted_keys[l])
+        assert (np.diff(row.astype(np.int64)) >= 0).all()
+        assert sorted(np.asarray(ts.sorted_idx[l]).tolist()) == list(range(40))
+        # alignment: sorted_keys[i] == keys[l, sorted_idx[i]]
+        np.testing.assert_array_equal(
+            row, np.asarray(keys[l])[np.asarray(ts.sorted_idx[l])]
+        )
+
+
+def test_find_heavy_matches_numpy():
+    rng = np.random.default_rng(1)
+    # craft a table with one dominant bucket
+    keys = rng.integers(100, 1000, size=(2, 256)).astype(np.uint32)
+    keys[0, :100] = 77
+    keys[1, :50] = 5
+    ts = tables.build_tables(jnp.asarray(keys))
+    hb = tables.find_heavy(ts, jnp.int32(30), h_max=4)
+    assert bool(hb.valid[0, 0]) and int(hb.size[0, 0]) == 100
+    assert int(np.asarray(ts.sorted_keys[0])[int(hb.start[0, 0])]) == 77
+    assert bool(hb.valid[1, 0]) and int(hb.size[1, 0]) == 50
+
+
+def test_bucket_range_and_gather():
+    row_keys = jnp.asarray([1, 1, 2, 2, 2, 9], dtype=jnp.uint32)
+    row_idx = jnp.asarray([10, 11, 12, 13, 14, 15], dtype=jnp.int32)
+    lo, hi = tables.bucket_range(row_keys, jnp.uint32(2))
+    assert (int(lo), int(hi)) == (2, 5)
+    got = tables.gather_bucket(row_idx, lo, hi, budget=4)
+    assert np.asarray(got).tolist() == [12, 13, 14, -1]
+
+
+# ---------------------------------------------------------------- topk
+@given(
+    st.lists(st.floats(0.0, 100.0, allow_nan=False, width=32), min_size=1, max_size=64),
+    st.integers(1, 10),
+)
+@settings(max_examples=30, deadline=None)
+def test_masked_topk_property(vals, k):
+    d = jnp.asarray(vals, jnp.float32)
+    i = jnp.arange(d.shape[0], dtype=jnp.int32)
+    kd, ki = topk.masked_topk_smallest(d, i, k)
+    ref = np.sort(np.asarray(vals))[: min(k, len(vals))]
+    got = np.asarray(kd)[: min(k, len(vals))]
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_merge_topk_is_reducer():
+    da = jnp.asarray([1.0, 3.0], jnp.float32)
+    ia = jnp.asarray([0, 2], jnp.int32)
+    db = jnp.asarray([2.0, 4.0], jnp.float32)
+    ib = jnp.asarray([1, 3], jnp.int32)
+    kd, ki = topk.merge_topk(da, ia, db, ib, 3)
+    assert np.asarray(ki).tolist() == [0, 1, 2]
+
+
+# ---------------------------------------------------------------- SLSH index
+def _clustered_data(key, n_clusters=20, per=50, d=16, spread=0.02):
+    kc, kp = jax.random.split(key)
+    centers = jax.random.uniform(kc, (n_clusters, d), jnp.float32, 0.0, 1.0)
+    pts = centers[:, None, :] + spread * jax.random.normal(kp, (n_clusters, per, d))
+    return pts.reshape(-1, d)
+
+
+def _small_cfg(**kw):
+    base = dict(
+        m_out=12, L_out=16, m_in=8, L_in=4, alpha=0.02, k=10,
+        val_lo=0.0, val_hi=1.0, c_max=64, c_in=16, h_max=4, p_max=128,
+        build_chunk=256, query_chunk=16,
+    )
+    base.update(kw)
+    return slsh.SLSHConfig(**base)
+
+
+def test_slsh_recall_on_clustered_data():
+    data = _clustered_data(jax.random.PRNGKey(0))
+    cfg = _small_cfg()
+    index = slsh.build_index(jax.random.PRNGKey(1), data, cfg)
+    queries = data[:32] + 0.005 * jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    res = slsh.query_batch(index, data, queries, cfg)
+    _, true_idx = pknn.knn_batch(data, queries, k=10)
+    recall = np.mean(
+        [
+            len(set(np.asarray(res.knn_idx[i]).tolist()) & set(np.asarray(true_idx[i]).tolist())) / 10.0
+            for i in range(32)
+        ]
+    )
+    assert recall > 0.5, recall
+    # sublinearity: candidates scanned well below n
+    assert float(jnp.median(res.comparisons)) < data.shape[0] * 0.5
+
+
+def test_slsh_no_duplicate_comparisons():
+    data = _clustered_data(jax.random.PRNGKey(3), n_clusters=5, per=40)
+    cfg = _small_cfg()
+    index = slsh.build_index(jax.random.PRNGKey(4), data, cfg)
+    res = slsh.query_index(index, data, data[0], cfg)
+    knn = np.asarray(res.knn_idx)
+    knn = knn[knn >= 0]
+    assert len(set(knn.tolist())) == len(knn)
+    assert int(res.comparisons) <= data.shape[0]
+
+
+def test_inner_layer_reduces_comparisons():
+    """Stratification must cut candidate counts on skewed data (paper §2)."""
+    key = jax.random.PRNGKey(5)
+    # one giant cluster => heavy buckets in the outer layer
+    d = 16
+    big = 0.01 * jax.random.normal(key, (800, d)) + 0.5
+    rest = jax.random.uniform(jax.random.PRNGKey(6), (200, d))
+    data = jnp.concatenate([big, rest])
+    cfg_on = _small_cfg(alpha=0.05, c_max=512, m_out=6, L_out=8)
+    cfg_off = _small_cfg(alpha=0.05, c_max=512, m_out=6, L_out=8, use_inner=False)
+    idx_on = slsh.build_index(jax.random.PRNGKey(7), data, cfg_on)
+    idx_off = slsh.build_index(jax.random.PRNGKey(7), data, cfg_off)
+    assert bool(jnp.any(idx_on.heavy.valid)), "expected heavy buckets"
+    q = big[:16]
+    r_on = slsh.query_batch(idx_on, data, q, cfg_on)
+    r_off = slsh.query_batch(idx_off, data, q, cfg_off)
+    assert float(jnp.mean(r_on.comparisons)) < float(jnp.mean(r_off.comparisons))
+
+
+def test_query_of_indexed_point_finds_itself():
+    data = _clustered_data(jax.random.PRNGKey(8), n_clusters=8, per=30)
+    cfg = _small_cfg()
+    index = slsh.build_index(jax.random.PRNGKey(9), data, cfg)
+    res = slsh.query_index(index, data, data[17], cfg)
+    assert 17 in np.asarray(res.knn_idx).tolist()
+    assert float(res.knn_dist[0]) == 0.0
+
+
+# ---------------------------------------------------------------- predict
+def test_mcc_perfect_and_inverted():
+    y = jnp.asarray([0, 1, 0, 1, 1, 0])
+    assert float(predict.mcc(y, y)) == pytest.approx(1.0)
+    assert float(predict.mcc(1 - y, y)) == pytest.approx(-1.0)
+
+
+def test_mcc_degenerate_is_zero():
+    y = jnp.asarray([1, 1, 1, 1])
+    p = jnp.asarray([1, 1, 1, 1])
+    assert float(predict.mcc(p, y)) == 0.0  # den == 0 convention
+
+
+def test_weighted_vote_prefers_near_neighbours():
+    labels = jnp.asarray([1, 0, 0, 0], jnp.int8)
+    knn_idx = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    knn_dist = jnp.asarray([0.01, 10.0, 10.0, 10.0], jnp.float32)
+    assert int(predict.weighted_vote(labels, knn_idx, knn_dist)) == 1
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_hash_keys_stable_under_seed(seed):
+    """Same PRNG seed => identical hash family (the Root broadcast)."""
+    k = jax.random.PRNGKey(seed)
+    p1 = hashing.make_bitsample(k, 2, 5, 4, 0.0, 1.0)
+    p2 = hashing.make_bitsample(k, 2, 5, 4, 0.0, 1.0)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 4))
+    np.testing.assert_array_equal(
+        np.asarray(hashing.hash_points(p1, x)), np.asarray(hashing.hash_points(p2, x))
+    )

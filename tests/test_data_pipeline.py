@@ -1,0 +1,82 @@
+"""Tests for the synthetic ABP generator and rolling-window dataset builder."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import abp, windows
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _small_record(seed=0, n_beats=20_000, episode_rate=1.0 / 4000.0):
+    cfg = abp.ABPConfig(n_beats=n_beats, episode_rate=episode_rate)
+    mapv, valid = abp.synth_record(jax.random.PRNGKey(seed), cfg)
+    return np.asarray(mapv), np.asarray(valid)
+
+
+def test_synth_record_physiological_range():
+    mapv, valid = _small_record()
+    assert mapv.shape == (20_000,)
+    assert (mapv >= 20.0).all() and (mapv <= 180.0).all()
+    assert 0.95 < valid.mean() <= 1.0
+    # baseline should be healthy most of the time
+    assert np.median(mapv) > 60.0
+
+
+def test_synth_has_hypotensive_episodes():
+    mapv, _ = _small_record(seed=3, n_beats=60_000, episode_rate=1.0 / 3000.0)
+    assert (mapv < 60.0).mean() > 0.005  # episodes exist
+    assert (mapv < 60.0).mean() < 0.5  # ...but do not dominate
+
+
+def test_windows_labels_match_definition():
+    mapv, valid = _small_record(seed=1, n_beats=40_000, episode_rate=1.0 / 3000.0)
+    cfg = windows.WindowConfig("t", lag_beats=300, cond_beats=300)
+    pts, labs = windows.windows_from_record(mapv, valid, cfg)
+    assert pts.shape[1] == 30
+    assert pts.shape[0] == labs.shape[0] > 0
+    # re-derive a few labels directly from the raw record
+    # (reconstruct starts by replaying the rolling algorithm)
+    starts = []
+    i, total, stride = 0, 600, 60
+    below = (mapv < 60.0) & valid
+    while i + total <= mapv.shape[0]:
+        nv = valid[i + 300 : i + 600].sum()
+        frac = below[i + 300 : i + 600].sum() / nv if nv else 0.0
+        pos = frac >= 0.9
+        starts.append((i, pos))
+        i += total if pos else stride
+    assert len(starts) == labs.shape[0]
+    for (s, pos), got in zip(starts[:50], labs[:50]):
+        assert bool(pos) == bool(got)
+
+
+def test_window_features_are_subwindow_means():
+    mapv, valid = _small_record(seed=2, n_beats=5_000, episode_rate=0.0)
+    cfg = windows.WindowConfig("t", lag_beats=300, cond_beats=300)
+    pts, _ = windows.windows_from_record(mapv, valid, cfg)
+    # first window, first subwindow = beats [0, 10)
+    sel = valid[0:10]
+    expect = mapv[0:10][sel].mean()
+    np.testing.assert_allclose(pts[0, 0], expect, rtol=1e-5)
+
+
+def test_dataset_class_imbalance_direction():
+    """%no-AHE must dominate (Table 1: 96-98.5%)."""
+    cfg = abp.ABPConfig(n_beats=50_000, episode_rate=1.0 / 8000.0)
+    mapv, valid = abp.synth_dataset_beats(jax.random.PRNGKey(0), 4, cfg)
+    ds = windows.build_dataset(
+        np.asarray(mapv), np.asarray(valid), windows.AHE_51_5C
+    )
+    assert ds["points"].shape[0] > 500
+    assert ds["pct_no_ahe"] > 80.0
+
+
+def test_train_test_split_disjoint():
+    pts = np.arange(200, dtype=np.float32).reshape(100, 2)
+    ds = {"name": "x", "points": pts, "labels": np.zeros(100, np.int8), "pct_no_ahe": 100.0}
+    train, qx, qy = windows.train_test_split(ds, n_test=20, seed=1)
+    assert train["points"].shape[0] == 80 and qx.shape[0] == 20
+    train_set = {tuple(r) for r in train["points"]}
+    test_set = {tuple(r) for r in qx}
+    assert not (train_set & test_set)

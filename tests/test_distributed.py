@@ -1,0 +1,169 @@
+"""DSLSH distributed-system tests.
+
+Single-device tests exercise the vmap-simulated grid (same per-cell code);
+one subprocess test builds a real 8-device host mesh and checks the
+shard_map path (allgather + tree reducers) against the simulation.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed as D
+from repro.core import pknn, slsh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(**kw):
+    base = dict(
+        m_out=10, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5,
+        val_lo=0.0, val_hi=1.0, c_max=32, c_in=8, h_max=4, p_max=64,
+        build_chunk=128, query_chunk=8,
+    )
+    base.update(kw)
+    return slsh.SLSHConfig(**base)
+
+
+def _data(n=512, d=12, seed=1):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (n, d))
+
+
+def test_simulated_grid_shapes_and_global_indices():
+    cfg, grid = _cfg(), D.Grid(nu=4, p=2)
+    data = _data()
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    q = data[:6]
+    kd, ki, comps = D.simulate_query(idx, data, q, cfg, grid)
+    assert kd.shape == (6, cfg.k) and ki.shape == (6, cfg.k)
+    assert comps.shape == (4, 2, 6)
+    # querying an indexed point must find itself with distance 0 (global idx)
+    assert int(ki[3, 0]) == 3 and float(kd[3, 0]) == 0.0
+    valid = np.asarray(ki) >= 0
+    assert (np.asarray(ki)[valid] < data.shape[0]).all()
+
+
+def test_grid_vs_single_node_recall_similar():
+    """Sharding must not change retrieval quality materially (paper §4.2:
+    parallelism does not influence the prediction output)."""
+    data = _data(n=1024, d=12, seed=3)
+    q = data[:32] + 0.002 * jax.random.normal(jax.random.PRNGKey(9), (32, 12))
+    _, ti = pknn.knn_batch(data, q, 5)
+
+    def recall(grid):
+        cfg = _cfg(c_max=64)
+        idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+        _, ki, _ = D.simulate_query(idx, data, q, cfg, grid)
+        return np.mean(
+            [
+                len(set(np.asarray(ki[i]).tolist()) & set(np.asarray(ti[i]).tolist())) / 5
+                for i in range(32)
+            ]
+        )
+
+    r1 = recall(D.Grid(nu=1, p=1))
+    r8 = recall(D.Grid(nu=4, p=2))
+    assert abs(r1 - r8) < 0.25, (r1, r8)
+
+
+def test_straggler_drop_mask_excludes_node():
+    cfg, grid = _cfg(), D.Grid(nu=4, p=2)
+    data = _data(n=512)
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    q = data[:8]
+    drop = jnp.asarray([False, False, True, False])
+    kd, ki, _ = D.simulate_query(idx, data, q, cfg, grid, drop_mask=drop)
+    # node 2 owns global indices [256, 384): they must be absent
+    ki_np = np.asarray(ki)
+    assert not (((ki_np >= 256) & (ki_np < 384)).any())
+    # queries 0..7 live on node 0, so self-hits must survive the drop
+    assert int(ki[0, 0]) == 0
+
+
+def test_pknn_comparisons_metric():
+    grid = D.Grid(nu=2, p=4)
+    data = _data(n=512)
+    kd, ki, comps = D.pknn_query(data, data[:3], k=5, grid=grid)
+    assert (np.asarray(comps) == 512 // 8).all()
+    assert int(ki[0, 0]) == 0 and float(kd[0, 0]) == 0.0
+
+
+def test_comparisons_speedup_vs_pknn():
+    """The paper's headline: DSLSH does far fewer comparisons than PKNN."""
+    d = 12
+    kc, kp = jax.random.split(jax.random.PRNGKey(5))
+    centers = jax.random.uniform(kc, (64, d))
+    data = (
+        centers[:, None, :] + 0.01 * jax.random.normal(kp, (64, 32, d))
+    ).reshape(-1, d)
+    cfg, grid = _cfg(m_out=14, L_out=8, c_max=64), D.Grid(nu=2, p=4)
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    q = data[:16]
+    _, _, comps = D.simulate_query(idx, data, q, cfg, grid)
+    max_comps = np.asarray(comps).max(axis=(0, 1))  # per-query max across cells
+    pknn_comps = data.shape[0] // grid.cells
+    assert np.median(max_comps) < pknn_comps, (np.median(max_comps), pknn_comps)
+
+
+def test_cell_build_same_tables_across_nodes():
+    """Root broadcast invariant: table t uses the same hash fn on all nodes."""
+    cfg, grid = _cfg(), D.Grid(nu=2, p=2)
+    data = _data(n=256)
+    a = D.cell_build(jax.random.PRNGKey(0), data[:128], jnp.int32(1), cfg, grid)
+    b = D.cell_build(jax.random.PRNGKey(0), data[128:], jnp.int32(1), cfg, grid)
+    np.testing.assert_array_equal(np.asarray(a.outer_params.dims), np.asarray(b.outer_params.dims))
+    np.testing.assert_array_equal(np.asarray(a.outer_params.salts), np.asarray(b.outer_params.salts))
+
+
+def test_pad_to_multiple_sentinels_never_retrieved():
+    pts = np.random.default_rng(0).uniform(0, 1, (100, 4)).astype(np.float32)
+    labs = np.zeros(100, np.int8)
+    padded, plabs, n = D.pad_to_multiple(pts, labs, 16)
+    assert padded.shape[0] == 112 and n == 100
+    kd, ki = pknn.knn_batch(jnp.asarray(padded), jnp.asarray(pts[:5]), 10)
+    assert (np.asarray(ki) < 100).all()
+
+
+@pytest.mark.slow
+def test_shard_map_matches_simulation_8dev():
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import distributed as D, slsh
+        cfg = slsh.SLSHConfig(m_out=10, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5,
+                              val_lo=0., val_hi=1., c_max=32, c_in=8, h_max=4,
+                              p_max=64, build_chunk=128, query_chunk=8)
+        grid = D.Grid(nu=2, p=4)
+        key = jax.random.PRNGKey(0)
+        data = jax.random.uniform(jax.random.PRNGKey(1), (512, 12))
+        q = data[:10]
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        idx = D.dslsh_build(mesh, key, data, cfg, grid)
+        kd, ki, comps = D.dslsh_query(mesh, idx, data, q, cfg, grid)
+        kdt, kit, _ = D.dslsh_query(mesh, idx, data, q, cfg, grid, reducer="tree")
+        idx2 = D.simulate_build(key, data, cfg, grid)
+        kd2, ki2, comps2 = D.simulate_query(idx2, data, q, cfg, grid)
+        assert np.allclose(np.asarray(kd), np.asarray(kd2))
+        assert (np.asarray(ki) == np.asarray(ki2)).all()
+        assert (np.asarray(comps) == np.asarray(comps2)).all()
+        assert np.allclose(np.asarray(kd), np.asarray(kdt))
+        assert (np.asarray(ki) == np.asarray(kit)).all()
+        print("OK")
+        """
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

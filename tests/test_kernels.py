@@ -1,0 +1,162 @@
+"""Per-kernel allclose sweeps vs pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashing
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.hash_pack import ops as hp_ops
+from repro.kernels.hash_pack import ref as hp_ref
+from repro.kernels.l1_topk import ops as l1_ops
+from repro.kernels.l1_topk import ref as l1_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------------ l1_topk
+@pytest.mark.parametrize("b,c,d", [(4, 100, 30), (8, 512, 30), (3, 1000, 7), (16, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l1_topk_matches_ref(b, c, d, dtype):
+    key = jax.random.PRNGKey(b * 1000 + c + d)
+    kq, kc, km = jax.random.split(key, 3)
+    q = jax.random.uniform(kq, (b, d), dtype=jnp.float32).astype(dtype)
+    cands = jax.random.uniform(kc, (b, c, d), dtype=jnp.float32).astype(dtype)
+    mask = jax.random.bernoulli(km, 0.8, (b, c))
+    k = 10
+    rd, rp = l1_ref.l1_topk_ref(
+        q.astype(jnp.float32), cands.astype(jnp.float32), mask, k
+    )
+    kd, kp = l1_ops.l1_topk(q, cands, mask, k=k)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd), rtol=1e-5, atol=1e-5)
+    # positions may differ under distance ties; distances must agree exactly
+    dd = np.asarray(
+        jnp.where(
+            kp >= 0,
+            jnp.sum(jnp.abs(jnp.take_along_axis(cands, jnp.maximum(kp, 0)[..., None], 1).astype(jnp.float32) - q[:, None].astype(jnp.float32)), -1),
+            jnp.inf,
+        )
+    )
+    np.testing.assert_allclose(dd, np.asarray(rd), rtol=1e-5, atol=1e-5)
+
+
+def test_l1_topk_all_masked():
+    q = jnp.zeros((2, 5))
+    cands = jnp.ones((2, 40, 5))
+    mask = jnp.zeros((2, 40), bool)
+    kd, kp = l1_ops.l1_topk(q, cands, mask, k=4)
+    assert not np.isfinite(np.asarray(kd)).any()
+    assert (np.asarray(kp) == -1).all()
+
+
+def test_l1_topk_fewer_than_k_valid():
+    q = jnp.zeros((1, 4))
+    cands = jnp.arange(3 * 4, dtype=jnp.float32).reshape(1, 3, 4)
+    mask = jnp.asarray([[True, True, False]])
+    kd, kp = l1_ops.l1_topk(q, cands, mask, k=5)
+    assert np.isfinite(np.asarray(kd[0, :2])).all()
+    assert not np.isfinite(np.asarray(kd[0, 2:])).any()
+    assert np.asarray(kp[0, :2]).tolist() == [0, 1]
+
+
+# ---------------------------------------------------------------- hash_pack
+@pytest.mark.parametrize("t,d,m", [(10, 30, 33), (300, 30, 125), (64, 128, 64), (7, 5, 200)])
+def test_signrp_pack_matches_ref(t, d, m):
+    kx, kp = jax.random.split(jax.random.PRNGKey(t + d + m))
+    x = jax.random.normal(kx, (t, d))
+    proj = jax.random.normal(kp, (d, m))
+    got = hp_ops.signrp_pack(x, proj)
+    want = hp_ref.hash_pack_ref(x, proj, jnp.zeros((m,)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("t,d,m", [(100, 30, 125), (33, 16, 40)])
+def test_bitsample_pack_matches_core_hashing(t, d, m):
+    key = jax.random.PRNGKey(0)
+    params = hashing.make_bitsample(key, L=3, m=m, d=d, lo=0.0, hi=1.0)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (t, d))
+    # kernel path for table 0
+    got = hp_ops.bitsample_pack(x, params.dims[0], params.thrs[0], d)
+    bits = hashing.signature_bits(params, x)[:, 0]  # (t, m)
+    want = hashing.pack_bits(bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hash_points_kernel_drop_in():
+    key = jax.random.PRNGKey(3)
+    params = hashing.make_bitsample(key, L=4, m=20, d=12, lo=0.0, hi=1.0)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (50, 12))
+    got = hp_ops.hash_points_kernel(params, x)
+    want = hashing.hash_points(params, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_signrp_kernel_drop_in():
+    key = jax.random.PRNGKey(5)
+    params = hashing.make_signrp(key, L=3, m=18, d=10)
+    x = jax.random.normal(jax.random.PRNGKey(6), (40, 10))
+    got = hp_ops.hash_points_kernel(params, x)
+    want = hashing.hash_points(params, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------- flash_attention
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,dh",
+    [
+        (1, 2, 2, 64, 64, 32),
+        (2, 4, 2, 128, 128, 64),
+        (1, 8, 1, 96, 160, 48),  # ragged + GQA 8:1
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(b, hq, hkv, sq, skv, dh, causal):
+    if causal and sq != skv:
+        q_offset = skv - sq
+    else:
+        q_offset = 0
+    keys = jax.random.split(jax.random.PRNGKey(b + sq + dh), 3)
+    q = jax.random.normal(keys[0], (b, hq, sq, dh), jnp.float32)
+    k = jax.random.normal(keys[1], (b, hkv, skv, dh), jnp.float32)
+    v = jax.random.normal(keys[2], (b, hkv, skv, dh), jnp.float32)
+    got = fa_ops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    want = fa_ref.attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_sliding_window(window):
+    keys = jax.random.split(jax.random.PRNGKey(window), 3)
+    b, h, s, dh = 1, 2, 128, 32
+    q = jax.random.normal(keys[0], (b, h, s, dh))
+    k = jax.random.normal(keys[1], (b, h, s, dh))
+    v = jax.random.normal(keys[2], (b, h, s, dh))
+    got = fa_ops.flash_attention(q, k, v, causal=True, window=window)
+    want = fa_ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    b, h, s, dh = 1, 2, 64, 64
+    q = jax.random.normal(keys[0], (b, h, s, dh)).astype(jnp.bfloat16)
+    k = jax.random.normal(keys[1], (b, h, s, dh)).astype(jnp.bfloat16)
+    v = jax.random.normal(keys[2], (b, h, s, dh)).astype(jnp.bfloat16)
+    got = fa_ops.flash_attention(q, k, v, causal=True)
+    want = fa_ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_flash_attention_decode_step():
+    """Sq=1 decode against a long KV cache with q_offset."""
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    b, hq, hkv, skv, dh = 2, 8, 4, 256, 32
+    q = jax.random.normal(keys[0], (b, hq, 1, dh))
+    k = jax.random.normal(keys[1], (b, hkv, skv, dh))
+    v = jax.random.normal(keys[2], (b, hkv, skv, dh))
+    got = fa_ops.flash_attention(q, k, v, causal=True, q_offset=skv - 1)
+    want = fa_ref.attention_ref(q, k, v, causal=True, q_offset=skv - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,55 @@
+"""Hypothesis property sweeps for the Pallas kernels (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.hash_pack import ops as hp_ops
+from repro.kernels.hash_pack import ref as hp_ref
+from repro.kernels.l1_topk import ops as l1_ops
+from repro.kernels.l1_topk import ref as l1_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@given(
+    b=st.integers(1, 6),
+    c=st.integers(1, 80),
+    d=st.integers(1, 40),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=12, deadline=None)
+def test_l1_topk_property(b, c, d, k, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kc, km = jax.random.split(key, 3)
+    q = jax.random.uniform(kq, (b, d))
+    cands = jax.random.uniform(kc, (b, c, d))
+    mask = jax.random.bernoulli(km, 0.7, (b, c))
+    rd, _ = l1_ref.l1_topk_ref(q, cands, mask, k)
+    kd, kp = l1_ops.l1_topk(q, cands, mask, k=k, b_blk=4, c_blk=32)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd), rtol=1e-5, atol=1e-5)
+    # returned positions must be valid and masked-in
+    pos = np.asarray(kp)
+    m = np.asarray(mask)
+    for i in range(b):
+        for j in range(k):
+            if pos[i, j] >= 0:
+                assert m[i, pos[i, j]], (i, j)
+
+
+@given(
+    t=st.integers(1, 64),
+    d=st.integers(1, 48),
+    m=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=12, deadline=None)
+def test_hash_pack_property(t, d, m, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kp = jax.random.split(key)
+    x = jax.random.normal(kx, (t, d))
+    proj = jax.random.normal(kp, (d, m))
+    got = hp_ops.signrp_pack(x, proj, t_blk=32)
+    want = hp_ref.hash_pack_ref(x, proj, jnp.zeros((m,)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

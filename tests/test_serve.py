@@ -1,0 +1,96 @@
+"""Serving-layer tests: batched engine, kNN-LM interpolation, multiprobe."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import hashing, slsh
+from repro.models import api
+from repro.serve import engine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_knn_interpolate_shifts_distribution():
+    vocab = 16
+    logits = jnp.zeros((2, vocab))
+    knn_idx = jnp.asarray([[0, 1, -1], [2, -1, -1]])
+    knn_dist = jnp.asarray([[0.1, 0.2, np.inf], [0.05, np.inf, np.inf]])
+    next_tokens = jnp.asarray([5, 5, 9], jnp.int32)
+    out = engine.knn_interpolate(logits, knn_idx, knn_dist, next_tokens, vocab, lmbda=0.5)
+    p = np.exp(np.asarray(out))
+    p = p / p.sum(-1, keepdims=True)
+    assert p[0].argmax() == 5  # both neighbours vote 5
+    assert p[1].argmax() == 9
+    # no neighbours => base distribution untouched
+    out2 = engine.knn_interpolate(
+        logits, jnp.full((2, 3), -1), jnp.full((2, 3), jnp.inf), next_tokens, vocab
+    )
+    np.testing.assert_allclose(
+        np.exp(np.asarray(out2)) / np.exp(np.asarray(out2)).sum(-1, keepdims=True),
+        np.full((2, vocab), 1 / vocab),
+        rtol=1e-4,
+    )
+
+
+def test_knn_interpolate_lambda_zero_is_identity_distribution():
+    vocab = 8
+    logits = jnp.asarray([[0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0]])
+    out = engine.knn_interpolate(
+        logits, jnp.asarray([[0]]), jnp.asarray([[0.1]]), jnp.asarray([3]), vocab,
+        lmbda=0.0,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jax.nn.softmax(out)), np.asarray(jax.nn.softmax(logits)), rtol=1e-4
+    )
+
+
+def test_multiprobe_keys_contain_base_and_differ():
+    params = hashing.make_bitsample(jax.random.PRNGKey(0), L=4, m=16, d=8, lo=0.0, hi=1.0)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8,))
+    base = hashing.hash_points(params, x[None, :])[:, 0]
+    probes = hashing.probe_keys_bitsample(params, x, n_probes=3)
+    assert probes.shape == (4, 4)
+    np.testing.assert_array_equal(np.asarray(probes[:, 0]), np.asarray(base))
+    # flipped-bit keys differ from the base
+    assert (np.asarray(probes[:, 1:]) != np.asarray(probes[:, :1])).all()
+
+
+def test_multiprobe_recovers_neighbors_with_fewer_tables():
+    """Probing must increase (or keep) candidate counts vs no probing."""
+    key = jax.random.PRNGKey(2)
+    data = jax.random.uniform(key, (512, 8))
+    cfg0 = slsh.SLSHConfig(
+        m_out=14, L_out=4, m_in=6, L_in=2, alpha=0.05, k=5, val_lo=0.0,
+        val_hi=1.0, c_max=32, c_in=8, h_max=2, p_max=64, use_inner=False,
+    )
+    import dataclasses
+
+    cfg2 = dataclasses.replace(cfg0, multiprobe=2)
+    idx0 = slsh.build_index(jax.random.PRNGKey(3), data, cfg0)
+    idx2 = slsh.build_index(jax.random.PRNGKey(3), data, cfg2)
+    q = data[:16] + 0.02 * jax.random.normal(jax.random.PRNGKey(4), (16, 8))
+    r0 = slsh.query_batch(idx0, data, q, cfg0)
+    r2 = slsh.query_batch(idx2, data, q, cfg2)
+    assert float(jnp.mean(r2.comparisons)) >= float(jnp.mean(r0.comparisons))
+    # probed K-NN distances can only improve (superset of candidates)
+    d0 = np.asarray(r0.knn_dist[:, 0])
+    d2 = np.asarray(r2.knn_dist[:, 0])
+    assert (d2 <= d0 + 1e-6).all()
+
+
+def test_serve_engine_batched_requests():
+    cfg = configs.get("granite-8b", smoke=True)
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [
+        engine.Request(rid=i, tokens=rng.integers(0, cfg.vocab, 12), max_new=4)
+        for i in range(3)
+    ]
+    eng = engine.ServeEngine(model, params, max_batch=3, max_len=64)
+    done = eng.serve(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.result) == 4 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.result)
+    assert all(r.latency_s > 0 for r in done)
