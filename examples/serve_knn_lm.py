@@ -8,8 +8,6 @@ next-token histogram is interpolated with the LM distribution.
 
 Run:  PYTHONPATH=src python examples/serve_knn_lm.py
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -75,6 +73,13 @@ reqs = [engine.Request(rid=i, tokens=p, max_new=8) for i, p in enumerate(prompts
 
 
 def run_serve(lmbda: float):
+    # hidden_fn closure: the hook's carrier is the running token tensor here
+    # (ServeEngine instead passes its decode cache as the carrier).
+    hook = engine.make_knn_lm_hook(
+        index, pts_j, jnp.asarray(labs), slsh_cfg, grid,
+        hidden_fn=lambda cur: hidden_states(params, cur)[:, -1],
+        vocab=cfg.vocab, lmbda=lmbda,
+    )
     out_tokens = []
     for r in reqs:
         toks = jnp.asarray(r.tokens, jnp.int32)[None, :]
@@ -83,11 +88,7 @@ def run_serve(lmbda: float):
         gen = []
         for _ in range(r.max_new):
             if lmbda > 0:
-                hq = hidden_states(params, cur)[:, -1]  # (1, D)
-                kd, ki, _ = D.simulate_query(index, pts_j, hq, slsh_cfg, grid)
-                logits = engine.knn_interpolate(
-                    logits, ki, kd, jnp.asarray(labs), cfg.vocab, lmbda=lmbda
-                )
+                logits = hook(logits, cur)
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
             gen.append(int(nxt[0, 0]))
             logits, cache = model.decode_step(params, cache, nxt)

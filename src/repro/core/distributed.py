@@ -18,14 +18,15 @@ Two execution paths share the same per-cell functions:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import hashing, slsh, topk
+from repro.core import hashing, pipeline, slsh, topk
+
+from repro.sharding.ctx import shard_map as _shard_map
 
 # --------------------------------------------------------------------- grid
 
@@ -78,49 +79,18 @@ def cell_build(
 
     The full (L_out, m) hash family is generated from the *root* key on every
     cell and each core keeps rows [core_id*L_loc, ...) — the SPMD form of the
-    Root broadcasting the same family instances to all nodes.
+    Root broadcasting the same family instances to all nodes. The index body
+    itself is the shared ``pipeline.build_from_params`` builder, which takes
+    the pre-sliced params instead of re-creating ``build_index``'s body.
     """
     l_loc = _local_tables(cfg, grid.p)
     d = data_local.shape[1]
-    k_out, k_in = jax.random.split(root_key)
-    full = hashing.make_bitsample(k_out, cfg.L_out, cfg.m_out, d, cfg.val_lo, cfg.val_hi)
+    full, inner_params = pipeline.make_family(root_key, d, cfg)
     rows = core_id * l_loc + jnp.arange(l_loc)
     outer_params = hashing.BitSampleParams(
         full.dims[rows], full.thrs[rows], full.salts[rows]
     )
-    inner_params = hashing.make_signrp(k_in, cfg.L_in, cfg.m_in, d)
-
-    cfg_loc = dataclasses.replace(cfg, L_out=l_loc)
-    # Re-create build_index's body with externally-sliced params.
-    keys = hashing.hash_points_chunked(outer_params, data_local, cfg.build_chunk)
-    from repro.core import tables as T
-
-    outer = T.build_tables(keys)
-    n_loc = data_local.shape[0]
-    alpha_n = jnp.maximum((cfg.alpha * n_loc), 1.0).astype(jnp.int32)
-    heavy = T.find_heavy(outer, alpha_n, cfg.h_max)
-    if cfg.use_inner:
-        def per_table(args):
-            sk_row, si_row, hv_start, hv_size, hv_valid = args
-            return jax.vmap(
-                lambda s, z, v: slsh._build_inner_for_bucket(
-                    inner_params, data_local, si_row, s, z, v, cfg.p_max
-                )
-            )(hv_start, hv_size, hv_valid)
-
-        inner_keys, inner_idx = jax.lax.map(
-            per_table,
-            (outer.sorted_keys, outer.sorted_idx, heavy.start, heavy.size, heavy.valid),
-        )
-    else:
-        from repro.core.tables import PAD_KEY
-
-        inner_keys = jnp.full((l_loc, cfg.h_max, cfg.L_in, cfg.p_max), PAD_KEY)
-        inner_idx = jnp.full((l_loc, cfg.h_max, cfg.L_in, cfg.p_max), -1, jnp.int32)
-    del cfg_loc
-    return slsh.SLSHIndex(
-        outer_params, inner_params, outer, heavy, inner_keys, inner_idx, jnp.int32(n_loc)
-    )
+    return pipeline.build_from_params(data_local, outer_params, inner_params, cfg)
 
 
 class CellResult(NamedTuple):
@@ -137,8 +107,8 @@ def cell_query(
     cfg: slsh.SLSHConfig,
     grid: Grid,
 ) -> CellResult:
-    cfg_loc = dataclasses.replace(cfg, L_out=_local_tables(cfg, grid.p))
-    res = slsh.query_batch(index, data_local, queries, cfg_loc)
+    del grid  # the pipeline derives this cell's table count from the index
+    res = pipeline.query_batch(index, data_local, queries, cfg)
     gidx = jnp.where(res.knn_idx >= 0, res.knn_idx + node_offset, -1)
     return CellResult(res.knn_dist, gidx, res.comparisons)
 
@@ -191,12 +161,8 @@ def dslsh_build(mesh, root_key, data, cfg: slsh.SLSHConfig, grid: Grid):
             lambda: cell_build(root_key, data[: data.shape[0] // grid.nu], jnp.int32(0), cfg, grid)
         ),
     )
-    return jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(), P("data", None)),
-        out_specs=out_specs,
-        check_vma=False,
+    return _shard_map(
+        body, mesh, in_specs=(P(), P("data", None)), out_specs=out_specs
     )(root_key, data)
 
 
@@ -237,9 +203,9 @@ def dslsh_query(
             kd, ki = merge_axis_allgather("data", kd, ki, cfg.k)
         return kd, ki, res.comparisons[None, None]
 
-    qd, qi, comps = jax.shard_map(
+    qd, qi, comps = _shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(
             jax.tree.map(lambda _: P("data", "model"), index),
             P("data", None),
@@ -247,7 +213,6 @@ def dslsh_query(
             P(),
         ),
         out_specs=(P(), P(), P("data", "model")),
-        check_vma=False,
     )(index, data, queries, drop_mask)
     return qd, qi, comps
 

@@ -107,34 +107,42 @@ def hash_points(params: HashParams, x: jax.Array) -> jax.Array:
     return keys.T
 
 
-def probe_keys_bitsample(
-    params: BitSampleParams, x: jax.Array, n_probes: int
+def probe_keys_from_words(
+    params: BitSampleParams, x: jax.Array, words: jax.Array, n_probes: int
 ) -> jax.Array:
-    """Multiprobe keys for one query (beyond-paper, EXPERIMENTS.md §Perf C).
+    """Batched multiprobe keys from precomputed signature words.
 
-    Returns (L, 1 + n_probes) uint32: the base bucket key plus the keys
-    obtained by flipping the ``n_probes`` lowest-margin bits (margin =
-    |x[dim] - thr|, the distance to the quantizer boundary) — the classic
-    multiprobe-LSH heuristic adapted to the bit-sampling family.
+    ``x`` (n, d) and its packed signatures ``words`` (n, L, W) — computed by
+    either compute backend (DESIGN.md §6) — yield (n, L, 1 + n_probes)
+    uint32 keys: the base bucket key first, then the keys obtained by
+    flipping the ``n_probes`` lowest-margin bits (margin = |x[dim] - thr|,
+    the distance to the quantizer boundary) — the classic multiprobe-LSH
+    heuristic adapted to the bit-sampling family.
     """
-    gathered = x[params.dims]  # (L, m)
-    bits = gathered > params.thrs
-    margins = jnp.abs(gathered - params.thrs)  # (L, m)
-    words = pack_bits(bits)  # (L, W)
-    base = mix32(words, params.salts)  # (L,)
+    base = mix32(words, params.salts[None, :])  # (n, L)
     if n_probes == 0:
-        return base[:, None]
-    _, flip_idx = jax.lax.top_k(-margins, n_probes)  # (L, n_probes)
+        return base[..., None]
+    gathered = x[:, params.dims]  # (n, L, m)
+    margins = jnp.abs(gathered - params.thrs[None])  # (n, L, m)
+    _, flip_idx = jax.lax.top_k(-margins, n_probes)  # (n, L, n_probes)
     w_idx = flip_idx // 32
     b_idx = (flip_idx % 32).astype(jnp.uint32)
     n_words = words.shape[-1]
     onehot = (
         jax.nn.one_hot(w_idx, n_words, dtype=jnp.uint32)
         * (jnp.uint32(1) << b_idx)[..., None]
-    )  # (L, n_probes, W)
-    probed = words[:, None, :] ^ onehot
-    keys = mix32(probed, params.salts[:, None])  # (L, n_probes)
-    return jnp.concatenate([base[:, None], keys], axis=1)
+    )  # (n, L, n_probes, W)
+    probed = words[:, :, None, :] ^ onehot
+    keys = mix32(probed, params.salts[None, :, None])  # (n, L, n_probes)
+    return jnp.concatenate([base[..., None], keys], axis=-1)
+
+
+def probe_keys_bitsample(
+    params: BitSampleParams, x: jax.Array, n_probes: int
+) -> jax.Array:
+    """Multiprobe keys for one query x (d,) -> (L, 1 + n_probes) uint32."""
+    words = pack_bits(signature_bits(params, x[None, :]))  # (1, L, W)
+    return probe_keys_from_words(params, x[None, :], words, n_probes)[0]
 
 
 def hash_points_chunked(

@@ -1,0 +1,393 @@
+"""Staged SLSH execution pipeline with pluggable compute backends.
+
+Every index build and query in the repo — single-shard (``slsh.build_index``
+/ ``slsh.query_batch``), distributed (``distributed.cell_build`` /
+``cell_query``), and the serving datastore — runs through this module. The
+per-query hot path is decomposed into four explicit batched stages over a
+query chunk (DESIGN.md §3):
+
+  1. hash    — m-bit signatures for the whole chunk -> outer probe keys
+               (incl. multiprobe bit-flips) + inner-layer keys
+  2. gather  — probe buckets and gather candidates into a dense (Q, C)
+               index tensor (C = L_out * slot, statically shaped)
+  3. dedup   — sort-based static dedup; yields the paper's #comparisons
+  4. top-k   — one masked L1 top-k over the dense (Q, C, d) candidate block
+
+Stages 1 and 4 dispatch on ``SLSHConfig.backend`` (DESIGN.md §6):
+``"reference"`` is pure jnp; ``"pallas"`` routes signatures through the
+``kernels/hash_pack`` fused sign-pack kernel and distances through the
+``kernels/l1_topk`` streaming top-k kernel. Backends are numerically
+equivalent — enforced by tests/test_pipeline_backends.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing, tables, topk
+
+# ------------------------------------------------------------ configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSHConfig:
+    # paper parameters
+    m_out: int = 125
+    L_out: int = 120
+    m_in: int = 65
+    L_in: int = 20
+    alpha: float = 0.005
+    k: int = 10
+    use_inner: bool = True
+    multiprobe: int = 0  # extra low-margin bit-flip probes per outer table
+    # value range for bit-sampling thresholds (mmHg for MAP data)
+    val_lo: float = 0.0
+    val_hi: float = 200.0
+    # static-shape budgets (DESIGN.md §8.4)
+    c_max: int = 128
+    c_in: int = 32
+    h_max: int = 8
+    p_max: int = 512
+    build_chunk: int = 4096
+    query_chunk: int = 64
+    # compute backend for the hash and top-k stages (DESIGN.md §6)
+    backend: str = "reference"
+
+    @property
+    def slot(self) -> int:
+        """Per-outer-table candidate slot width."""
+        outer = (1 + self.multiprobe) * self.c_max
+        return max(outer, self.L_in * self.c_in) if self.use_inner else outer
+
+
+class SLSHIndex(NamedTuple):
+    outer_params: hashing.BitSampleParams
+    inner_params: hashing.SignRPParams
+    outer: tables.TableSet  # (L, n)
+    heavy: tables.HeavyBuckets  # (L, H)
+    inner_keys: jax.Array  # (L, H, L_in, P) uint32 sorted
+    inner_idx: jax.Array  # (L, H, L_in, P) int32 global idx, -1 pad
+    n: jax.Array  # () int32 — points in this shard
+
+
+class QueryResult(NamedTuple):
+    knn_idx: jax.Array  # (..., K) int32, -1 pad
+    knn_dist: jax.Array  # (..., K) float32, inf pad
+    comparisons: jax.Array  # (...,) int32 — unique candidates scanned
+    bucket_total: jax.Array  # (...,) int32 — sum of probed bucket populations
+
+
+# -------------------------------------------------------- backend dispatch
+
+
+class BackendOps(NamedTuple):
+    """The contract a compute backend implements (DESIGN.md §6).
+
+    signature_words
+        ``(params, x (n, d)) -> (n, L, W) uint32`` packed m-bit signatures
+        for every table of the family; must equal
+        ``hashing.pack_bits(hashing.signature_bits(params, x))`` exactly
+        (bucket keys are derived from these words, so any mismatch silently
+        changes candidate sets).
+    l1_topk
+        ``(q (Q, d), cands (Q, C, d), mask (Q, C), k) -> (dist, pos)`` with
+        ``dist (Q, k)`` ascending (inf-padded) and ``pos (Q, k)`` positions
+        into C (-1 where fewer than k valid candidates).
+    """
+
+    signature_words: Callable[..., jax.Array]
+    l1_topk: Callable[..., tuple[jax.Array, jax.Array]]
+
+
+_BACKENDS: dict[str, BackendOps] = {}
+
+
+def register_backend(name: str, ops: BackendOps) -> None:
+    _BACKENDS[name] = ops
+
+
+def get_backend(name: str) -> BackendOps:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown SLSH backend {name!r}; registered: {sorted(_BACKENDS)}"
+        ) from None
+
+
+def _ref_signature_words(params: hashing.HashParams, x: jax.Array) -> jax.Array:
+    return hashing.pack_bits(hashing.signature_bits(params, x))
+
+
+def _pallas_signature_words(params: hashing.HashParams, x: jax.Array) -> jax.Array:
+    from repro.kernels.hash_pack import ops as hp_ops
+
+    return hp_ops.signature_words_kernel(params, x)
+
+
+def _pallas_l1_topk(q, cands, mask, k):
+    from repro.kernels.l1_topk import ops as l1_ops
+
+    return l1_ops.l1_topk(q, cands, mask, k=k)
+
+
+register_backend("reference", BackendOps(_ref_signature_words, topk.masked_l1_topk_batch))
+register_backend("pallas", BackendOps(_pallas_signature_words, _pallas_l1_topk))
+
+
+# ------------------------------------------------------------------- build
+
+
+def make_family(key: jax.Array, d: int, cfg: SLSHConfig):
+    """The full (outer, inner) hash family for dimensionality ``d``.
+
+    Both the single-shard and the distributed builders derive their params
+    from this one function, so a shared PRNG key reproduces the paper Root's
+    broadcast of identical family instances to every node.
+    """
+    k_out, k_in = jax.random.split(key)
+    outer = hashing.make_bitsample(k_out, cfg.L_out, cfg.m_out, d, cfg.val_lo, cfg.val_hi)
+    # Inner family instances are shared across heavy buckets (independent
+    # across the L_in tables) — see DESIGN.md §8.5; per-bucket instances
+    # would cost (L_out*H*L_in*d*m_in) floats with no semantic gain.
+    inner = hashing.make_signrp(k_in, cfg.L_in, cfg.m_in, d)
+    return outer, inner
+
+
+def hash_keys(
+    params: hashing.HashParams, x: jax.Array, backend: BackendOps
+) -> jax.Array:
+    """Bucket keys for all tables: x (n, d) -> (n, L) uint32."""
+    words = backend.signature_words(params, x)  # (n, L, W)
+    return hashing.mix32(words, params.salts[None, :])
+
+
+def _chunked_map(fn, x: jax.Array, chunk: int):
+    """lax.map ``fn`` over row-chunks of ``x`` (n, d); results re-stacked to
+    leading dim n (any pytree of (chunk, ...) outputs)."""
+    n = x.shape[0]
+    chunk = min(chunk, n)
+    n_chunks = (n + chunk - 1) // chunk
+    pad = n_chunks * chunk - n
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    res = jax.lax.map(fn, xp.reshape((n_chunks, chunk) + x.shape[1:]))
+    return jax.tree.map(
+        lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:])[:n], res
+    )
+
+
+def hash_keys_chunked(
+    params: hashing.HashParams, x: jax.Array, chunk: int, backend: BackendOps
+) -> jax.Array:
+    """Memory-bounded build hashing: x (n, d) -> (L, n) uint32."""
+    return _chunked_map(lambda c: hash_keys(params, c, backend), x, chunk).T
+
+
+def _build_inner_for_bucket(
+    inner_params: hashing.SignRPParams,
+    data: jax.Array,
+    sorted_idx_row: jax.Array,
+    start: jax.Array,
+    size: jax.Array,
+    valid: jax.Array,
+    p_max: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Inner LSH tables over one heavy bucket's (capped) population."""
+    offs = start + jnp.arange(p_max, dtype=jnp.int32)
+    in_pop = (jnp.arange(p_max) < size) & valid
+    gidx = jnp.where(in_pop, sorted_idx_row[jnp.clip(offs, 0, sorted_idx_row.shape[0] - 1)], -1)
+    pts = data[jnp.clip(gidx, 0, data.shape[0] - 1)]  # (P, d), garbage where pad
+    keys = hashing.hash_points(inner_params, pts)  # (L_in, P)
+    keys = jnp.where(in_pop[None, :], keys, tables.PAD_KEY)
+    gidx_b = jnp.broadcast_to(gidx, keys.shape)
+    sk, si = jax.vmap(lambda k, i: jax.lax.sort((k, i), num_keys=1))(keys, gidx_b)
+    return sk, si
+
+
+def _build_inner(
+    inner_params: hashing.SignRPParams,
+    data: jax.Array,
+    outer: tables.TableSet,
+    heavy: tables.HeavyBuckets,
+    cfg: SLSHConfig,
+) -> tuple[jax.Array, jax.Array]:
+    def per_table(args):
+        si_row, hv_start, hv_size, hv_valid = args
+        return jax.vmap(
+            lambda s, z, v: _build_inner_for_bucket(
+                inner_params, data, si_row, s, z, v, cfg.p_max
+            )
+        )(hv_start, hv_size, hv_valid)
+
+    return jax.lax.map(
+        per_table, (outer.sorted_idx, heavy.start, heavy.size, heavy.valid)
+    )
+
+
+def build_from_params(
+    data: jax.Array,
+    outer_params: hashing.BitSampleParams,
+    inner_params: hashing.SignRPParams,
+    cfg: SLSHConfig,
+) -> SLSHIndex:
+    """Shared index builder for the single-shard and distributed paths.
+
+    ``outer_params`` may be a row-slice of a larger family (each distributed
+    core slices its L_out/p tables out of the root broadcast family); the
+    table count is taken from the params, never from ``cfg.L_out``.
+    """
+    n = data.shape[0]
+    backend = get_backend(cfg.backend)
+    l_out = outer_params.salts.shape[0]
+    keys = hash_keys_chunked(outer_params, data, cfg.build_chunk, backend)
+    outer = tables.build_tables(keys)
+    alpha_n = jnp.maximum(jnp.int32(cfg.alpha * n), 1)
+    heavy = tables.find_heavy(outer, alpha_n, cfg.h_max)
+    if cfg.use_inner:
+        inner_keys, inner_idx = _build_inner(inner_params, data, outer, heavy, cfg)
+    else:
+        inner_keys = jnp.full((l_out, cfg.h_max, cfg.L_in, cfg.p_max), tables.PAD_KEY)
+        inner_idx = jnp.full((l_out, cfg.h_max, cfg.L_in, cfg.p_max), -1, jnp.int32)
+    return SLSHIndex(
+        outer_params, inner_params, outer, heavy, inner_keys, inner_idx, jnp.int32(n)
+    )
+
+
+# ------------------------------------------------------------ query stages
+
+
+def _stage_hash(
+    index: SLSHIndex, queries: jax.Array, cfg: SLSHConfig, backend: BackendOps
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 — signatures for the whole chunk.
+
+    Returns outer probe keys (Q, L, 1 + multiprobe) and inner-layer keys
+    (Q, L_in) (zeros when the inner layer is disabled).
+    """
+    words = backend.signature_words(index.outer_params, queries)  # (Q, L, W)
+    probe_keys = hashing.probe_keys_from_words(
+        index.outer_params, queries, words, cfg.multiprobe
+    )
+    if cfg.use_inner:
+        inner_keys = hash_keys(index.inner_params, queries, backend)  # (Q, L_in)
+    else:
+        inner_keys = jnp.zeros((queries.shape[0], cfg.L_in), jnp.uint32)
+    return probe_keys, inner_keys
+
+
+def _gather_one_table(
+    index: SLSHIndex,
+    cfg: SLSHConfig,
+    l: jax.Array,
+    q_probe_keys: jax.Array,  # (1 + multiprobe,) base key first
+    q_in_keys: jax.Array,  # (L_in,)
+) -> tuple[jax.Array, jax.Array]:
+    """Candidate indices (slot,) for one outer table; -1 where masked.
+
+    Also returns the base-bucket population (for stats).
+    """
+    sk_row = index.outer.sorted_keys[l]
+    si_row = index.outer.sorted_idx[l]
+    q_key = q_probe_keys[0]
+    lo, hi = tables.bucket_range(sk_row, q_key)
+    bucket_sz = hi - lo
+
+    def probe(key):
+        plo, phi = tables.bucket_range(sk_row, key)
+        return tables.gather_bucket(si_row, plo, phi, cfg.c_max)
+
+    outer_cand = jax.vmap(probe)(q_probe_keys).reshape(-1)
+    slot = cfg.slot
+    outer_cand = jnp.pad(
+        outer_cand, (0, slot - outer_cand.shape[0]), constant_values=-1
+    )
+
+    if not cfg.use_inner:
+        return outer_cand, bucket_sz
+
+    # Is this bucket stratified? Match against the heavy-bucket registry.
+    hk = index.heavy.keys[l]
+    match = (hk == q_key) & index.heavy.valid[l]
+    found = jnp.any(match)
+    h = jnp.argmax(match)
+
+    def inner_one(li):
+        ik = index.inner_keys[l, h, li]
+        ii = index.inner_idx[l, h, li]
+        lo2, hi2 = tables.bucket_range(ik, q_in_keys[li])
+        return tables.gather_bucket(ii, lo2, hi2, cfg.c_in)
+
+    inner_cand = jax.vmap(inner_one)(jnp.arange(cfg.L_in)).reshape(-1)
+    inner_cand = jnp.pad(inner_cand, (0, slot - cfg.L_in * cfg.c_in), constant_values=-1)
+
+    return jnp.where(found, inner_cand, outer_cand), bucket_sz
+
+
+def _stage_gather(
+    index: SLSHIndex,
+    cfg: SLSHConfig,
+    probe_keys: jax.Array,  # (Q, L, 1 + multiprobe)
+    inner_keys: jax.Array,  # (Q, L_in)
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 2 — dense candidate tensor (Q, L*slot) + probed bucket sizes."""
+    l_out = index.outer.sorted_keys.shape[0]
+
+    def per_query(pk, qik):
+        cand, bucket_sz = jax.vmap(
+            lambda l, k: _gather_one_table(index, cfg, l, k, qik)
+        )(jnp.arange(l_out), pk)
+        return cand.reshape(-1), jnp.sum(bucket_sz)
+
+    return jax.vmap(per_query)(probe_keys, inner_keys)
+
+
+def _stage_dedup(cand: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage 3 — static dedup: sort each row; first occurrence survives."""
+    cand_sorted = jnp.sort(cand, axis=-1)
+    uniq = jnp.concatenate(
+        [cand_sorted[:, :1] >= 0, cand_sorted[:, 1:] != cand_sorted[:, :-1]],
+        axis=-1,
+    ) & (cand_sorted >= 0)
+    comparisons = jnp.sum(uniq.astype(jnp.int32), axis=-1)
+    return cand_sorted, uniq, comparisons
+
+
+def _stage_topk(
+    data: jax.Array,
+    queries: jax.Array,
+    cand_sorted: jax.Array,  # (Q, C)
+    uniq: jax.Array,  # (Q, C)
+    cfg: SLSHConfig,
+    backend: BackendOps,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 4 — one masked L1 top-k over the dense (Q, C, d) block."""
+    pts = data[jnp.clip(cand_sorted, 0, data.shape[0] - 1)]  # (Q, C, d)
+    kd, pos = backend.l1_topk(queries, pts, uniq, cfg.k)
+    ki = jnp.where(
+        pos >= 0, jnp.take_along_axis(cand_sorted, jnp.maximum(pos, 0), axis=-1), -1
+    )
+    return kd, ki
+
+
+def query_chunk(
+    index: SLSHIndex, data: jax.Array, queries: jax.Array, cfg: SLSHConfig
+) -> QueryResult:
+    """Run the four stages for one (Q, d) chunk of queries."""
+    backend = get_backend(cfg.backend)
+    probe_keys, inner_keys = _stage_hash(index, queries, cfg, backend)
+    cand, bucket_total = _stage_gather(index, cfg, probe_keys, inner_keys)
+    cand_sorted, uniq, comparisons = _stage_dedup(cand)
+    kd, ki = _stage_topk(data, queries, cand_sorted, uniq, cfg, backend)
+    return QueryResult(ki, kd, comparisons, bucket_total)
+
+
+def query_batch(
+    index: SLSHIndex, data: jax.Array, queries: jax.Array, cfg: SLSHConfig
+) -> QueryResult:
+    """Chunked pipeline over queries -> stacked QueryResult (Q, ...)."""
+    return _chunked_map(
+        lambda qs: query_chunk(index, data, qs, cfg), queries, cfg.query_chunk
+    )

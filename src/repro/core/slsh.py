@@ -6,222 +6,41 @@ Static-shape budgets (see DESIGN.md §8.4):
   C_in   candidates gathered per inner table probe,
   H_max  heavy buckets indexed per outer table,
   P_max  inner-layer population cap per heavy bucket.
+
+This module is the single-shard façade: all build and query execution lives
+in the staged, backend-dispatched pipeline (``core/pipeline.py``, DESIGN.md
+§3/§6). ``distributed.cell_build``/``cell_query`` call the same pipeline, so
+a config's ``backend`` choice applies uniformly across execution paths.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import hashing, tables, topk
-
-
-@dataclasses.dataclass(frozen=True)
-class SLSHConfig:
-    # paper parameters
-    m_out: int = 125
-    L_out: int = 120
-    m_in: int = 65
-    L_in: int = 20
-    alpha: float = 0.005
-    k: int = 10
-    use_inner: bool = True
-    multiprobe: int = 0  # extra low-margin bit-flip probes per outer table
-    # value range for bit-sampling thresholds (mmHg for MAP data)
-    val_lo: float = 0.0
-    val_hi: float = 200.0
-    # static-shape budgets
-    c_max: int = 128
-    c_in: int = 32
-    h_max: int = 8
-    p_max: int = 512
-    build_chunk: int = 4096
-    query_chunk: int = 64
-
-    @property
-    def slot(self) -> int:
-        """Per-outer-table candidate slot width."""
-        outer = (1 + self.multiprobe) * self.c_max
-        return max(outer, self.L_in * self.c_in) if self.use_inner else outer
-
-
-class SLSHIndex(NamedTuple):
-    outer_params: hashing.BitSampleParams
-    inner_params: hashing.SignRPParams
-    outer: tables.TableSet  # (L_out, n)
-    heavy: tables.HeavyBuckets  # (L_out, H)
-    inner_keys: jax.Array  # (L_out, H, L_in, P) uint32 sorted
-    inner_idx: jax.Array  # (L_out, H, L_in, P) int32 global idx, -1 pad
-    n: jax.Array  # () int32 — points in this shard
-
-
-def _build_inner_for_bucket(
-    inner_params: hashing.SignRPParams,
-    data: jax.Array,
-    sorted_idx_row: jax.Array,
-    start: jax.Array,
-    size: jax.Array,
-    valid: jax.Array,
-    p_max: int,
-) -> tuple[jax.Array, jax.Array]:
-    """Inner LSH tables over one heavy bucket's (capped) population."""
-    offs = start + jnp.arange(p_max, dtype=jnp.int32)
-    in_pop = (jnp.arange(p_max) < size) & valid
-    gidx = jnp.where(in_pop, sorted_idx_row[jnp.clip(offs, 0, sorted_idx_row.shape[0] - 1)], -1)
-    pts = data[jnp.clip(gidx, 0, data.shape[0] - 1)]  # (P, d), garbage where pad
-    keys = hashing.hash_points(inner_params, pts)  # (L_in, P)
-    keys = jnp.where(in_pop[None, :], keys, tables.PAD_KEY)
-    gidx_b = jnp.broadcast_to(gidx, keys.shape)
-    sk, si = jax.vmap(lambda k, i: jax.lax.sort((k, i), num_keys=1))(keys, gidx_b)
-    return sk, si
+from repro.core import pipeline
+from repro.core.pipeline import (  # noqa: F401  (re-exported public API)
+    QueryResult,
+    SLSHConfig,
+    SLSHIndex,
+)
 
 
 def build_index(key: jax.Array, data: jax.Array, cfg: SLSHConfig) -> SLSHIndex:
     """Build a stratified LSH index over ``data`` (n, d)."""
-    n, d = data.shape
-    k_out, k_in = jax.random.split(key)
-    outer_params = hashing.make_bitsample(
-        k_out, cfg.L_out, cfg.m_out, d, cfg.val_lo, cfg.val_hi
-    )
-    # Inner family instances are shared across heavy buckets (independent
-    # across the L_in tables) — see DESIGN.md §8; per-bucket instances would
-    # cost (L_out*H*L_in*d*m_in) floats with no semantic gain for SLSH.
-    inner_params = hashing.make_signrp(k_in, cfg.L_in, cfg.m_in, d)
-
-    keys = hashing.hash_points_chunked(outer_params, data, cfg.build_chunk)
-    outer = tables.build_tables(keys)
-    alpha_n = jnp.maximum(jnp.int32(cfg.alpha * n), 1)
-    heavy = tables.find_heavy(outer, alpha_n, cfg.h_max)
-
-    if cfg.use_inner:
-        def per_table(args):
-            sk_row, si_row, hv = args
-            return jax.vmap(
-                lambda s, z, v: _build_inner_for_bucket(
-                    inner_params, data, si_row, s, z, v, cfg.p_max
-                )
-            )(hv.start, hv.size, hv.valid)
-
-        inner_keys, inner_idx = jax.lax.map(
-            per_table,
-            (
-                outer.sorted_keys,
-                outer.sorted_idx,
-                jax.tree.map(lambda a: a, heavy),
-            ),
-        )
-    else:
-        inner_keys = jnp.full((cfg.L_out, cfg.h_max, cfg.L_in, cfg.p_max), tables.PAD_KEY)
-        inner_idx = jnp.full((cfg.L_out, cfg.h_max, cfg.L_in, cfg.p_max), -1, jnp.int32)
-
-    return SLSHIndex(
-        outer_params,
-        inner_params,
-        outer,
-        heavy,
-        inner_keys,
-        inner_idx,
-        jnp.int32(n),
-    )
-
-
-def _candidates_one_table(
-    index: SLSHIndex,
-    cfg: SLSHConfig,
-    l: jax.Array,
-    q_probe_keys: jax.Array,  # (1 + multiprobe,) base key first
-    q_in_keys: jax.Array,
-) -> tuple[jax.Array, jax.Array]:
-    """Candidate indices (slot,) for one outer table; -1 where masked.
-
-    Also returns the base-bucket population (for stats).
-    """
-    sk_row = index.outer.sorted_keys[l]
-    si_row = index.outer.sorted_idx[l]
-    q_key = q_probe_keys[0]
-    lo, hi = tables.bucket_range(sk_row, q_key)
-    bucket_sz = hi - lo
-
-    def probe(key):
-        plo, phi = tables.bucket_range(sk_row, key)
-        return tables.gather_bucket(si_row, plo, phi, cfg.c_max)
-
-    outer_cand = jax.vmap(probe)(q_probe_keys).reshape(-1)
-    slot = cfg.slot
-    outer_cand = jnp.pad(
-        outer_cand, (0, slot - outer_cand.shape[0]), constant_values=-1
-    )
-
-    if not cfg.use_inner:
-        return outer_cand, bucket_sz
-
-    # Is this bucket stratified? Match against the heavy-bucket registry.
-    hk = index.heavy.keys[l]
-    match = (hk == q_key) & index.heavy.valid[l]
-    found = jnp.any(match)
-    h = jnp.argmax(match)
-
-    def inner_one(li):
-        ik = index.inner_keys[l, h, li]
-        ii = index.inner_idx[l, h, li]
-        lo2, hi2 = tables.bucket_range(ik, q_in_keys[li])
-        return tables.gather_bucket(ii, lo2, hi2, cfg.c_in)
-
-    inner_cand = jax.vmap(inner_one)(jnp.arange(cfg.L_in)).reshape(-1)
-    inner_cand = jnp.pad(inner_cand, (0, slot - cfg.L_in * cfg.c_in), constant_values=-1)
-
-    return jnp.where(found, inner_cand, outer_cand), bucket_sz
-
-
-class QueryResult(NamedTuple):
-    knn_idx: jax.Array  # (K,) int32, -1 pad
-    knn_dist: jax.Array  # (K,) float32, inf pad
-    comparisons: jax.Array  # () int32 — unique candidates scanned
-    bucket_total: jax.Array  # () int32 — sum of probed bucket populations
+    _, d = data.shape
+    outer_params, inner_params = pipeline.make_family(key, d, cfg)
+    return pipeline.build_from_params(data, outer_params, inner_params, cfg)
 
 
 def query_index(
     index: SLSHIndex, data: jax.Array, q: jax.Array, cfg: SLSHConfig
 ) -> QueryResult:
     """Resolve one query against a single-shard index (paper Fig. 2 path)."""
-    q_keys = hashing.probe_keys_bitsample(
-        index.outer_params, q, cfg.multiprobe
-    )  # (L_out, 1 + multiprobe)
-    q_in = hashing.hash_points(index.inner_params, q[None, :])[:, 0]  # (L_in,)
-
-    cand, bucket_sz = jax.vmap(
-        lambda l, qk: _candidates_one_table(index, cfg, l, qk, q_in)
-    )(jnp.arange(cfg.L_out), q_keys)
-    cand = cand.reshape(-1)  # (L_out * slot,)
-
-    # Static dedup: sort indices; first occurrence of each valid idx survives.
-    cand_sorted = jnp.sort(cand)
-    uniq = jnp.concatenate(
-        [cand_sorted[:1] >= 0, cand_sorted[1:] != cand_sorted[:-1]]
-    ) & (cand_sorted >= 0)
-    comparisons = jnp.sum(uniq.astype(jnp.int32))
-
-    pts = data[jnp.clip(cand_sorted, 0, data.shape[0] - 1)]
-    dists = topk.l1_distances(q, pts)
-    dists = jnp.where(uniq, dists, jnp.inf)
-    kd, ki = topk.masked_topk_smallest(dists, cand_sorted, cfg.k)
-    return QueryResult(ki, kd, comparisons, jnp.sum(bucket_sz))
+    res = pipeline.query_chunk(index, data, q[None, :], cfg)
+    return jax.tree.map(lambda a: a[0], res)
 
 
 def query_batch(
     index: SLSHIndex, data: jax.Array, queries: jax.Array, cfg: SLSHConfig
 ) -> QueryResult:
-    """Chunked vmap over queries -> stacked QueryResult (Q, ...)."""
-    nq = queries.shape[0]
-    chunk = min(cfg.query_chunk, nq)
-    n_chunks = (nq + chunk - 1) // chunk
-    pad = n_chunks * chunk - nq
-    qp = jnp.pad(queries, ((0, pad), (0, 0)))
-    qc = qp.reshape(n_chunks, chunk, -1)
-    res = jax.lax.map(
-        lambda qs: jax.vmap(lambda q: query_index(index, data, q, cfg))(qs), qc
-    )
-    res = jax.tree.map(lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:])[:nq], res)
-    return res
+    """Chunked staged pipeline over queries -> stacked QueryResult (Q, ...)."""
+    return pipeline.query_batch(index, data, queries, cfg)

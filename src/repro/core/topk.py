@@ -38,6 +38,24 @@ def l1_distances(q: jax.Array, pts: jax.Array) -> jax.Array:
     return jnp.sum(jnp.abs(pts - q[None, :]), axis=-1)
 
 
+def masked_l1_topk_batch(
+    q: jax.Array, cands: jax.Array, mask: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Reference backend for the pipeline's distance/top-k stage.
+
+    q: (Q, d); cands: (Q, C, d); mask: (Q, C) bool (False = padded slot).
+    Returns dists (Q, k) ascending (inf where fewer than k valid) and
+    positions (Q, k) into C (-1 pad) — the same contract the Pallas
+    ``kernels/l1_topk`` op implements (DESIGN.md §6).
+    """
+    dists = jnp.sum(jnp.abs(cands - q[:, None, :]), axis=-1)
+    dists = jnp.where(mask, dists, INF)
+    pos = jnp.broadcast_to(
+        jnp.arange(dists.shape[1], dtype=jnp.int32), dists.shape
+    )
+    return jax.vmap(lambda dd, pp: masked_topk_smallest(dd, pp, k))(dists, pos)
+
+
 def cosine_distances(q: jax.Array, pts: jax.Array) -> jax.Array:
     qn = q / (jnp.linalg.norm(q) + 1e-9)
     pn = pts / (jnp.linalg.norm(pts, axis=-1, keepdims=True) + 1e-9)

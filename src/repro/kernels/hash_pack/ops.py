@@ -56,12 +56,14 @@ def bitsample_pack(
     return out[:t, : (m + 31) // 32]
 
 
-def hash_points_kernel(
+def signature_words_kernel(
     params, x: jax.Array, *, interpret: bool = True
 ) -> jax.Array:
-    """Drop-in replacement for ``hashing.hash_points`` using the kernel.
+    """Packed signature words for all tables of a family via the kernel.
 
-    Returns (L, n) uint32 bucket keys (same semantics incl. the FNV mix).
+    x: (n, d) -> (n, L, W) uint32 — the kernel-backed implementation of the
+    pipeline backend contract (DESIGN.md §6); bit-for-bit equal to
+    ``hashing.pack_bits(hashing.signature_bits(params, x))``.
     """
     if isinstance(params, hashing.BitSampleParams):
         words = jax.vmap(
@@ -73,5 +75,15 @@ def hash_points_kernel(
         words = jax.vmap(
             lambda p: signrp_pack(x, p, interpret=interpret)
         )(params.proj)  # (L, n, W)
-    keys = hashing.mix32(words, params.salts[:, None])
-    return keys
+    return jnp.moveaxis(words, 0, 1)
+
+
+def hash_points_kernel(
+    params, x: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """Drop-in replacement for ``hashing.hash_points`` using the kernel.
+
+    Returns (L, n) uint32 bucket keys (same semantics incl. the FNV mix).
+    """
+    words = signature_words_kernel(params, x, interpret=interpret)  # (n, L, W)
+    return hashing.mix32(words, params.salts[None, :]).T

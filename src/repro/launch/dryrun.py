@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.launch.mesh import make_production_mesh
 from repro.models import api
+from repro.runtime.compat import cost_analysis_dict
 from repro.optim import adamw
 from repro.sharding import ctx
 from repro.train import loop as train_loop
@@ -128,7 +129,7 @@ def run_cell(arch_id: str, cell: str, multi_pod: bool, out_dir: str) -> dict:
             compiled = lowered.compile()
             t2 = time.time()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis_dict(compiled)
             hlo = compiled.as_text()
             coll = collective_bytes(hlo)
         rec.update(

@@ -5,18 +5,22 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kwargs(n: int) -> dict:
+    # jax >= 0.6 wants explicit Auto axis types; 0.4.x has no AxisType.
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n}
+    return {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small host-device mesh for tests/examples (requires enough devices)."""
     return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        (data, model), ("data", "model"), **_axis_types_kwargs(2)
     )

@@ -1,0 +1,19 @@
+"""Version-portability helpers for jax API differences.
+
+Import-safe from anywhere (no device or env side effects); the shard_map /
+mesh shims live with their substrates (``sharding/ctx.py``,
+``launch/mesh.py``).
+"""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on every jax version.
+
+    jax 0.4.x returns a list with one dict per computation; newer jax
+    returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    return cost

@@ -89,22 +89,42 @@ class ServeEngine:
         return 0 if leaf.ndim == 1 else 1
 
 
-def knn_lm_hook(datastore, labels, slsh_cfg, grid, lmbda: float = 0.25, vocab: int = 0):
-    """SLSH-kNN-LM: interpolate LM logits with a distribution over the next
-    tokens of the K nearest hidden states (Khandelwal et al., adapted to
-    DSLSH retrieval). ``datastore``: prebuilt simulate_build index over
-    hidden-state keys; ``labels``: the next-token for each datastore entry.
+def make_knn_lm_hook(
+    index,
+    datastore_points: jax.Array,
+    next_tokens: jax.Array,
+    slsh_cfg,
+    grid,
+    *,
+    hidden_fn: Callable[[Any], jax.Array],
+    vocab: int,
+    lmbda: float = 0.25,
+    temperature: float = 1.0,
+) -> Callable[[jax.Array, Any], jax.Array]:
+    """SLSH-kNN-LM logits hook: interpolate LM logits with a distribution
+    over the next tokens of the K nearest hidden states (Khandelwal et al.,
+    adapted to DSLSH retrieval).
+
+    ``index`` is a prebuilt ``simulate_build`` index over the hidden-state
+    keys ``datastore_points``; ``next_tokens`` holds each entry's label.
+    ``hidden_fn(carrier) -> (B, d)`` extracts the query hidden states from
+    whatever the caller passes as the hook's second argument. NOTE: the
+    stock ``ServeEngine`` passes its decode cache, which holds only
+    {k, v, len} — no hidden states — so with that engine ``hidden_fn``
+    must derive the query from state it closes over (e.g. the running
+    tokens, as in examples/serve_knn_lm.py), or the model's cache must be
+    extended to expose the final hidden state. Retrieval runs the staged
+    SLSH pipeline, so the reference-vs-pallas choice rides on
+    ``slsh_cfg.backend`` (DESIGN.md §5/§6).
     """
     from repro.core import distributed as D
 
-    index, keys_data = datastore
-
-    def hook(logits: jax.Array, cache) -> jax.Array:
-        # query = final hidden state is not exposed through cache; the engine
-        # passes logits only, so we approximate the query with the top-logit
-        # embedding row — the serve example instead wires the hook with
-        # explicit hidden states via closure. Kept generic here.
-        return logits
+    def hook(logits: jax.Array, carrier) -> jax.Array:
+        hq = hidden_fn(carrier)  # (B, d)
+        kd, ki, _ = D.simulate_query(index, datastore_points, hq, slsh_cfg, grid)
+        return knn_interpolate(
+            logits, ki, kd, next_tokens, vocab, lmbda, temperature
+        )
 
     return hook
 

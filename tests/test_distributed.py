@@ -144,8 +144,8 @@ def test_shard_map_matches_simulation_8dev():
         key = jax.random.PRNGKey(0)
         data = jax.random.uniform(jax.random.PRNGKey(1), (512, 12))
         q = data[:10]
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(2, 4)
         idx = D.dslsh_build(mesh, key, data, cfg, grid)
         kd, ki, comps = D.dslsh_query(mesh, idx, data, q, cfg, grid)
         kdt, kit, _ = D.dslsh_query(mesh, idx, data, q, cfg, grid, reducer="tree")

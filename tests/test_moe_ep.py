@@ -34,8 +34,8 @@ def test_moe_ep_matches_local_8dev():
         out_ref, aux_ref = moe.moe_apply(lp, x, cfg)
 
         # expert-parallel over an 8-way model axis
-        mesh = jax.make_mesh((1, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(1, 8)
         with ctx.use_mesh(mesh):
             out_ep, aux_ep = jax.jit(lambda lp, x: moe.moe_apply(lp, x, cfg))(lp, x)
         # bf16 collectives => loose-ish tolerance; semantics must match
@@ -86,8 +86,8 @@ def test_cp_decode_attention_matches_local_8dev():
 
         ref = C.decode_attention_cp(q, kc, vc, cur)  # no mesh: local path
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(2, 4)
         with ctx.use_mesh(mesh):
             got = jax.jit(lambda *a: C.decode_attention_cp(*a))(q, kc, vc, cur)
         np.testing.assert_allclose(

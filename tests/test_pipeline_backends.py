@@ -1,0 +1,166 @@
+"""Backend-equivalence tests for the staged SLSH pipeline (DESIGN.md §6).
+
+``backend="pallas"`` (interpret mode on CPU) must match
+``backend="reference"`` bit-for-bit: identical bucket keys out of
+``build_index`` and identical top-k results out of ``query_batch`` —
+including multiprobe and ``use_inner=False`` configs. Also pins the shared
+builder: ``cell_build`` on a 1x1 grid must equal ``build_index`` exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed as D
+from repro.core import pipeline, slsh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(**kw):
+    base = dict(
+        m_out=12, L_out=8, m_in=8, L_in=4, alpha=0.02, k=10,
+        val_lo=0.0, val_hi=1.0, c_max=64, c_in=16, h_max=4, p_max=128,
+        build_chunk=200, query_chunk=16,
+    )
+    base.update(kw)
+    return slsh.SLSHConfig(**base)
+
+
+def _data(n=512, d=12, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (n, d))
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+CONFIG_VARIANTS = [
+    pytest.param({}, id="inner"),
+    pytest.param({"use_inner": False}, id="no_inner"),
+    pytest.param({"multiprobe": 2}, id="inner+multiprobe"),
+    pytest.param({"multiprobe": 2, "use_inner": False}, id="no_inner+multiprobe"),
+]
+
+
+@pytest.mark.parametrize("kw", CONFIG_VARIANTS)
+def test_build_index_backends_identical(kw):
+    """Pallas and reference builds must produce identical indices."""
+    data = _data()
+    cfg_r = _cfg(**kw)
+    cfg_p = dataclasses.replace(cfg_r, backend="pallas")
+    idx_r = slsh.build_index(jax.random.PRNGKey(1), data, cfg_r)
+    idx_p = slsh.build_index(jax.random.PRNGKey(1), data, cfg_p)
+    _assert_trees_equal(idx_r, idx_p)
+
+
+@pytest.mark.parametrize("kw", CONFIG_VARIANTS)
+def test_query_batch_backends_identical(kw):
+    """Same index, both query backends: identical top-k and metrics."""
+    data = _data()
+    cfg_r = _cfg(**kw)
+    cfg_p = dataclasses.replace(cfg_r, backend="pallas")
+    idx = slsh.build_index(jax.random.PRNGKey(1), data, cfg_r)
+    q = data[:24] + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (24, 12))
+    res_r = slsh.query_batch(idx, data, q, cfg_r)
+    res_p = slsh.query_batch(idx, data, q, cfg_p)
+    np.testing.assert_array_equal(np.asarray(res_r.knn_idx), np.asarray(res_p.knn_idx))
+    np.testing.assert_array_equal(np.asarray(res_r.knn_dist), np.asarray(res_p.knn_dist))
+    np.testing.assert_array_equal(
+        np.asarray(res_r.comparisons), np.asarray(res_p.comparisons)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res_r.bucket_total), np.asarray(res_p.bucket_total)
+    )
+
+
+def test_query_index_matches_query_batch_row():
+    """The single-query path is the batched pipeline with Q=1."""
+    data = _data()
+    cfg = _cfg()
+    idx = slsh.build_index(jax.random.PRNGKey(1), data, cfg)
+    res_b = slsh.query_batch(idx, data, data[:4], cfg)
+    for i in range(4):
+        res_1 = slsh.query_index(idx, data, data[i], cfg)
+        np.testing.assert_array_equal(
+            np.asarray(res_1.knn_idx), np.asarray(res_b.knn_idx[i])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res_1.knn_dist), np.asarray(res_b.knn_dist[i])
+        )
+
+
+def test_cell_build_matches_build_index_p1():
+    """One shared builder: the p=1 distributed cell equals the single-shard
+    index field-for-field (no duplicated build body to drift)."""
+    data = _data(n=256)
+    cfg = _cfg()
+    grid = D.Grid(nu=1, p=1)
+    a = slsh.build_index(jax.random.PRNGKey(0), data, cfg)
+    b = D.cell_build(jax.random.PRNGKey(0), data, jnp.int32(0), cfg, grid)
+    _assert_trees_equal(a, b)
+
+
+def test_cell_build_slices_rows_of_full_family():
+    """Core c of a p-way grid owns rows [c*L/p, (c+1)*L/p) of the family."""
+    data = _data(n=256)
+    cfg = _cfg(L_out=8)
+    grid = D.Grid(nu=1, p=2)
+    full, _ = pipeline.make_family(jax.random.PRNGKey(0), data.shape[1], cfg)
+    cell1 = D.cell_build(jax.random.PRNGKey(0), data, jnp.int32(1), cfg, grid)
+    np.testing.assert_array_equal(
+        np.asarray(cell1.outer_params.dims), np.asarray(full.dims[4:])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(cell1.outer_params.salts), np.asarray(full.salts[4:])
+    )
+
+
+def test_simulate_query_backend_identical():
+    """The distributed (simulated) path honours cfg.backend end-to-end."""
+    data = _data()
+    cfg_r = _cfg()
+    cfg_p = dataclasses.replace(cfg_r, backend="pallas")
+    grid = D.Grid(nu=2, p=2)
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg_r, grid)
+    q = data[:8]
+    kd_r, ki_r, comps_r = D.simulate_query(idx, data, q, cfg_r, grid)
+    kd_p, ki_p, comps_p = D.simulate_query(idx, data, q, cfg_p, grid)
+    np.testing.assert_array_equal(np.asarray(ki_r), np.asarray(ki_p))
+    np.testing.assert_array_equal(np.asarray(kd_r), np.asarray(kd_p))
+    np.testing.assert_array_equal(np.asarray(comps_r), np.asarray(comps_p))
+
+
+def test_unknown_backend_raises():
+    cfg = _cfg(backend="tpu-v9")
+    with pytest.raises(ValueError, match="unknown SLSH backend"):
+        slsh.build_index(jax.random.PRNGKey(0), _data(n=64), cfg)
+
+
+def test_backend_registry_contract():
+    """Registered custom backends dispatch through the pipeline."""
+    calls = {"words": 0, "topk": 0}
+    ref = pipeline.get_backend("reference")
+
+    def words(params, x):
+        calls["words"] += 1
+        return ref.signature_words(params, x)
+
+    def l1topk(q, cands, mask, k):
+        calls["topk"] += 1
+        return ref.l1_topk(q, cands, mask, k)
+
+    pipeline.register_backend("_test", pipeline.BackendOps(words, l1topk))
+    try:
+        cfg = _cfg(backend="_test")
+        data = _data(n=128)
+        idx = slsh.build_index(jax.random.PRNGKey(0), data, cfg)
+        slsh.query_batch(idx, data, data[:4], cfg)
+        assert calls["words"] > 0 and calls["topk"] > 0
+    finally:
+        pipeline._BACKENDS.pop("_test", None)

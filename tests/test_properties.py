@@ -1,0 +1,64 @@
+"""Hypothesis property tests for core + models math.
+
+Moved out of the mixed unit-test modules so those collect (and their unit
+tests run) when hypothesis is not installed; install requirements-dev.txt to
+run these.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing, topk
+from repro.models import common as C
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@given(
+    st.lists(st.floats(0.0, 100.0, allow_nan=False, width=32), min_size=1, max_size=64),
+    st.integers(1, 10),
+)
+@settings(max_examples=30, deadline=None)
+def test_masked_topk_property(vals, k):
+    d = jnp.asarray(vals, jnp.float32)
+    i = jnp.arange(d.shape[0], dtype=jnp.int32)
+    kd, ki = topk.masked_topk_smallest(d, i, k)
+    ref = np.sort(np.asarray(vals))[: min(k, len(vals))]
+    got = np.asarray(kd)[: min(k, len(vals))]
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_hash_keys_stable_under_seed(seed):
+    """Same PRNG seed => identical hash family (the Root broadcast)."""
+    k = jax.random.PRNGKey(seed)
+    p1 = hashing.make_bitsample(k, 2, 5, 4, 0.0, 1.0)
+    p2 = hashing.make_bitsample(k, 2, 5, 4, 0.0, 1.0)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 4))
+    np.testing.assert_array_equal(
+        np.asarray(hashing.hash_points(p1, x)), np.asarray(hashing.hash_points(p2, x))
+    )
+
+
+@given(st.integers(0, 1000), st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_rope_relative_property(offset, dh_half):
+    """RoPE inner products depend only on relative position."""
+    dh = dh_half * 2
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, dh))
+
+    def dot_at(p0, p1):
+        qr = C.apply_rope(q, jnp.asarray([p0]), 1e4)
+        kr = C.apply_rope(k, jnp.asarray([p1]), 1e4)
+        return float(jnp.sum(qr * kr))
+
+    a = dot_at(offset + 5, offset)
+    b = dot_at(5, 0)
+    assert abs(a - b) < 1e-2 * max(1.0, abs(b))

@@ -79,6 +79,31 @@ def test_multiprobe_recovers_neighbors_with_fewer_tables():
     assert (d2 <= d0 + 1e-6).all()
 
 
+def test_make_knn_lm_hook_wires_retrieval():
+    """The hook must pull neighbours from the SLSH datastore and shift the
+    LM distribution toward their next-token labels."""
+    from repro.core import distributed as D
+
+    d, vocab = 8, 16
+    key = jax.random.PRNGKey(0)
+    pts = jax.random.uniform(key, (256, d))
+    labels = jnp.full((256,), 11, jnp.int32)  # every neighbour votes token 11
+    grid = D.Grid(nu=2, p=2)
+    cfg = slsh.SLSHConfig(
+        m_out=10, L_out=4, m_in=6, L_in=2, alpha=0.05, k=4, val_lo=0.0,
+        val_hi=1.0, c_max=32, c_in=8, h_max=2, p_max=64, query_chunk=4,
+    )
+    index = D.simulate_build(jax.random.PRNGKey(1), pts, cfg, grid)
+    hook = engine.make_knn_lm_hook(
+        index, pts, labels, cfg, grid,
+        hidden_fn=lambda carrier: carrier["h"],  # explicit hidden-state closure
+        vocab=vocab, lmbda=0.5,
+    )
+    logits = jnp.zeros((3, vocab))
+    out = hook(logits, {"h": pts[:3]})  # datastore points query themselves
+    assert (np.asarray(jnp.argmax(out, -1)) == 11).all()
+
+
 def test_serve_engine_batched_requests():
     cfg = configs.get("granite-8b", smoke=True)
     model = api.build_model(cfg)
