@@ -16,6 +16,7 @@ def main() -> None:
         fig4_slsh,
         kernels_bench,
         roofline,
+        stream_bench,
         table2_scaling,
         table3_scaling,
     )
@@ -27,6 +28,7 @@ def main() -> None:
         "table3": table3_scaling,
         "kernels": kernels_bench,
         "roofline": roofline,
+        "stream": stream_bench,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

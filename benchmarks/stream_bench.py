@@ -1,0 +1,110 @@
+"""Streaming DSLSH benchmark: insert throughput, query latency vs. delta
+fill, and compaction cost vs. from-scratch rebuild, per compute backend.
+
+Emitted to BENCH_stream.json (path override: REPRO_BENCH_STREAM_JSON) so
+later PRs have a streaming perf trajectory; CSV rows go through
+benchmarks/run.py like every other module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+STREAM_JSON = os.environ.get(
+    "REPRO_BENCH_STREAM_JSON",
+    os.path.join(os.path.dirname(__file__), "artifacts", "BENCH_stream.json"),
+)
+
+INSERT_BATCHES = (1, 16, 128)
+FILL_FRACS = (0.0, 0.25, 0.5, 1.0)
+
+
+def run():
+    from repro import stream
+    from repro.core import pipeline
+
+    n, d, nq, delta_cap = (
+        (16384, 32, 256, 4096) if common.FULL else (2048, 32, 64, 512)
+    )
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(key, (n, d))
+    extra = jax.random.uniform(jax.random.PRNGKey(1), (delta_cap, d))
+    q = data[:nq] + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (nq, d))
+    cfg0 = common.slsh_cfg(
+        m_out=16, L_out=8, m_in=8, L_in=4, alpha=0.01, val_lo=0.0, val_hi=1.0,
+        c_max=64, c_in=16, h_max=4, p_max=128, build_chunk=512, query_chunk=32,
+    )
+    report = {
+        "n": n, "d": d, "nq": nq, "delta_cap": delta_cap,
+        "config": {
+            k: getattr(cfg0, k)
+            for k in ("m_out", "L_out", "m_in", "L_in", "c_max", "k")
+        },
+        "backends": {},
+    }
+    for backend in ("reference", "pallas"):
+        cfg = dataclasses.replace(cfg0, backend=backend)
+        sidx = stream.stream_init(
+            jax.random.PRNGKey(3), data, cfg, capacity=n + delta_cap,
+            delta_cap=delta_cap,
+        )
+        bk = {"insert_pts_per_s": {}, "query_vs_fill": []}
+
+        # --- insert throughput (jitted steady state; index fill constant)
+        ins = jax.jit(lambda s, xs: stream.insert_batch(s, xs, cfg))
+        for b in INSERT_BATCHES:
+            xs = extra[:b]
+            _, us = common.timer(lambda: ins(sidx, xs), repeats=5)
+            bk["insert_pts_per_s"][str(b)] = b / (us * 1e-6)
+            yield (
+                f"stream/insert_{backend}_b{b}", us,
+                f"pts_per_s={b / (us * 1e-6):.0f}",
+            )
+
+        # --- query latency vs. delta fill
+        qfn = jax.jit(lambda s, qs: stream.query_batch(s, qs, cfg))
+        filled = sidx
+        prev = 0
+        for frac in FILL_FRACS:
+            fill = int(frac * delta_cap)
+            if fill > prev:
+                filled = stream.insert_batch(filled, extra[prev:fill], cfg)
+                prev = fill
+            _, us = common.timer(lambda: qfn(filled, q), repeats=3)
+            bk["query_vs_fill"].append(
+                {"fill": fill, "us_per_query": us / nq}
+            )
+            yield (
+                f"stream/query_{backend}_fill{fill}", us,
+                f"us_per_query={us / nq:.1f}",
+            )
+
+        # --- compaction (CSR merge + stratification refresh) vs. rebuild
+        _, us_c = common.timer(lambda: stream.compact(filled, cfg), repeats=3)
+        union = jnp.concatenate([data, extra])
+        _, us_r = common.timer(
+            lambda: pipeline.build_from_params(
+                union, sidx.base.outer_params, sidx.base.inner_params, cfg
+            ),
+            repeats=3,
+        )
+        bk["compact_us"] = us_c
+        bk["rebuild_us"] = us_r
+        bk["compact_speedup_vs_rebuild"] = us_r / us_c
+        yield (f"stream/compact_{backend}", us_c, f"delta={delta_cap}")
+        yield (
+            f"stream/rebuild_{backend}", us_r,
+            f"compact_speedup={us_r / us_c:.2f}",
+        )
+        report["backends"][backend] = bk
+
+    os.makedirs(os.path.dirname(STREAM_JSON) or ".", exist_ok=True)
+    with open(STREAM_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    yield ("stream/json_report", 0.0, STREAM_JSON)

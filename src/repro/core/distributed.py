@@ -22,6 +22,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import hashing, pipeline, slsh, topk
@@ -44,9 +45,9 @@ class Grid:
 def pad_to_multiple(
     points, labels, multiple: int, sentinel: float = 1e9
 ):
-    """Pad dataset so n divides the shard grid; pads never enter any K-NN."""
-    import numpy as np
-
+    """Pad dataset so n divides the shard grid; pads never enter any K-NN
+    (their coordinates are ``sentinel``-far, so with k <= n real points they
+    always lose — tests/test_properties.py holds this as a property)."""
     n = points.shape[0]
     rem = (-n) % multiple
     if rem == 0:

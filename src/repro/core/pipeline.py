@@ -80,6 +80,26 @@ class QueryResult(NamedTuple):
     bucket_total: jax.Array  # (...,) int32 — sum of probed bucket populations
 
 
+class DeltaView(NamedTuple):
+    """Streamed-in points exposed to the gather stage (DESIGN.md §9).
+
+    A delta segment is an append-only buffer of ``cap`` slots holding points
+    inserted *after* the base index was built. Slot ``s`` (when ``valid[s]``)
+    holds the point with global dataset index ``gidx[s]``; slots fill in
+    ascending global-index order, and every ``gidx`` exceeds every base
+    index — the pair of facts the exact merge in ``_gather_one_table``
+    relies on.
+    """
+
+    outer_keys: jax.Array  # (cap, L) uint32 bucket key per outer table
+    inner_keys: jax.Array  # (cap, L_in) uint32 inner-layer keys
+    gidx: jax.Array  # (cap,) int32 global dataset index of each slot
+    valid: jax.Array  # (cap,) bool — slot occupied
+
+
+_IDX_SENTINEL = jnp.int32(jnp.iinfo(jnp.int32).max)  # sorts after any index
+
+
 # -------------------------------------------------------- backend dispatch
 
 
@@ -207,13 +227,17 @@ def _build_inner_for_bucket(
     return sk, si
 
 
-def _build_inner(
+def build_inner(
     inner_params: hashing.SignRPParams,
     data: jax.Array,
     outer: tables.TableSet,
     heavy: tables.HeavyBuckets,
     cfg: SLSHConfig,
 ) -> tuple[jax.Array, jax.Array]:
+    """Inner (stratified) tables for every heavy bucket of every table.
+
+    Shared by the batch builder and the streaming compactor (stream/index.py),
+    which refreshes stratification after folding a delta segment."""
     def per_table(args):
         si_row, hv_start, hv_size, hv_valid = args
         return jax.vmap(
@@ -225,6 +249,13 @@ def _build_inner(
     return jax.lax.map(
         per_table, (outer.sorted_idx, heavy.start, heavy.size, heavy.valid)
     )
+
+
+def empty_inner(l_out: int, cfg: SLSHConfig) -> tuple[jax.Array, jax.Array]:
+    """Inert inner tables for ``use_inner=False`` indices — the single
+    definition shared by this builder and the streaming compactor."""
+    shape = (l_out, cfg.h_max, cfg.L_in, cfg.p_max)
+    return jnp.full(shape, tables.PAD_KEY), jnp.full(shape, -1, jnp.int32)
 
 
 def build_from_params(
@@ -247,10 +278,9 @@ def build_from_params(
     alpha_n = jnp.maximum(jnp.int32(cfg.alpha * n), 1)
     heavy = tables.find_heavy(outer, alpha_n, cfg.h_max)
     if cfg.use_inner:
-        inner_keys, inner_idx = _build_inner(inner_params, data, outer, heavy, cfg)
+        inner_keys, inner_idx = build_inner(inner_params, data, outer, heavy, cfg)
     else:
-        inner_keys = jnp.full((l_out, cfg.h_max, cfg.L_in, cfg.p_max), tables.PAD_KEY)
-        inner_idx = jnp.full((l_out, cfg.h_max, cfg.L_in, cfg.p_max), -1, jnp.int32)
+        inner_keys, inner_idx = empty_inner(l_out, cfg)
     return SLSHIndex(
         outer_params, inner_params, outer, heavy, inner_keys, inner_idx, jnp.int32(n)
     )
@@ -278,26 +308,61 @@ def _stage_hash(
     return probe_keys, inner_keys
 
 
+def _merge_capped(base_cand: jax.Array, delta_match: jax.Array, delta_gidx: jax.Array, budget: int) -> jax.Array:
+    """Merge a base bucket gather with delta-segment matches, exactly.
+
+    ``base_cand`` (budget,) holds ascending global indices (-1 pad at the
+    end); ``delta_match`` (cap,) marks delta slots in the same bucket. A
+    from-scratch build over base ∪ delta would gather the ``budget`` smallest
+    global indices of the union bucket (CSR rows are stably sorted, so equal
+    keys order by index) — which is exactly the selection below.
+
+    The delta segment is an unsorted append-cheap memtable (the LSM
+    tradeoff), so each probe scans it; top-k selection keeps that
+    O(cap log budget) rather than a full O(cap log cap) sort, and
+    compaction folds the cost away entirely.
+    """
+    base = jnp.where(base_cand < 0, _IDX_SENTINEL, base_cand)
+    vals = jnp.where(delta_match, delta_gidx, _IDX_SENTINEL)
+    k = min(budget, vals.shape[0])
+    delta = -jax.lax.top_k(-vals, k)[0]  # k smallest, ascending
+    if k < budget:
+        delta = jnp.pad(delta, (0, budget - k), constant_values=_IDX_SENTINEL)
+    merged = jnp.sort(jnp.concatenate([base, delta]))[:budget]
+    return jnp.where(merged == _IDX_SENTINEL, -1, merged)
+
+
 def _gather_one_table(
     index: SLSHIndex,
     cfg: SLSHConfig,
     l: jax.Array,
     q_probe_keys: jax.Array,  # (1 + multiprobe,) base key first
     q_in_keys: jax.Array,  # (L_in,)
+    delta: DeltaView | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Candidate indices (slot,) for one outer table; -1 where masked.
 
-    Also returns the base-bucket population (for stats).
+    Also returns the base-bucket population (for stats). When ``delta`` is
+    given, each probe fans out over base + delta segments and the merged
+    candidate set equals the one a from-scratch build over the union would
+    gather (DESIGN.md §9).
     """
     sk_row = index.outer.sorted_keys[l]
     si_row = index.outer.sorted_idx[l]
     q_key = q_probe_keys[0]
     lo, hi = tables.bucket_range(sk_row, q_key)
     bucket_sz = hi - lo
+    if delta is not None:
+        d_outer = delta.valid & (delta.outer_keys[:, l] == q_key)  # (cap,)
+        bucket_sz = bucket_sz + jnp.sum(d_outer.astype(jnp.int32))
 
     def probe(key):
         plo, phi = tables.bucket_range(sk_row, key)
-        return tables.gather_bucket(si_row, plo, phi, cfg.c_max)
+        cand = tables.gather_bucket(si_row, plo, phi, cfg.c_max)
+        if delta is None:
+            return cand
+        dm = delta.valid & (delta.outer_keys[:, l] == key)
+        return _merge_capped(cand, dm, delta.gidx, cfg.c_max)
 
     outer_cand = jax.vmap(probe)(q_probe_keys).reshape(-1)
     slot = cfg.slot
@@ -309,16 +374,29 @@ def _gather_one_table(
         return outer_cand, bucket_sz
 
     # Is this bucket stratified? Match against the heavy-bucket registry.
+    # (Streaming note: the registry is the *base* one — stratification is
+    # frozen between compactions, DESIGN.md §9.)
     hk = index.heavy.keys[l]
     match = (hk == q_key) & index.heavy.valid[l]
     found = jnp.any(match)
     h = jnp.argmax(match)
 
+    if delta is not None:
+        # Delta members of this heavy bucket join its inner-layer population
+        # in global-index order until the P_max cap — mirroring the first
+        # min(size, P_max) rows a union build would stratify.
+        rank = jnp.cumsum(d_outer.astype(jnp.int32)) - 1
+        d_in_pop = d_outer & (index.heavy.size[l, h] + rank < cfg.p_max)
+
     def inner_one(li):
         ik = index.inner_keys[l, h, li]
         ii = index.inner_idx[l, h, li]
         lo2, hi2 = tables.bucket_range(ik, q_in_keys[li])
-        return tables.gather_bucket(ii, lo2, hi2, cfg.c_in)
+        cand = tables.gather_bucket(ii, lo2, hi2, cfg.c_in)
+        if delta is None:
+            return cand
+        dm = d_in_pop & (delta.inner_keys[:, li] == q_in_keys[li])
+        return _merge_capped(cand, dm, delta.gidx, cfg.c_in)
 
     inner_cand = jax.vmap(inner_one)(jnp.arange(cfg.L_in)).reshape(-1)
     inner_cand = jnp.pad(inner_cand, (0, slot - cfg.L_in * cfg.c_in), constant_values=-1)
@@ -331,13 +409,14 @@ def _stage_gather(
     cfg: SLSHConfig,
     probe_keys: jax.Array,  # (Q, L, 1 + multiprobe)
     inner_keys: jax.Array,  # (Q, L_in)
+    delta: DeltaView | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stage 2 — dense candidate tensor (Q, L*slot) + probed bucket sizes."""
     l_out = index.outer.sorted_keys.shape[0]
 
     def per_query(pk, qik):
         cand, bucket_sz = jax.vmap(
-            lambda l, k: _gather_one_table(index, cfg, l, k, qik)
+            lambda l, k: _gather_one_table(index, cfg, l, k, qik, delta)
         )(jnp.arange(l_out), pk)
         return cand.reshape(-1), jnp.sum(bucket_sz)
 
@@ -373,21 +452,35 @@ def _stage_topk(
 
 
 def query_chunk(
-    index: SLSHIndex, data: jax.Array, queries: jax.Array, cfg: SLSHConfig
+    index: SLSHIndex,
+    data: jax.Array,
+    queries: jax.Array,
+    cfg: SLSHConfig,
+    delta: DeltaView | None = None,
 ) -> QueryResult:
-    """Run the four stages for one (Q, d) chunk of queries."""
+    """Run the four stages for one (Q, d) chunk of queries.
+
+    ``delta`` fans the gather stage out over base + delta segments (the
+    streaming path, DESIGN.md §9); the merged candidates flow through the
+    same dedup and L1 top-k stages, so ``cfg.backend`` dispatch covers
+    streaming queries too.
+    """
     backend = get_backend(cfg.backend)
     probe_keys, inner_keys = _stage_hash(index, queries, cfg, backend)
-    cand, bucket_total = _stage_gather(index, cfg, probe_keys, inner_keys)
+    cand, bucket_total = _stage_gather(index, cfg, probe_keys, inner_keys, delta)
     cand_sorted, uniq, comparisons = _stage_dedup(cand)
     kd, ki = _stage_topk(data, queries, cand_sorted, uniq, cfg, backend)
     return QueryResult(ki, kd, comparisons, bucket_total)
 
 
 def query_batch(
-    index: SLSHIndex, data: jax.Array, queries: jax.Array, cfg: SLSHConfig
+    index: SLSHIndex,
+    data: jax.Array,
+    queries: jax.Array,
+    cfg: SLSHConfig,
+    delta: DeltaView | None = None,
 ) -> QueryResult:
     """Chunked pipeline over queries -> stacked QueryResult (Q, ...)."""
     return _chunked_map(
-        lambda qs: query_chunk(index, data, qs, cfg), queries, cfg.query_chunk
+        lambda qs: query_chunk(index, data, qs, cfg, delta), queries, cfg.query_chunk
     )

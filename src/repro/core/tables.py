@@ -53,7 +53,10 @@ def _heavy_one_table(
     starts = jax.ops.segment_min(
         jnp.where(is_start, pos, n).astype(jnp.int32), seg_id, num_segments=n
     )
-    heavy_sizes = jnp.where(sizes > alpha_n, sizes, 0)
+    # Rows may carry PAD_KEY tail entries (capacity-padded streaming tables,
+    # DESIGN.md §9) — the pad segment must never be classified heavy.
+    seg_key = sorted_keys[jnp.clip(starts, 0, n - 1)]
+    heavy_sizes = jnp.where((sizes > alpha_n) & (seg_key != PAD_KEY), sizes, 0)
     top_sizes, top_segs = jax.lax.top_k(heavy_sizes, h_max)
     valid = top_sizes > 0
     top_start = jnp.where(valid, starts[top_segs], 0)

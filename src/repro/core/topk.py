@@ -24,6 +24,28 @@ def masked_topk_smallest(
     return -top_neg, jnp.where(jnp.isfinite(top_neg), idx[pos], -1)
 
 
+def masked_unique_topk_smallest(
+    dists: jax.Array, idx: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """``masked_topk_smallest`` with duplicate indices collapsed first.
+
+    When cells of one node share data but split the hash tables, the same
+    point can surface in several cells' partial top-Ks; a plain merge would
+    let it occupy multiple k slots (and be double-counted by the weighted
+    vote). Duplicates refer to the same point, so their distances are
+    identical — keeping the first occurrence is exact.
+    """
+    order = jnp.argsort(idx)
+    idx_s = idx[order]
+    dist_s = dists[order]
+    uniq = jnp.concatenate(
+        [jnp.ones((1,), bool), idx_s[1:] != idx_s[:-1]]
+    ) & (idx_s >= 0)
+    return masked_topk_smallest(
+        jnp.where(uniq, dist_s, INF), jnp.where(uniq, idx_s, -1), k
+    )
+
+
 def merge_topk(
     dists_a: jax.Array, idx_a: jax.Array, dists_b: jax.Array, idx_b: jax.Array, k: int
 ) -> tuple[jax.Array, jax.Array]:

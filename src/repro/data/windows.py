@@ -40,10 +40,14 @@ def _prefix(x: np.ndarray) -> np.ndarray:
     return out
 
 
-def windows_from_record(
+def _rolling_windows(
     mapv: np.ndarray, valid: np.ndarray, cfg: WindowConfig
-) -> tuple[np.ndarray, np.ndarray]:
-    """One record -> (points (N, d) f32, labels (N,) i8)."""
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One record -> (points (N, d) f32, labels (N,) i8, starts (N,) i64).
+
+    The single implementation of the rolling scan + feature extraction; the
+    batch and streaming entry points below are views over it.
+    """
     n = mapv.shape[0]
     l, c = cfg.lag_beats, cfg.cond_beats
     total = l + c
@@ -66,7 +70,11 @@ def windows_from_record(
         i += total if pos else stride
 
     if not starts:
-        return np.zeros((0, cfg.d), np.float32), np.zeros((0,), np.int8)
+        return (
+            np.zeros((0, cfg.d), np.float32),
+            np.zeros((0,), np.int8),
+            np.zeros((0,), np.int64),
+        )
 
     starts_a = np.asarray(starts, np.int64)
     # subwindow edges: d+1 boundaries across the lag window
@@ -82,7 +90,30 @@ def windows_from_record(
         sm.sum(axis=1), row_nv, out=np.full_like(row_nv, 80.0), where=row_nv > 0
     )
     feats = np.where(nv > 0, feats, row_mean[:, None])
-    return feats.astype(np.float32), np.asarray(labels, np.int8)
+    return feats.astype(np.float32), np.asarray(labels, np.int8), starts_a
+
+
+def windows_from_record(
+    mapv: np.ndarray, valid: np.ndarray, cfg: WindowConfig
+) -> tuple[np.ndarray, np.ndarray]:
+    """One record -> (points (N, d) f32, labels (N,) i8)."""
+    points, labels, _ = _rolling_windows(mapv, valid, cfg)
+    return points, labels
+
+
+def stream_windows_from_record(
+    mapv: np.ndarray, valid: np.ndarray, cfg: WindowConfig
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Timestamped rolling windows for the streaming path (DESIGN.md §9.5).
+
+    Same points and labels as ``windows_from_record``, plus the beat index
+    at which each window becomes available to a live monitor: the end of
+    its lag window (``start + l`` — the condition window, and hence the
+    label, lies in the *future* at that moment; 1 beat ~ 1 second).
+    Returns (points (N, d), labels (N,), t_beats (N,) float64 ascending).
+    """
+    points, labels, starts = _rolling_windows(mapv, valid, cfg)
+    return points, labels, (starts + cfg.lag_beats).astype(np.float64)
 
 
 def build_dataset(

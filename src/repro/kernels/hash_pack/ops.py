@@ -19,6 +19,13 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _clamp_t_blk(t: int, t_blk: int) -> int:
+    """Shrink the row-block for small batches (streaming inserts hash a
+    handful of points at a time): pad T only up to the next multiple of 8 —
+    the f32 sublane minimum — instead of a full 256-row block."""
+    return min(t_blk, max(8, -(-t // 8) * 8))
+
+
 @functools.partial(jax.jit, static_argnames=("t_blk", "interpret"))
 def signrp_pack(
     x: jax.Array, proj: jax.Array, *, t_blk: int = 256, interpret: bool = True
@@ -26,6 +33,7 @@ def signrp_pack(
     """Sign-random-projection signatures. x: (T, d); proj: (d, m) -> (T, W)."""
     t, d = x.shape
     m = proj.shape[1]
+    t_blk = _clamp_t_blk(t, t_blk)
     xp = _pad_to(_pad_to(x.astype(jnp.float32), 1, 128), 0, t_blk)
     pp = _pad_to(_pad_to(proj.astype(jnp.float32), 0, 128), 1, 128)
     # >= 0 semantics of the family == (s + eps > 0) at s exactly 0; use > 0
@@ -49,6 +57,7 @@ def bitsample_pack(
     m = dims.shape[0]
     onehot = jax.nn.one_hot(dims, d, dtype=jnp.float32).T  # (d, m)
     t = x.shape[0]
+    t_blk = _clamp_t_blk(t, t_blk)
     xp = _pad_to(_pad_to(x.astype(jnp.float32), 1, 128), 0, t_blk)
     pp = _pad_to(_pad_to(onehot, 0, 128), 1, 128)
     bias = _pad_to((-thrs.astype(jnp.float32))[None, :], 1, 128)

@@ -23,9 +23,11 @@ class Request:
     rid: int
     tokens: np.ndarray  # (prompt_len,)
     max_new: int = 16
+    deadline_s: float = float("inf")  # straggler deadline (from prefill start)
     submitted_at: float = 0.0
     result: list = dataclasses.field(default_factory=list)
     done: bool = False
+    timed_out: bool = False
     latency_s: float = 0.0
 
 
@@ -57,7 +59,13 @@ class ServeEngine:
 
     def serve(self, requests: list[Request]) -> list[Request]:
         """Sequential micro-batching: prefill each request, then decode the
-        active batch step-by-step (greedy)."""
+        active batch step-by-step (greedy).
+
+        Straggler deadlines (paper's latency-first mode): a request whose
+        ``deadline_s`` expires mid-decode is finalized immediately with the
+        tokens produced so far — ``timed_out`` set, ``latency_s`` populated
+        at expiry, no further tokens appended. The batch keeps decoding for
+        the surviving requests (and stops early once all are finalized)."""
         for batch_start in range(0, len(requests), self.max_batch):
             group = requests[batch_start : batch_start + self.max_batch]
             t0 = time.time()
@@ -71,16 +79,31 @@ class ServeEngine:
             logits = jnp.concatenate(logits_list, axis=0)
             steps = max(r.max_new for r in group)
             for step in range(steps):
+                elapsed = time.time() - t0
+                for r in group:
+                    # completion is checked first: a request that produced all
+                    # its tokens can no longer time out (its deadline expiring
+                    # while batchmates keep decoding is not an SLA miss)
+                    if not r.done and len(r.result) >= r.max_new:
+                        r.done = True
+                        r.latency_s = elapsed
+                    if not r.done and elapsed > r.deadline_s:
+                        r.done = True
+                        r.timed_out = True
+                        r.latency_s = elapsed
+                if all(r.done for r in group):
+                    break
                 if self.logits_hook is not None:
                     logits = self.logits_hook(logits, cache)
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 for i, r in enumerate(group):
-                    if len(r.result) < r.max_new:
+                    if not r.done and len(r.result) < r.max_new:
                         r.result.append(int(tok[i]))
                 logits, cache = self._decode(self.params, cache, tok[:, None])
             for r in group:
-                r.done = True
-                r.latency_s = time.time() - t0
+                if not r.done:
+                    r.done = True
+                    r.latency_s = time.time() - t0
         return requests
 
     @staticmethod

@@ -1,0 +1,19 @@
+"""Streaming DSLSH: online ingestion, delta-segment indices, compaction,
+and the live ICU monitoring driver (DESIGN.md §9)."""
+from repro.stream.delta import DeltaIndex, as_view, make_delta  # noqa: F401
+from repro.stream.index import (  # noqa: F401
+    StreamIndex,
+    compact,
+    evict_before,
+    from_base,
+    insert_batch,
+    query_batch,
+    stream_init,
+)
+from repro.stream.monitor import (  # noqa: F401
+    CellState,
+    NodeState,
+    StreamEvent,
+    StreamingMonitor,
+    node_init,
+)

@@ -1,0 +1,81 @@
+"""Delta segments: fixed-capacity, append-only per-cell index overlays.
+
+A ``DeltaIndex`` absorbs streamed-in points without touching the base CSR
+tables (DESIGN.md §9). Each occupied slot holds the precomputed outer bucket
+keys (one per local table) and inner-layer keys of one inserted point; the
+point itself lives in the owning ``StreamIndex``'s store. Slots fill in
+arrival order, which is also ascending global-index order — the invariant
+the exact base+delta merge in ``core/pipeline._gather_one_table`` relies on.
+
+Everything here is shape-static and jit-friendly: inserts are scatters at
+dynamic offsets, overflow drops (and counts) instead of reallocating.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline
+
+
+class DeltaIndex(NamedTuple):
+    outer_keys: jax.Array  # (cap, L) uint32 bucket key per outer table
+    inner_keys: jax.Array  # (cap, L_in) uint32 inner-layer keys
+    count: jax.Array  # () int32 occupied slots
+    dropped: jax.Array  # () int32 inserts dropped on overflow
+
+
+def make_delta(cap: int, l_out: int, l_in: int) -> DeltaIndex:
+    """An empty delta segment with ``cap`` slots."""
+    return DeltaIndex(
+        outer_keys=jnp.zeros((cap, l_out), jnp.uint32),
+        inner_keys=jnp.zeros((cap, l_in), jnp.uint32),
+        count=jnp.int32(0),
+        dropped=jnp.int32(0),
+    )
+
+
+def append_keys(
+    delta: DeltaIndex,
+    outer_keys: jax.Array,  # (B, L)
+    inner_keys: jax.Array,  # (B, L_in)
+    room: jax.Array,  # () int32 usable slots (<= cap; store may bound it)
+) -> DeltaIndex:
+    """Scatter one batch of hashed points into the next free slots.
+
+    Slots ``[count, min(count+B, room))`` are written; the rest of the batch
+    is dropped and counted (callers compact before this happens in normal
+    operation). Pure scatter — safe under jit and vmap.
+    """
+    cap = delta.outer_keys.shape[0]
+    b = outer_keys.shape[0]
+    pos = delta.count + jnp.arange(b, dtype=jnp.int32)
+    ok = pos < room
+    # out-of-range writes land at `cap`, which .at[].set(mode="drop") ignores
+    target = jnp.where(ok, pos, cap)
+    new_count = jnp.minimum(delta.count + b, room)
+    return DeltaIndex(
+        outer_keys=delta.outer_keys.at[target].set(outer_keys, mode="drop"),
+        inner_keys=delta.inner_keys.at[target].set(inner_keys, mode="drop"),
+        count=new_count,
+        dropped=delta.dropped + (jnp.int32(b) - (new_count - delta.count)),
+    )
+
+
+def as_view(delta: DeltaIndex, base_n: jax.Array) -> pipeline.DeltaView:
+    """Expose the segment to the pipeline's gather stage.
+
+    Slot ``s`` holds the point with global index ``base_n + s`` — base
+    indices all precede delta indices, so the merged gather reproduces a
+    from-scratch build's candidate order (DESIGN.md §9).
+    """
+    cap = delta.outer_keys.shape[0]
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    return pipeline.DeltaView(
+        outer_keys=delta.outer_keys,
+        inner_keys=delta.inner_keys,
+        gidx=base_n + slots,
+        valid=slots < delta.count,
+    )

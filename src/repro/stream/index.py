@@ -1,0 +1,310 @@
+"""Incremental DSLSH: a base CSR index plus an append-only delta segment.
+
+``StreamIndex`` is the online form of ``pipeline.SLSHIndex`` (DESIGN.md §9):
+
+* ``insert_batch`` — jit-friendly ingestion: hash the batch with the
+  configured compute backend (``pallas`` routes through the fused
+  ``kernels/hash_pack`` sign-pack kernel), pack the keys, and scatter them
+  into the delta segment + point store. New points are queryable
+  immediately.
+* ``query_batch`` — the staged pipeline with gather fan-out over base +
+  delta (``pipeline.query_batch(..., delta=...)``), so ``cfg.backend``
+  dispatch covers the streaming path.
+* ``compact`` — fold the delta segment into the base: per-table stable
+  sorted-merge of the CSR rows (base points are never re-hashed or
+  re-sorted), then a stratification refresh limited to the <= L*H_max heavy
+  buckets. Bit-exact with a from-scratch build over the union.
+* ``evict_before`` — retention: drop windows older than a horizon and
+  rebuild the (now smaller) base. The slow path, amortized over the
+  retention period.
+
+Exactness contract (enforced by tests/test_stream.py): querying a
+``StreamIndex`` equals querying a from-scratch ``build_from_params`` over
+base ∪ delta whenever the base's heavy-bucket registry agrees with the
+union's (always true for ``use_inner=False``; after ``compact`` the
+registry is refreshed so equality is unconditional).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline, tables
+from repro.stream import delta as delta_mod
+
+
+class StreamIndex(NamedTuple):
+    base: pipeline.SLSHIndex
+    delta: delta_mod.DeltaIndex
+    store: jax.Array  # (capacity, d) f32 — rows [0, n_total) hold points
+    ts: jax.Array  # (capacity,) f32 arrival time per stored point
+
+    @property
+    def n_total(self) -> jax.Array:
+        """Points queryable right now (base + delta)."""
+        return self.base.n + self.delta.count
+
+    @property
+    def capacity(self) -> int:
+        return self.store.shape[0]
+
+
+def pad_tables(outer: tables.TableSet, capacity: int) -> tables.TableSet:
+    """Right-pad CSR rows to ``capacity`` with inert entries.
+
+    ``PAD_KEY`` sorts after every real key and its index is -1, so pad
+    entries stay at the row tail, never match a real probe key, and would
+    gather as masked candidates even if one did — which keeps every
+    ``StreamIndex`` shape static across compactions (no retraces, and nodes
+    at different fills stack into one pytree)."""
+    l, n = outer.sorted_keys.shape
+    assert n <= capacity, "index larger than store capacity"
+    if n == capacity:
+        return outer
+    pad_k = jnp.full((l, capacity - n), tables.PAD_KEY)
+    pad_i = jnp.full((l, capacity - n), -1, jnp.int32)
+    return tables.TableSet(
+        jnp.concatenate([outer.sorted_keys, pad_k], axis=1),
+        jnp.concatenate([outer.sorted_idx, pad_i], axis=1),
+    )
+
+
+def from_base(
+    base: pipeline.SLSHIndex,
+    data: jax.Array,
+    cfg: pipeline.SLSHConfig,
+    *,
+    capacity: int,
+    delta_cap: int,
+    t0: float = 0.0,
+) -> StreamIndex:
+    """Wrap a prebuilt (possibly row-sliced, per-cell) index for streaming."""
+    n0, d = data.shape
+    assert capacity >= n0, "store capacity below initial dataset size"
+    l_out = base.outer_params.salts.shape[0]
+    base = base._replace(outer=pad_tables(base.outer, capacity))
+    store = jnp.zeros((capacity, d), jnp.float32).at[:n0].set(data)
+    ts = jnp.zeros((capacity,), jnp.float32).at[:n0].set(jnp.float32(t0))
+    return StreamIndex(
+        base=base,
+        delta=delta_mod.make_delta(delta_cap, l_out, cfg.L_in),
+        store=store,
+        ts=ts,
+    )
+
+
+def stream_init(
+    key: jax.Array,
+    data: jax.Array,
+    cfg: pipeline.SLSHConfig,
+    *,
+    capacity: int,
+    delta_cap: int,
+    t0: float = 0.0,
+) -> StreamIndex:
+    """Build a fresh single-shard streaming index over ``data`` (n0, d)."""
+    outer_params, inner_params = pipeline.make_family(key, data.shape[1], cfg)
+    base = pipeline.build_from_params(data, outer_params, inner_params, cfg)
+    return from_base(base, data, cfg, capacity=capacity, delta_cap=delta_cap, t0=t0)
+
+
+def delta_room(capacity, delta_cap, n):
+    """Usable delta slots: bounded by the segment AND the store left.
+
+    The single formula every insert path (and the monitor's host-side label
+    bookkeeping) derives its drop/overflow decisions from."""
+    return jnp.minimum(jnp.int32(delta_cap), jnp.int32(capacity) - n)
+
+
+def hash_for_insert(
+    index: pipeline.SLSHIndex, xs: jax.Array, cfg: pipeline.SLSHConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Backend-dispatched outer + inner keys for one insert batch.
+
+    Same ``pipeline.hash_keys`` the query and build paths use, so streamed
+    points land in exactly the buckets a rebuild would put them in — on
+    either backend."""
+    backend = pipeline.get_backend(cfg.backend)
+    outer_keys = pipeline.hash_keys(index.outer_params, xs, backend)  # (B, L)
+    if cfg.use_inner:
+        inner_keys = pipeline.hash_keys(index.inner_params, xs, backend)
+    else:
+        inner_keys = jnp.zeros((xs.shape[0], cfg.L_in), jnp.uint32)
+    return outer_keys, inner_keys
+
+
+def scatter_rows(
+    store: jax.Array,
+    ts: jax.Array,
+    n: jax.Array,
+    count: jax.Array,
+    room: jax.Array,
+    xs: jax.Array,
+    t: jax.Array | float,
+) -> tuple[jax.Array, jax.Array]:
+    """Write one insert batch's points + timestamps into store rows
+    ``[n + count, n + min(count + B, room))``; overflow rows drop — mirror
+    of ``delta.append_keys``'s slot accounting."""
+    b = xs.shape[0]
+    capacity = store.shape[0]
+    pos = count + jnp.arange(b, dtype=jnp.int32)
+    target = jnp.where(pos < room, n + pos, jnp.int32(capacity))
+    store = store.at[target].set(xs.astype(jnp.float32), mode="drop")
+    tvec = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (b,))
+    ts = ts.at[target].set(tvec, mode="drop")
+    return store, ts
+
+
+def insert_batch(
+    sidx: StreamIndex,
+    xs: jax.Array,  # (B, d)
+    cfg: pipeline.SLSHConfig,
+    t: jax.Array | float = 0.0,
+) -> StreamIndex:
+    """Ingest one batch: hash -> pack -> scatter. Jit/vmap-friendly.
+
+    Inserts beyond the delta capacity (or the store capacity) are dropped
+    and counted in ``delta.dropped``; callers should ``compact`` before
+    that happens.
+    """
+    outer_keys, inner_keys = hash_for_insert(sidx.base, xs, cfg)
+    cap = sidx.delta.outer_keys.shape[0]
+    room = delta_room(sidx.capacity, cap, sidx.base.n)
+    new_delta = delta_mod.append_keys(sidx.delta, outer_keys, inner_keys, room)
+    store, ts = scatter_rows(
+        sidx.store, sidx.ts, sidx.base.n, sidx.delta.count, room, xs, t
+    )
+    return StreamIndex(sidx.base, new_delta, store, ts)
+
+
+def query_batch(
+    sidx: StreamIndex, queries: jax.Array, cfg: pipeline.SLSHConfig
+) -> pipeline.QueryResult:
+    """Staged pipeline over base + delta; backend dispatch included."""
+    view = delta_mod.as_view(sidx.delta, sidx.base.n)
+    return pipeline.query_batch(sidx.base, sidx.store, queries, cfg, delta=view)
+
+
+# ------------------------------------------------------------- compaction
+
+
+def _merge_sorted_rows(
+    ak: jax.Array, ai: jax.Array, bk: jax.Array, bi: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Stable merge of two sorted (keys, idx) rows; base (``a``) wins ties.
+
+    Every base index precedes every delta index, so tie-breaking base-first
+    reproduces exactly what a stable full sort over the union would give.
+    O((n+m) log) via two vectorized binary searches — no re-sort of the base.
+    """
+    n, m = ak.shape[0], bk.shape[0]
+    pa = jnp.arange(n, dtype=jnp.int32) + jnp.searchsorted(bk, ak, side="left").astype(jnp.int32)
+    pb = jnp.arange(m, dtype=jnp.int32) + jnp.searchsorted(ak, bk, side="right").astype(jnp.int32)
+    keys = jnp.zeros((n + m,), ak.dtype).at[pa].set(ak).at[pb].set(bk)
+    idx = jnp.zeros((n + m,), ai.dtype).at[pa].set(ai).at[pb].set(bi)
+    return keys, idx
+
+
+def compact(sidx: StreamIndex, cfg: pipeline.SLSHConfig) -> StreamIndex:
+    """Fold the full delta segment into the base index.
+
+    Host-level maintenance op (the result's table shapes grow with the
+    realized delta fill, so it reads ``delta.count`` on the host). The outer
+    CSR rows are *merged*, not rebuilt — base points are never re-hashed and
+    never re-sorted; only the stratified (heavy-bucket) layer is recomputed,
+    which touches at most L*H_max buckets. The result is bit-exact with
+    ``pipeline.build_from_params`` over base ∪ delta (tests/test_stream.py).
+    """
+    base = sidx.base
+    n0 = int(base.n)
+    cnt = int(sidx.delta.count)
+    if cnt == 0:
+        return sidx
+    n1 = n0 + cnt
+    l_out = base.outer_params.salts.shape[0]
+
+    d_keys = sidx.delta.outer_keys[:cnt].T  # (L, cnt), slot order = gidx order
+    d_gidx = jnp.broadcast_to(
+        n0 + jnp.arange(cnt, dtype=jnp.int32), (l_out, cnt)
+    )
+    dk, di = jax.vmap(lambda k, i: jax.lax.sort((k, i), num_keys=1))(d_keys, d_gidx)
+    # Merge against the *real* prefix of the base rows only (n0 is concrete
+    # here): the PAD_KEY tail never participates, so even a real key that
+    # aliases PAD_KEY merges correctly; then re-pad to capacity.
+    mk, mi = jax.vmap(_merge_sorted_rows)(
+        base.outer.sorted_keys[:, :n0], base.outer.sorted_idx[:, :n0], dk, di
+    )
+    outer = pad_tables(tables.TableSet(mk, mi), sidx.capacity)
+    alpha_n = jnp.maximum(jnp.int32(cfg.alpha * n1), 1)
+    heavy = tables.find_heavy(outer, alpha_n, cfg.h_max)
+    data_union = sidx.store[:n1]
+    if cfg.use_inner:
+        inner_keys, inner_idx = pipeline.build_inner(
+            base.inner_params, data_union, outer, heavy, cfg
+        )
+    else:
+        inner_keys, inner_idx = pipeline.empty_inner(l_out, cfg)
+    new_base = pipeline.SLSHIndex(
+        base.outer_params, base.inner_params, outer, heavy,
+        inner_keys, inner_idx, jnp.int32(n1),
+    )
+    return StreamIndex(
+        new_base,
+        delta_mod.make_delta(sidx.delta.outer_keys.shape[0], l_out, cfg.L_in),
+        sidx.store,
+        sidx.ts,
+    )
+
+
+def retention_keep(
+    ts: jax.Array, n: int, t_min: float, h_max: int
+) -> jax.Array:
+    """Surviving (ascending) store rows under a retention horizon.
+
+    Never empties: at least ``min(h_max, n)`` of the newest windows survive
+    (``find_heavy``'s top-k needs that many segments to select from, and a
+    monitor must keep answering after a stream gap longer than the
+    horizon) — slots fill in arrival order, so the newest sit at the end.
+    """
+    keep = jnp.nonzero(ts[:n] >= t_min)[0].astype(jnp.int32)
+    min_keep = min(max(h_max, 1), n)
+    if keep.shape[0] < min_keep:
+        keep = jnp.arange(n - min_keep, n, dtype=jnp.int32)
+    return keep
+
+
+def evict_before(
+    sidx: StreamIndex, cfg: pipeline.SLSHConfig, t_min: float
+) -> tuple[StreamIndex, jax.Array]:
+    """Drop stored points with ``ts < t_min`` and rebuild the base.
+
+    Host-level retention op. Implicitly compacts (the delta is folded into
+    the rebuilt base). Returns the new index plus the kept old global
+    indices (ascending) so callers can remap per-point metadata (labels).
+    Global indices are renumbered: old ``kept[i]`` becomes new ``i``.
+    """
+    sidx = compact(sidx, cfg)
+    n = int(sidx.base.n)
+    keep = retention_keep(sidx.ts, n, t_min, cfg.h_max)
+    if keep.shape[0] == n:
+        return sidx, keep
+    data = sidx.store[keep]
+    base = pipeline.build_from_params(
+        data, sidx.base.outer_params, sidx.base.inner_params, cfg
+    )
+    base = base._replace(outer=pad_tables(base.outer, sidx.capacity))
+    store = jnp.zeros_like(sidx.store).at[: keep.shape[0]].set(data)
+    ts = jnp.zeros_like(sidx.ts).at[: keep.shape[0]].set(sidx.ts[keep])
+    new = StreamIndex(
+        base,
+        delta_mod.make_delta(
+            sidx.delta.outer_keys.shape[0],
+            sidx.base.outer_params.salts.shape[0],
+            cfg.L_in,
+        ),
+        store,
+        ts,
+    )
+    return new, keep

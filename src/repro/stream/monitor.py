@@ -1,0 +1,402 @@
+"""Live ICU monitoring path: a sharded streaming DSLSH driver.
+
+``StreamingMonitor`` replays timestamped ABP lag windows (``data/abp`` +
+``data/windows``) as a stream through a ``Grid`` of streaming cells — the
+online form of the paper's deployment: the Forwarder routes each arriving
+window batch to one node (round-robin), every core of that node appends it
+to its delta segment, and AHE predictions are rolling DSLSH queries fanned
+out over base + delta on every cell with Reducer-style top-K merging.
+
+Sharded state layout: one ``NodeState`` per node, holding a *single* point
+store + timestamp vector shared by the node's ``p`` cells (cells only
+carry their ``L_out/p`` tables and delta keys — the store is not
+duplicated per core), kept in a Python list so ingesting into one node
+never copies the others. All nodes share one static shape, so the fan-out
+query jits once over the whole list.
+
+Maintenance is automatic: a node whose delta segment would overflow is
+compacted in place (stable CSR merge — see stream/index.py), and when a
+retention horizon is configured, compaction also evicts windows older than
+``t - retention_s`` (the stale-window policy: ICU relevance decays, and the
+store is fixed-capacity).
+
+Unlike the batch path, per-node stores need no sentinel padding: empty
+store rows are simply absent from every table, so they can never enter a
+top-K result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as D
+from repro.core import pipeline
+from repro.core import predict as predict_mod
+from repro.core import slsh, topk
+from repro.stream import delta as delta_mod
+from repro.stream import index as stream_index
+
+
+class CellState(NamedTuple):
+    """One core's share of a node: its tables + delta keys (no store)."""
+
+    base: pipeline.SLSHIndex  # capacity-padded CSR tables (DESIGN.md §9.1)
+    delta: delta_mod.DeltaIndex
+
+
+class NodeState(NamedTuple):
+    store: jax.Array  # (capacity, d) — shared by the node's p cells
+    ts: jax.Array  # (capacity,)
+    cells: CellState  # stacked (p, ...)
+
+
+def node_init(
+    root_key: jax.Array,
+    data_local: jax.Array,
+    cfg: slsh.SLSHConfig,
+    grid: D.Grid,
+    *,
+    capacity: int,
+    delta_cap: int,
+    t0: float = 0.0,
+) -> NodeState:
+    """One node: p cells over a shared store of the node's data slice."""
+    n0, d = data_local.shape
+    assert capacity >= n0, "node capacity below warmup shard size"
+
+    def per_core(core_id):
+        base = D.cell_build(root_key, data_local, core_id, cfg, grid)
+        base = base._replace(outer=stream_index.pad_tables(base.outer, capacity))
+        return CellState(
+            base, delta_mod.make_delta(delta_cap, cfg.L_out // grid.p, cfg.L_in)
+        )
+
+    cells = jax.vmap(per_core)(jnp.arange(grid.p, dtype=jnp.int32))
+    store = jnp.zeros((capacity, d), jnp.float32).at[:n0].set(data_local)
+    ts = jnp.zeros((capacity,), jnp.float32).at[:n0].set(jnp.float32(t0))
+    return NodeState(store, ts, cells)
+
+
+def _cell_as_stream(cell: CellState, node: NodeState) -> stream_index.StreamIndex:
+    """View one cell as a single-shard StreamIndex (for host maintenance)."""
+    return stream_index.StreamIndex(cell.base, cell.delta, node.store, node.ts)
+
+
+@dataclasses.dataclass
+class StreamEvent:
+    """One replay step: predictions for the arriving windows, then ingest."""
+
+    t: float  # stream timestamp of the batch
+    node: int  # node the batch was routed to
+    inserted: int  # windows absorbed into the node's delta segment
+    dropped: int  # windows dropped (delta + store both full)
+    compacted: bool  # node compacted before this ingest
+    evicted: int  # stale windows evicted during that compaction
+    preds: list  # AHE predictions for the arriving windows (pre-ingest)
+    labels: list  # ground-truth labels for the same windows
+    latency_s: float  # wall-clock latency of the prediction query
+    comparisons: float  # median per-cell unique candidates scanned
+    n_index: int  # points queryable across all nodes after ingest
+
+
+class StreamingMonitor:
+    """Replay a timestamped window stream through a sharded streaming DSLSH."""
+
+    def __init__(
+        self,
+        key: jax.Array,
+        init_points,
+        init_labels,
+        cfg: slsh.SLSHConfig,
+        grid: D.Grid,
+        *,
+        node_capacity: int,
+        delta_cap: int,
+        retention_s: float = float("inf"),
+        label_delay_s: float = 0.0,
+        t0: float = 0.0,
+    ):
+        """``label_delay_s``: how long after ingestion a window's AHE label
+        becomes observable (the condition window must close first —
+        ``cond_beats`` for windowed ABP data). Until revealed, a streamed
+        window votes as non-AHE (label 0), the conservative majority class;
+        0 attaches labels immediately (oracle mode, for equivalence tests).
+        Warmup labels are historical and attach immediately either way."""
+        init_points = np.asarray(init_points, np.float32)
+        init_labels = np.asarray(init_labels)
+        n0 = init_points.shape[0]
+        assert n0 > 0 and n0 % grid.nu == 0, "warmup set must divide across nodes"
+        n_loc = n0 // grid.nu
+        self.cfg, self.grid = cfg, grid
+        self.node_capacity, self.delta_cap = node_capacity, delta_cap
+        self.retention_s = retention_s
+        self.label_delay_s = label_delay_s
+        self._rr = 0  # round-robin Forwarder cursor
+        self._pending_labels: list[tuple[float, int, np.ndarray, np.ndarray]] = []
+        self.events: list[StreamEvent] = []
+
+        self.labels = np.zeros((grid.nu, node_capacity), np.int8)
+        for i in range(grid.nu):
+            self.labels[i, :n_loc] = init_labels[i * n_loc : (i + 1) * n_loc]
+
+        data_nodes = jnp.asarray(init_points).reshape(grid.nu, n_loc, -1)
+        self.state = [
+            node_init(
+                key, data_nodes[i], cfg, grid,
+                capacity=node_capacity, delta_cap=delta_cap, t0=t0,
+            )
+            for i in range(grid.nu)
+        ]
+        self._insert = jax.jit(self._insert_impl)
+        self._query = jax.jit(self._query_impl)
+
+    # ------------------------------------------------------------- jitted
+
+    def _insert_impl(self, node: NodeState, xs, t):
+        """Ingest one batch into one node: every cell hashes the batch with
+        its own table slice; the shared store is written once."""
+        n = node.cells.base.n[0]  # identical across the node's cells
+        room = stream_index.delta_room(self.node_capacity, self.delta_cap, n)
+
+        def per_cell(cell):
+            outer_keys, inner_keys = stream_index.hash_for_insert(
+                cell.base, xs, self.cfg
+            )
+            return CellState(
+                cell.base,
+                delta_mod.append_keys(cell.delta, outer_keys, inner_keys, room),
+            )
+
+        cells = jax.vmap(per_cell)(node.cells)
+        store, ts = stream_index.scatter_rows(
+            node.store, node.ts, n, node.cells.delta.count[0], room, xs, t
+        )
+        return NodeState(store, ts, cells)
+
+    def _node_query(self, node: NodeState, node_id: int, queries):
+        res = jax.lax.map(
+            lambda cell: pipeline.query_batch(
+                cell.base, node.store, queries, self.cfg,
+                delta=delta_mod.as_view(cell.delta, cell.base.n),
+            ),
+            node.cells,
+        )  # stacked over p
+        gidx = jnp.where(
+            res.knn_idx >= 0, res.knn_idx + node_id * self.node_capacity, -1
+        )
+        return res.knn_dist, gidx, res.comparisons
+
+    def _query_impl(self, state: list[NodeState], queries):
+        parts = [self._node_query(nd, i, queries) for i, nd in enumerate(state)]
+        kd = jnp.stack([p[0] for p in parts])  # (nu, p, Q, K)
+        ki = jnp.stack([p[1] for p in parts])
+        comps = jnp.stack([p[2] for p in parts])
+        q = queries.shape[0]
+        kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
+        ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
+        # cells of a node share its points, so the same neighbour can appear
+        # in several partial top-Ks: merge unique-by-index so the weighted
+        # vote never double-counts a point
+        fd, fi = jax.vmap(
+            lambda a, b: topk.masked_unique_topk_smallest(a, b, self.cfg.k)
+        )(kd, ki)
+        return fd, fi, comps
+
+    # -------------------------------------------------------- maintenance
+
+    def _maintain_node(self, node_idx: int, t: float) -> int:
+        """Compact (and, under a retention horizon, evict) one node's cells.
+
+        Returns the number of evicted windows; label slots are remapped.
+        The keep-set and the store/ts rebuild depend only on the node's
+        shared timestamps, so they are computed once; only the per-cell
+        tables are rebuilt per core."""
+        node = self.state[node_idx]
+        cells = [jax.tree.map(lambda a: a[j], node.cells) for j in range(self.grid.p)]
+        evicted = 0
+        t_min = t - self.retention_s if np.isfinite(self.retention_s) else None
+        n_tot = int(cells[0].base.n + cells[0].delta.count)
+        keep = (
+            stream_index.retention_keep(node.ts, n_tot, t_min, self.cfg.h_max)
+            if t_min is not None
+            else None
+        )
+        if keep is not None and keep.shape[0] < n_tot:
+            # evict: rebuild each cell's tables over the kept rows (this
+            # subsumes compaction); store/ts/labels renumber once
+            evicted = n_tot - int(keep.shape[0])
+            data = node.store[keep]
+
+            def rebuilt_cell(c):
+                base = pipeline.build_from_params(
+                    data, c.base.outer_params, c.base.inner_params, self.cfg
+                )
+                base = base._replace(
+                    outer=stream_index.pad_tables(base.outer, self.node_capacity)
+                )
+                return CellState(
+                    base,
+                    delta_mod.make_delta(
+                        self.delta_cap, self.cfg.L_out // self.grid.p, self.cfg.L_in
+                    ),
+                )
+
+            cells = [rebuilt_cell(c) for c in cells]
+            store = jnp.zeros_like(node.store).at[: keep.shape[0]].set(data)
+            ts = jnp.zeros_like(node.ts).at[: keep.shape[0]].set(node.ts[keep])
+            keep_np = np.asarray(keep)
+            relab = np.zeros((self.node_capacity,), np.int8)
+            relab[: keep_np.shape[0]] = self.labels[node_idx, keep_np]
+            self.labels[node_idx] = relab
+            # renumber (or drop) this node's pending label slots the same way
+            remapped = []
+            for reveal_t, nd, slots, labs in self._pending_labels:
+                if nd == node_idx:
+                    pos = np.searchsorted(keep_np, slots)
+                    ok = (pos < keep_np.shape[0]) & (keep_np[np.minimum(pos, keep_np.shape[0] - 1)] == slots)
+                    if not ok.any():
+                        continue
+                    slots, labs = pos[ok], labs[ok]
+                remapped.append((reveal_t, nd, slots, labs))
+            self._pending_labels = remapped
+        else:
+            store, ts = node.store, node.ts
+            cells = [
+                CellState(s.base, s.delta)
+                for s in (
+                    stream_index.compact(_cell_as_stream(c, node), self.cfg)
+                    for c in cells
+                )
+            ]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
+        self.state[node_idx] = NodeState(store, ts, stacked)
+        return evicted
+
+    # ------------------------------------------------------------- stream
+
+    def flush_labels(self, now: float) -> None:
+        """Attach pending labels whose condition windows have closed."""
+        still = []
+        for reveal_t, node_idx, slots, labs in self._pending_labels:
+            if reveal_t <= now:
+                self.labels[node_idx, slots] = labs
+            else:
+                still.append((reveal_t, node_idx, slots, labs))
+        self._pending_labels = still
+
+    def ingest(self, points, labels, t: float) -> dict:
+        """Route one window batch to the next node; auto-compact on pressure."""
+        self.flush_labels(t)
+        pts = np.asarray(points, np.float32)
+        labels = np.asarray(labels)
+        b = pts.shape[0]
+        node_idx = self._rr % self.grid.nu
+        self._rr += 1
+
+        def node_fill():
+            cells = self.state[node_idx].cells
+            return int(cells.base.n[0]), int(cells.delta.count[0])
+
+        def room_left(base_n, count):
+            # same formula the jitted insert uses for its drop decision
+            return int(
+                stream_index.delta_room(self.node_capacity, self.delta_cap, base_n)
+            ) - count
+
+        base_n, count = node_fill()
+        room = room_left(base_n, count)
+        compacted, evicted = False, 0
+        if b > room:
+            evicted = self._maintain_node(node_idx, t)
+            compacted = True
+            base_n, count = node_fill()
+            room = room_left(base_n, count)
+
+        self.state[node_idx] = self._insert(
+            self.state[node_idx], jnp.asarray(pts), jnp.float32(t)
+        )
+        inserted = min(b, max(room, 0))
+        slots = np.arange(base_n + count, base_n + count + inserted)
+        if self.label_delay_s > 0:
+            # the condition window has not closed yet — the label is future
+            # information; reveal it only once observable
+            self._pending_labels.append(
+                (t + self.label_delay_s, node_idx, slots, labels[:inserted].copy())
+            )
+        else:
+            self.labels[node_idx, slots] = labels[:inserted]
+        return dict(
+            node=node_idx, inserted=inserted, dropped=b - inserted,
+            compacted=compacted, evicted=evicted,
+        )
+
+    def predict(self, queries) -> tuple[np.ndarray, float, float]:
+        """AHE predictions for ``queries`` against the live sharded index.
+
+        Returns (predictions, wall-clock latency seconds, median per-cell
+        comparisons)."""
+        q = jnp.asarray(np.asarray(queries, np.float32))
+        t0 = time.perf_counter()
+        kd, ki, comps = self._query(self.state, q)
+        jax.block_until_ready((kd, ki, comps))
+        latency = time.perf_counter() - t0
+        preds = predict_mod.predict_batch(
+            jnp.asarray(self.labels.reshape(-1)), ki, kd
+        )
+        return np.asarray(preds), latency, float(np.median(np.asarray(comps)))
+
+    def n_index(self) -> int:
+        """Points queryable right now, across all nodes."""
+        return sum(
+            int(nd.cells.base.n[0] + nd.cells.delta.count[0]) for nd in self.state
+        )
+
+    def step(self, points, labels, t: float, *, predict: bool = True) -> StreamEvent:
+        """One monitoring step: predict on the arriving windows, then ingest."""
+        preds, latency, comps = (np.zeros((0,), np.int32), 0.0, 0.0)
+        if predict:
+            self.flush_labels(t)  # reveal labels observable by now, no later ones
+            preds, latency, comps = self.predict(points)
+        info = self.ingest(points, labels, t)
+        ev = StreamEvent(
+            t=float(t), node=info["node"], inserted=info["inserted"],
+            dropped=info["dropped"], compacted=info["compacted"],
+            evicted=info["evicted"], preds=np.asarray(preds).tolist(),
+            labels=np.asarray(labels).tolist(), latency_s=latency,
+            comparisons=comps, n_index=self.n_index(),
+        )
+        self.events.append(ev)
+        return ev
+
+    def replay(
+        self, points, labels, ts, *, batch_size: int = 8, predict_every: int = 1
+    ) -> list[StreamEvent]:
+        """Replay a whole timestamped window stream; returns its events."""
+        points = np.asarray(points, np.float32)
+        labels = np.asarray(labels)
+        ts = np.asarray(ts, np.float64)
+        out = []
+        for step_i, s in enumerate(range(0, points.shape[0], batch_size)):
+            e = min(s + batch_size, points.shape[0])
+            do_pred = predict_every > 0 and step_i % predict_every == 0
+            out.append(
+                self.step(
+                    points[s:e], labels[s:e], float(ts[e - 1]), predict=do_pred
+                )
+            )
+        return out
+
+    def mcc(self) -> float:
+        """MCC over every rolling prediction emitted so far."""
+        preds = [p for ev in self.events for p in ev.preds]
+        trues = [t for ev in self.events if ev.preds for t in ev.labels]
+        if not preds:
+            return 0.0
+        return float(
+            predict_mod.mcc(jnp.asarray(preds), jnp.asarray(trues[: len(preds)]))
+        )

@@ -196,6 +196,46 @@ def test_inner_layer_reduces_comparisons():
     assert float(jnp.mean(r_on.comparisons)) < float(jnp.mean(r_off.comparisons))
 
 
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_empty_bucket_query_well_formed(backend):
+    """A query whose probed buckets hold zero points must return sentinel
+    top-K (-1 idx, inf dist) and zero candidate stats on every path —
+    single-shard, distributed cell, and streaming — not incidental padding."""
+    import dataclasses
+
+    from repro.core import distributed as D
+    from repro import stream
+
+    # data lives in [0, 0.4]; a far-outside query hashes to the all-ones
+    # signature, which no data point can reach => every probed bucket empty
+    data = 0.4 * jax.random.uniform(jax.random.PRNGKey(0), (256, 8))
+    cfg = dataclasses.replace(_small_cfg(L_out=8, L_in=4), backend=backend)
+    q = jnp.full((3, 8), 5000.0)
+
+    index = slsh.build_index(jax.random.PRNGKey(1), data, cfg)
+    res = slsh.query_batch(index, data, q, cfg)
+    assert res.knn_idx.shape == (3, cfg.k) and res.knn_dist.shape == (3, cfg.k)
+    assert (np.asarray(res.knn_idx) == -1).all()
+    assert np.isinf(np.asarray(res.knn_dist)).all()
+    assert (np.asarray(res.comparisons) == 0).all()
+    assert (np.asarray(res.bucket_total) == 0).all()
+
+    grid = D.Grid(nu=1, p=2)
+    cell = D.cell_build(jax.random.PRNGKey(1), data, jnp.int32(1), cfg, grid)
+    cres = D.cell_query(cell, data, jnp.int32(0), q, cfg, grid)
+    assert (np.asarray(cres.knn_idx) == -1).all()
+    assert np.isinf(np.asarray(cres.knn_dist)).all()
+
+    sidx = stream.stream_init(
+        jax.random.PRNGKey(1), data[:200], cfg, capacity=300, delta_cap=64
+    )
+    sidx = stream.insert_batch(sidx, data[200:], cfg)
+    sres = stream.query_batch(sidx, q, cfg)
+    assert (np.asarray(sres.knn_idx) == -1).all()
+    assert np.isinf(np.asarray(sres.knn_dist)).all()
+    assert (np.asarray(sres.comparisons) == 0).all()
+
+
 def test_query_of_indexed_point_finds_itself():
     data = _clustered_data(jax.random.PRNGKey(8), n_clusters=8, per=30)
     cfg = _small_cfg()

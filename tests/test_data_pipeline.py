@@ -51,6 +51,21 @@ def test_windows_labels_match_definition():
         assert bool(pos) == bool(got)
 
 
+def test_stream_windows_match_batch_and_are_timestamped():
+    """The streaming generator yields the batch builder's exact windows plus
+    strictly-increasing availability times (end of each lag window)."""
+    mapv, valid = _small_record(seed=1, n_beats=40_000, episode_rate=1.0 / 3000.0)
+    cfg = windows.WindowConfig("t", lag_beats=300, cond_beats=300)
+    bp, bl = windows.windows_from_record(mapv, valid, cfg)
+    sp, sl, ts = windows.stream_windows_from_record(mapv, valid, cfg)
+    np.testing.assert_array_equal(bp, sp)
+    np.testing.assert_array_equal(bl, sl)
+    assert ts.shape == (bp.shape[0],)
+    assert (np.diff(ts) > 0).all()
+    assert ts[0] == cfg.lag_beats  # first window available after one lag
+    assert ts[-1] + cfg.cond_beats <= mapv.shape[0]  # labels live in the future
+
+
 def test_window_features_are_subwindow_means():
     mapv, valid = _small_record(seed=2, n_beats=5_000, episode_rate=0.0)
     cfg = windows.WindowConfig("t", lag_beats=300, cond_beats=300)

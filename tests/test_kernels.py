@@ -83,6 +83,19 @@ def test_bitsample_pack_matches_core_hashing(t, d, m):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("t", [1, 3, 9, 100])
+def test_hash_pack_small_batch_clamp_bit_exact(t):
+    """Streaming inserts hash tiny batches: the row-block clamp must keep
+    the kernel bit-exact with the reference at every batch size."""
+    params = hashing.make_bitsample(
+        jax.random.PRNGKey(7), L=3, m=33, d=6, lo=0.0, hi=1.0
+    )
+    x = jax.random.uniform(jax.random.PRNGKey(8), (t, 6))
+    want = hashing.pack_bits(hashing.signature_bits(params, x))
+    got = hp_ops.signature_words_kernel(params, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_hash_points_kernel_drop_in():
     key = jax.random.PRNGKey(3)
     params = hashing.make_bitsample(key, L=4, m=20, d=12, lo=0.0, hi=1.0)

@@ -12,7 +12,8 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import hashing, topk
+from repro.core import distributed as D
+from repro.core import hashing, pknn, topk
 from repro.models import common as C
 
 jax.config.update("jax_platform_name", "cpu")
@@ -43,6 +44,30 @@ def test_hash_keys_stable_under_seed(seed):
     np.testing.assert_array_equal(
         np.asarray(hashing.hash_points(p1, x)), np.asarray(hashing.hash_points(p2, x))
     )
+
+
+@given(
+    st.integers(0, 2**31 - 1),  # data seed
+    st.integers(5, 40),  # n real points
+    st.integers(2, 16),  # shard multiple
+    st.integers(1, 5),  # k
+)
+@settings(max_examples=25, deadline=None)
+def test_pad_sentinels_never_in_topk(seed, n, multiple, k):
+    """Sentinel pad points from ``pad_to_multiple`` never appear in any
+    top-K result (k <= n real points): their coordinates are sentinel-far,
+    so every real point outranks them. Stream inserts lean on the same
+    no-phantom-neighbours invariant (DESIGN.md §9)."""
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0.0, 200.0, (n, 6)).astype(np.float32)
+    labs = np.zeros((n,), np.int8)
+    padded, _, n_real = D.pad_to_multiple(pts, labs, multiple)
+    assert n_real == n and padded.shape[0] % multiple == 0
+    queries = jnp.asarray(pts[: min(n, 8)])
+    _, ki = pknn.knn_batch(jnp.asarray(padded), queries, k)
+    ki_np = np.asarray(ki)
+    assert (ki_np[ki_np >= 0] < n).all(), "sentinel pad retrieved"
 
 
 @given(st.integers(0, 1000), st.integers(2, 8))

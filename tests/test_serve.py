@@ -104,6 +104,68 @@ def test_make_knn_lm_hook_wires_retrieval():
     assert (np.asarray(jnp.argmax(out, -1)) == 11).all()
 
 
+def test_serve_engine_deadline_mid_decode():
+    """A request whose straggler deadline expires mid-decode is finalized
+    with the tokens produced so far, ``timed_out`` set, and ``latency_s``
+    populated on the timeout path; batchmates keep decoding to max_new."""
+    cfg = configs.get("granite-8b", smoke=True)
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    straggler = engine.Request(
+        rid=0, tokens=rng.integers(0, cfg.vocab, 12), max_new=64, deadline_s=0.0
+    )
+    healthy = engine.Request(
+        rid=1, tokens=rng.integers(0, cfg.vocab, 12), max_new=4
+    )
+    eng = engine.ServeEngine(model, params, max_batch=2, max_len=128)
+    done = eng.serve([straggler, healthy])
+    assert done[0].done and done[0].timed_out
+    assert done[0].latency_s > 0.0, "latency must populate on the timeout path"
+    assert len(done[0].result) < done[0].max_new
+    assert done[1].done and not done[1].timed_out
+    assert len(done[1].result) == 4 and done[1].latency_s > 0.0
+
+
+def test_serve_engine_completed_request_never_times_out():
+    """A request that produced all its tokens is complete — an expired
+    deadline while batchmates keep decoding must not flag it timed_out."""
+    cfg = configs.get("granite-8b", smoke=True)
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    # max_new=0 is complete at step 0, strictly before its deadline check
+    finished = engine.Request(
+        rid=0, tokens=rng.integers(0, cfg.vocab, 8), max_new=0, deadline_s=0.0
+    )
+    decoding = engine.Request(rid=1, tokens=rng.integers(0, cfg.vocab, 8), max_new=3)
+    done = engine.ServeEngine(model, params, max_batch=2, max_len=64).serve(
+        [finished, decoding]
+    )
+    assert done[0].done and not done[0].timed_out
+    assert done[0].latency_s > 0.0
+    assert len(done[1].result) == 3 and not done[1].timed_out
+
+
+def test_serve_engine_all_deadlines_expired_stops_early():
+    """When every request in the batch has timed out, decode stops: no
+    tokens trickle in after expiry and latencies reflect the expiry time."""
+    cfg = configs.get("granite-8b", smoke=True)
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    reqs = [
+        engine.Request(
+            rid=i, tokens=rng.integers(0, cfg.vocab, 8), max_new=256, deadline_s=0.0
+        )
+        for i in range(2)
+    ]
+    done = engine.ServeEngine(model, params, max_batch=2, max_len=512).serve(reqs)
+    assert all(r.done and r.timed_out for r in done)
+    assert all(r.result == [] for r in done)
+    assert all(r.latency_s > 0.0 for r in done)
+
+
 def test_serve_engine_batched_requests():
     cfg = configs.get("granite-8b", smoke=True)
     model = api.build_model(cfg)
