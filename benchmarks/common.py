@@ -64,7 +64,7 @@ def evaluate(points, labels, qx, qy, cfg, grid, key=None):
     build_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    kd, ki, comps = D.simulate_query(idx, pts_j, qx_j, cfg, grid)
+    kd, ki, comps, ovf = D.simulate_query(idx, pts_j, qx_j, cfg, grid)
     jax.block_until_ready((kd, ki, comps))
     query_s = time.perf_counter() - t0
 
@@ -80,6 +80,7 @@ def evaluate(points, labels, qx, qy, cfg, grid, key=None):
     lo, hi = np.percentile(max_comps, [2.5, 97.5])
     pknn_per_proc = float(np.asarray(pcomps)[0, 0, 0])
     return dict(
+        overflow_cells=int((np.asarray(ovf) > 0).sum()),
         mcc_slsh=mcc_slsh,
         mcc_pknn=mcc_pknn,
         mcc_loss=mcc_pknn - mcc_slsh,

@@ -1,62 +1,12 @@
 """Kernel microbenchmarks (interpret mode on CPU — correctness-scale only;
-the BlockSpec tiling targets TPU v5e), plus reference-vs-pallas timings for
-the full staged query pipeline (emitted to BENCH_pipeline.json so later PRs
-have a perf trajectory)."""
+the BlockSpec tiling targets TPU v5e). The end-to-end staged-pipeline
+benchmark lives in benchmarks/pipeline_bench.py."""
 from __future__ import annotations
-
-import dataclasses
-import json
-import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-
-PIPELINE_JSON = os.environ.get(
-    "REPRO_BENCH_PIPELINE_JSON",
-    os.path.join(os.path.dirname(__file__), "artifacts", "BENCH_pipeline.json"),
-)
-
-
-def run_pipeline():
-    """Build + query the staged SLSH pipeline end-to-end per backend."""
-    from repro.core import slsh
-
-    n, d, nq = (16384, 32, 256) if common.FULL else (2048, 32, 64)
-    key = jax.random.PRNGKey(0)
-    data = jax.random.uniform(key, (n, d))
-    q = data[:nq] + 0.01 * jax.random.normal(jax.random.PRNGKey(1), (nq, d))
-    cfg = common.slsh_cfg(
-        m_out=16, L_out=8, m_in=8, L_in=4, alpha=0.01, val_lo=0.0, val_hi=1.0,
-        c_max=64, c_in=16, h_max=4, p_max=128, build_chunk=512, query_chunk=32,
-    )
-    report = {
-        "n": n, "d": d, "nq": nq,
-        "config": {k: getattr(cfg, k) for k in ("m_out", "L_out", "m_in", "L_in", "c_max", "k")},
-        "backends": {},
-    }
-    for backend in ("reference", "pallas"):
-        cfg_b = dataclasses.replace(cfg, backend=backend)
-        idx, us_build = common.timer(
-            lambda: slsh.build_index(jax.random.PRNGKey(2), data, cfg_b)
-        )
-        _, us_query = common.timer(
-            lambda: slsh.query_batch(idx, data, q, cfg_b), repeats=3
-        )
-        report["backends"][backend] = {
-            "build_us": us_build,
-            "query_us": us_query,
-            "us_per_query": us_query / nq,
-        }
-        yield (f"pipeline/build_{backend}_{n}x{d}", us_build, f"backend={backend}")
-        yield (f"pipeline/query_{backend}_{nq}q", us_query, f"backend={backend}")
-    ref, pal = (report["backends"][b]["query_us"] for b in ("reference", "pallas"))
-    report["pallas_over_reference_query"] = pal / ref
-    os.makedirs(os.path.dirname(PIPELINE_JSON) or ".", exist_ok=True)
-    with open(PIPELINE_JSON, "w") as f:
-        json.dump(report, f, indent=2)
-    yield ("pipeline/json_report", 0.0, PIPELINE_JSON)
 
 
 def run():
@@ -69,17 +19,15 @@ def run():
     cands = jax.random.uniform(key, (8, 2048, 30))
     mask = jnp.ones((8, 2048), bool)
     _, us = common.timer(lambda: l1.l1_topk(q, cands, mask, k=10), repeats=3)
-    yield ("kernel/l1_topk_8x2048", us, "interpret=True")
+    yield ("kernel/l1_topk_8x2048", us, "interpret=platform")
 
     x = jax.random.normal(key, (512, 30))
     proj = jax.random.normal(key, (30, 128))
     _, us = common.timer(lambda: hp.signrp_pack(x, proj), repeats=3)
-    yield ("kernel/hash_pack_512x128", us, "interpret=True")
+    yield ("kernel/hash_pack_512x128", us, "interpret=platform")
 
     qkv = jax.random.normal(key, (1, 4, 256, 64))
     _, us = common.timer(
         lambda: fa.flash_attention(qkv, qkv[:, :2], qkv[:, :2], causal=True), repeats=3
     )
-    yield ("kernel/flash_attn_256", us, "interpret=True")
-
-    yield from run_pipeline()
+    yield ("kernel/flash_attn_256", us, "interpret=platform")

@@ -1,0 +1,129 @@
+"""Staged-pipeline benchmark: reference vs pallas build/query timings plus
+the paper's headline metric (comparisons vs exhaustive search) and the
+compaction stage's occupancy, at a scale where the candidate budgets
+actually bind (default n=8192, d=64; REPRO_BENCH_FULL=1 for n=65536).
+
+Timings are the jitted steady state (tracing is a one-off, excluded by the
+warmup call), and the two backends' query samples interleave round-robin so
+machine-load drift hits both equally — the CI perf gate
+(``pallas_over_reference_query`` <= 1 + noise, see ci.yml) needs that
+robustness on shared runners.
+
+Emitted to BENCH_pipeline.json (path override: REPRO_BENCH_PIPELINE_JSON)
+so later PRs have a perf trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+PIPELINE_JSON = os.environ.get(
+    "REPRO_BENCH_PIPELINE_JSON",
+    os.path.join(os.path.dirname(__file__), "artifacts", "BENCH_pipeline.json"),
+)
+
+QUERY_ROUNDS = 21
+
+
+def _sample(fn) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def run():
+    """Build + query the staged SLSH pipeline end-to-end per backend."""
+    from repro.core import pipeline, slsh
+
+    n, d, nq = (65536, 64, 512) if common.FULL else (8192, 64, 256)
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(key, (n, d))
+    q = data[:nq] + 0.01 * jax.random.normal(jax.random.PRNGKey(1), (nq, d))
+    cfg = common.slsh_cfg(
+        m_out=16, L_out=16, m_in=12, L_in=4, alpha=0.005, val_lo=0.0, val_hi=1.0,
+        c_max=64, c_in=16, h_max=8, p_max=256, c_comp=256,
+        build_chunk=2048, query_chunk=128,
+    )
+    c_total = cfg.L_out * cfg.slot
+    c_comp_eff = pipeline._compact_width(cfg, c_total, n)
+    report = {
+        "n": n, "d": d, "nq": nq,
+        "config": {
+            k: getattr(cfg, k)
+            for k in ("m_out", "L_out", "m_in", "L_in", "c_max", "c_comp", "k")
+        },
+        "gather_width": c_total,
+        "c_comp_effective": c_comp_eff,
+        "backends": {},
+    }
+
+    backends = ("reference", "pallas")
+    qfns, idxs, res = {}, {}, None
+    for backend in backends:
+        cfg_b = dataclasses.replace(cfg, backend=backend)
+        build = jax.jit(lambda d_: slsh.build_index(jax.random.PRNGKey(2), d_, cfg_b))
+        idx, us_build = common.timer(lambda: build(data))
+        idxs[backend] = idx
+        qfns[backend] = jax.jit(
+            lambda ix, qs, _cfg=cfg_b: slsh.query_batch(ix, data, qs, _cfg)
+        )
+        res = qfns[backend](idx, q)  # warmup (compile) + result
+        jax.block_until_ready(res)
+        report["backends"][backend] = {"build_us": us_build}
+        yield (f"pipeline/build_{backend}_{n}x{d}", us_build, f"backend={backend}")
+
+    # interleaved query sampling: one ref + one pallas sample per round
+    samples = {b: [] for b in backends}
+    for _ in range(QUERY_ROUNDS):
+        for backend in backends:
+            samples[backend].append(
+                _sample(lambda: qfns[backend](idxs[backend], q))
+            )
+    for backend in backends:
+        us_query = float(np.median(samples[backend])) * 1e6
+        report["backends"][backend]["query_us"] = us_query
+        report["backends"][backend]["us_per_query"] = us_query / nq
+        yield (f"pipeline/query_{backend}_{nq}q", us_query, f"backend={backend}")
+
+    # --- the paper's headline metric + compaction health (backend-agnostic:
+    # both backends return identical results, so either serves)
+    comps = np.asarray(res.comparisons, np.float64)
+    overflow = np.asarray(res.compaction_overflow)
+    med_comps = float(np.median(comps))
+    report["comparisons"] = {
+        "median": med_comps,
+        "mean": float(comps.mean()),
+        "max": int(comps.max()),
+        "vs_exhaustive": med_comps / n,  # paper reports the inverse as "X×"
+        "speedup_vs_exhaustive": n / max(med_comps, 1.0),
+    }
+    report["compaction"] = {
+        "occupancy_median": med_comps / c_comp_eff,
+        "occupancy_max": float(comps.max()) / c_comp_eff,
+        "overflow_queries": int((overflow > 0).sum()),
+        "overflow_max": int(overflow.max()),
+    }
+    yield (
+        "pipeline/comparisons", 0.0,
+        f"median={med_comps:.0f} speedup_vs_exhaustive="
+        f"{n / max(med_comps, 1.0):.1f}x",
+    )
+    yield (
+        "pipeline/compaction", 0.0,
+        f"occupancy={med_comps / c_comp_eff:.2f} "
+        f"overflow_q={int((overflow > 0).sum())}",
+    )
+
+    ref, pal = (report["backends"][b]["query_us"] for b in backends)
+    report["pallas_over_reference_query"] = pal / ref
+    os.makedirs(os.path.dirname(PIPELINE_JSON) or ".", exist_ok=True)
+    with open(PIPELINE_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    yield ("pipeline/json_report", 0.0, PIPELINE_JSON)

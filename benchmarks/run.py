@@ -15,6 +15,7 @@ def main() -> None:
         fig3_tradeoff,
         fig4_slsh,
         kernels_bench,
+        pipeline_bench,
         roofline,
         stream_bench,
         table2_scaling,
@@ -27,6 +28,7 @@ def main() -> None:
         "table2": table2_scaling,
         "table3": table3_scaling,
         "kernels": kernels_bench,
+        "pipeline": pipeline_bench,
         "roofline": roofline,
         "stream": stream_bench,
     }

@@ -46,13 +46,13 @@ def mcc_of(ki, kd, qy_):
 
 
 # phase 1: healthy cluster
-kd, ki, _ = D.simulate_query(index, pts, jnp.asarray(qx[:100]), cfg, grid)
+kd, ki, _, _ = D.simulate_query(index, pts, jnp.asarray(qx[:100]), cfg, grid)
 print(f"phase 1 (healthy):     MCC={mcc_of(ki, kd, qy[:100]):.3f}")
 
 # phase 2: node 2 misses its heartbeat -> Reducer proceeds without it
 monitor.beat(2, t=now - 10.0)
 drop = jnp.asarray(monitor.drop_mask(now=now))
-kd, ki, _ = D.simulate_query(index, pts, jnp.asarray(qx[100:200]), cfg, grid, drop_mask=drop)
+kd, ki, _, _ = D.simulate_query(index, pts, jnp.asarray(qx[100:200]), cfg, grid, drop_mask=drop)
 print(f"phase 2 (node 2 down, deadline reducer): MCC={mcc_of(ki, kd, qy[100:200]):.3f}"
       f"  (answers stay available, recall degrades gracefully)")
 
@@ -61,7 +61,7 @@ grid2, index2, pts2, labs2, _ = ft.elastic_reshard_dslsh(
     jax.random.PRNGKey(1), train["points"], train["labels"], cfg, grid, [2]
 )
 labs = labs2
-kd, ki, comps = D.simulate_query(index2, pts2, jnp.asarray(qx[200:]), cfg, grid2)
+kd, ki, comps, _ = D.simulate_query(index2, pts2, jnp.asarray(qx[200:]), cfg, grid2)
 pred = predict.predict_batch(labs2, ki, kd)
 print(f"phase 3 (re-sharded to nu={grid2.nu}): MCC="
       f"{float(predict.mcc(pred, jnp.asarray(qy[200:]))):.3f}  "

@@ -33,7 +33,7 @@ pts, labs = jnp.asarray(pts), jnp.asarray(labs)
 index = D.simulate_build(jax.random.PRNGKey(1), pts, cfg, grid)
 
 # 4. Query + Reducer top-K merge + weighted vote.
-kd, ki, comps = D.simulate_query(index, pts, jnp.asarray(qx), cfg, grid)
+kd, ki, comps, _ = D.simulate_query(index, pts, jnp.asarray(qx), cfg, grid)
 pred = predict.predict_batch(labs, ki, kd)
 mcc = float(predict.mcc(pred, jnp.asarray(qy)))
 

@@ -98,6 +98,9 @@ class CellResult(NamedTuple):
     knn_dist: jax.Array  # (Q, K) partial distances
     knn_idx: jax.Array  # (Q, K) GLOBAL indices (-1 pad)
     comparisons: jax.Array  # (Q,) unique candidates scanned in this cell
+    # unique survivors beyond this cell's c_comp budget (DESIGN.md §3) —
+    # carried alongside comparisons so no execution path truncates silently
+    compaction_overflow: jax.Array  # (Q,)
 
 
 def cell_query(
@@ -111,7 +114,7 @@ def cell_query(
     del grid  # the pipeline derives this cell's table count from the index
     res = pipeline.query_batch(index, data_local, queries, cfg)
     gidx = jnp.where(res.knn_idx >= 0, res.knn_idx + node_offset, -1)
-    return CellResult(res.knn_dist, gidx, res.comparisons)
+    return CellResult(res.knn_dist, gidx, res.comparisons, res.compaction_overflow)
 
 
 # ----------------------------------------------------------------- reducers
@@ -179,7 +182,8 @@ def dslsh_query(
 ):
     """Resolve queries on the distributed index.
 
-    Returns (knn_dist (Q,K), knn_idx (Q,K) global, comparisons (nu, p, Q)).
+    Returns (knn_dist (Q,K), knn_idx (Q,K) global, comparisons (nu, p, Q),
+    compaction_overflow (nu, p, Q)).
     ``drop_mask`` (nu,) bool marks nodes dropped by the straggler deadline —
     the Reducer proceeds without their partials (paper's latency-first mode).
     """
@@ -202,9 +206,9 @@ def dslsh_query(
         else:
             kd, ki = merge_axis_allgather("model", kd, ki, cfg.k)
             kd, ki = merge_axis_allgather("data", kd, ki, cfg.k)
-        return kd, ki, res.comparisons[None, None]
+        return kd, ki, res.comparisons[None, None], res.compaction_overflow[None, None]
 
-    qd, qi, comps = _shard_map(
+    qd, qi, comps, overflow = _shard_map(
         body,
         mesh,
         in_specs=(
@@ -213,9 +217,9 @@ def dslsh_query(
             P(),
             P(),
         ),
-        out_specs=(P(), P(), P("data", "model")),
+        out_specs=(P(), P(), P("data", "model"), P("data", "model")),
     )(index, data, queries, drop_mask)
-    return qd, qi, comps
+    return qd, qi, comps, overflow
 
 
 # ------------------------------------------------------------ simulated API
@@ -269,7 +273,8 @@ def simulate_query(
     kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
     ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
     fd, fi = jax.vmap(lambda a, b: topk.masked_topk_smallest(a, b, cfg.k))(kd, ki)
-    return fd, fi, res.comparisons  # comparisons: (nu, p, Q)
+    # comparisons / compaction_overflow: (nu, p, Q)
+    return fd, fi, res.comparisons, res.compaction_overflow
 
 
 # ----------------------------------------------------------------- PKNN

@@ -3,25 +3,33 @@
 Every index build and query in the repo — single-shard (``slsh.build_index``
 / ``slsh.query_batch``), distributed (``distributed.cell_build`` /
 ``cell_query``), and the serving datastore — runs through this module. The
-per-query hot path is decomposed into four explicit batched stages over a
+per-query hot path is decomposed into five explicit batched stages over a
 query chunk (DESIGN.md §3):
 
   1. hash    — m-bit signatures for the whole chunk -> outer probe keys
                (incl. multiprobe bit-flips) + inner-layer keys
   2. gather  — probe buckets and gather candidates into a dense (Q, C)
-               index tensor (C = L_out * slot, statically shaped)
+               index tensor (C = L_out * slot, statically shaped); one
+               batched searchsorted per table covers every query and probe
   3. dedup   — sort-based static dedup; yields the paper's #comparisons
-  4. top-k   — one masked L1 top-k over the dense (Q, C, d) candidate block
+  4. compact — sort each query's unique survivors to the front of a tight
+               (Q, c_comp) buffer so downstream work scales with actual
+               comparisons, not with the L_out*slot gather budget; unique
+               survivors beyond the budget are counted in
+               ``QueryResult.compaction_overflow``, never silently dropped
+  5. top-k   — one masked L1 top-k over the compacted (Q, c_comp, d) block
 
-Stages 1 and 4 dispatch on ``SLSHConfig.backend`` (DESIGN.md §6):
+Stages 1 and 5 dispatch on ``SLSHConfig.backend`` (DESIGN.md §6):
 ``"reference"`` is pure jnp; ``"pallas"`` routes signatures through the
 ``kernels/hash_pack`` fused sign-pack kernel and distances through the
-``kernels/l1_topk`` streaming top-k kernel. Backends are numerically
+``kernels/l1_topk`` single-pass top-k kernel (``SLSHConfig.interpret``
+overrides the platform interpret policy for both). Backends are numerically
 equivalent — enforced by tests/test_pipeline_backends.py.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -51,10 +59,20 @@ class SLSHConfig:
     c_in: int = 32
     h_max: int = 8
     p_max: int = 512
+    # compacted candidate budget for the distance stage (DESIGN.md §3):
+    # unique survivors beyond it are counted in
+    # ``QueryResult.compaction_overflow``; <= 0 disables the cap. The
+    # effective width is further clamped to both the gather width and the
+    # indexed point count (either bounds the unique-survivor count, so the
+    # clamp never costs exactness — see ``_compact_width``).
+    c_comp: int = 1024
     build_chunk: int = 4096
     query_chunk: int = 64
     # compute backend for the hash and top-k stages (DESIGN.md §6)
     backend: str = "reference"
+    # Pallas interpret-mode override: None = platform policy (interpret
+    # everywhere except real TPU), True/False forces it (DESIGN.md §6)
+    interpret: bool | None = None
 
     @property
     def slot(self) -> int:
@@ -78,6 +96,9 @@ class QueryResult(NamedTuple):
     knn_dist: jax.Array  # (..., K) float32, inf pad
     comparisons: jax.Array  # (...,) int32 — unique candidates scanned
     bucket_total: jax.Array  # (...,) int32 — sum of probed bucket populations
+    # unique survivors beyond the c_comp budget, excluded from the distance
+    # stage (0 everywhere means the compacted result is exact)
+    compaction_overflow: jax.Array  # (...,) int32
 
 
 class DeltaView(NamedTuple):
@@ -122,40 +143,56 @@ class BackendOps(NamedTuple):
     l1_topk: Callable[..., tuple[jax.Array, jax.Array]]
 
 
-_BACKENDS: dict[str, BackendOps] = {}
+_BACKENDS: dict[str, BackendOps | Callable[["SLSHConfig | None"], BackendOps]] = {}
 
 
-def register_backend(name: str, ops: BackendOps) -> None:
+def register_backend(
+    name: str, ops: BackendOps | Callable[["SLSHConfig | None"], BackendOps]
+) -> None:
+    """Register a backend: either a plain ``BackendOps`` or a factory
+    ``cfg -> BackendOps`` for backends that bind per-config state (the
+    pallas backend binds ``cfg.interpret`` — DESIGN.md §6)."""
     _BACKENDS[name] = ops
 
 
-def get_backend(name: str) -> BackendOps:
+def get_backend(name: str, cfg: "SLSHConfig | None" = None) -> BackendOps:
     try:
-        return _BACKENDS[name]
+        entry = _BACKENDS[name]
     except KeyError:
         raise ValueError(
             f"unknown SLSH backend {name!r}; registered: {sorted(_BACKENDS)}"
         ) from None
+    return entry if isinstance(entry, BackendOps) else entry(cfg)
 
 
 def _ref_signature_words(params: hashing.HashParams, x: jax.Array) -> jax.Array:
     return hashing.pack_bits(hashing.signature_bits(params, x))
 
 
-def _pallas_signature_words(params: hashing.HashParams, x: jax.Array) -> jax.Array:
+def _pallas_signature_words(
+    params: hashing.HashParams, x: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
     from repro.kernels.hash_pack import ops as hp_ops
 
-    return hp_ops.signature_words_kernel(params, x)
+    return hp_ops.signature_words_kernel(params, x, interpret=interpret)
 
 
-def _pallas_l1_topk(q, cands, mask, k):
+def _pallas_l1_topk(q, cands, mask, k, *, interpret: bool | None = None):
     from repro.kernels.l1_topk import ops as l1_ops
 
-    return l1_ops.l1_topk(q, cands, mask, k=k)
+    return l1_ops.l1_topk(q, cands, mask, k=k, interpret=interpret)
+
+
+def _pallas_ops(cfg: "SLSHConfig | None") -> BackendOps:
+    interp = None if cfg is None else cfg.interpret
+    return BackendOps(
+        functools.partial(_pallas_signature_words, interpret=interp),
+        functools.partial(_pallas_l1_topk, interpret=interp),
+    )
 
 
 register_backend("reference", BackendOps(_ref_signature_words, topk.masked_l1_topk_batch))
-register_backend("pallas", BackendOps(_pallas_signature_words, _pallas_l1_topk))
+register_backend("pallas", _pallas_ops)
 
 
 # ------------------------------------------------------------------- build
@@ -271,7 +308,7 @@ def build_from_params(
     table count is taken from the params, never from ``cfg.L_out``.
     """
     n = data.shape[0]
-    backend = get_backend(cfg.backend)
+    backend = get_backend(cfg.backend, cfg)
     l_out = outer_params.salts.shape[0]
     keys = hash_keys_chunked(outer_params, data, cfg.build_chunk, backend)
     outer = tables.build_tables(keys)
@@ -336,72 +373,88 @@ def _gather_one_table(
     index: SLSHIndex,
     cfg: SLSHConfig,
     l: jax.Array,
-    q_probe_keys: jax.Array,  # (1 + multiprobe,) base key first
-    q_in_keys: jax.Array,  # (L_in,)
+    probe_keys_t: jax.Array,  # (Q, 1 + multiprobe) base key first
+    inner_keys: jax.Array,  # (Q, L_in)
     delta: DeltaView | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Candidate indices (slot,) for one outer table; -1 where masked.
+    """All queries' candidates (Q, slot) for one outer table; -1 where masked.
 
-    Also returns the base-bucket population (for stats). When ``delta`` is
+    Also returns the base-bucket populations (Q,) (for stats). Every bucket
+    range for the table resolves through *one* batched searchsorted pair
+    over all Q*(1+multiprobe) probe keys — the former per-query scalar form
+    lowered to a swarm of tiny binary-search gathers. When ``delta`` is
     given, each probe fans out over base + delta segments and the merged
     candidate set equals the one a from-scratch build over the union would
     gather (DESIGN.md §9).
     """
     sk_row = index.outer.sorted_keys[l]
     si_row = index.outer.sorted_idx[l]
-    q_key = q_probe_keys[0]
-    lo, hi = tables.bucket_range(sk_row, q_key)
-    bucket_sz = hi - lo
+    q_n, p_n = probe_keys_t.shape
+    flat = probe_keys_t.reshape(-1)
+    lo = jnp.searchsorted(sk_row, flat, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(sk_row, flat, side="right").astype(jnp.int32)
+    lo, hi = lo.reshape(q_n, p_n), hi.reshape(q_n, p_n)
+    bucket_sz = hi[:, 0] - lo[:, 0]
     if delta is not None:
-        d_outer = delta.valid & (delta.outer_keys[:, l] == q_key)  # (cap,)
-        bucket_sz = bucket_sz + jnp.sum(d_outer.astype(jnp.int32))
+        d_outer = delta.valid[None, :] & (
+            delta.outer_keys[None, :, l] == probe_keys_t[:, :1]
+        )  # (Q, cap)
+        bucket_sz = bucket_sz + jnp.sum(d_outer.astype(jnp.int32), axis=-1)
+    else:
+        d_outer = jnp.zeros((q_n, 1), bool)  # unused vmap carrier
 
-    def probe(key):
-        plo, phi = tables.bucket_range(sk_row, key)
-        cand = tables.gather_bucket(si_row, plo, phi, cfg.c_max)
-        if delta is None:
-            return cand
-        dm = delta.valid & (delta.outer_keys[:, l] == key)
-        return _merge_capped(cand, dm, delta.gidx, cfg.c_max)
-
-    outer_cand = jax.vmap(probe)(q_probe_keys).reshape(-1)
     slot = cfg.slot
-    outer_cand = jnp.pad(
-        outer_cand, (0, slot - outer_cand.shape[0]), constant_values=-1
-    )
 
-    if not cfg.use_inner:
-        return outer_cand, bucket_sz
+    def per_query(lo_q, hi_q, keys_q, in_keys_q, d_outer_q):
+        def probe(lo1, hi1, key1):
+            cand = tables.gather_bucket(si_row, lo1, hi1, cfg.c_max)
+            if delta is None:
+                return cand
+            dm = delta.valid & (delta.outer_keys[:, l] == key1)
+            return _merge_capped(cand, dm, delta.gidx, cfg.c_max)
 
-    # Is this bucket stratified? Match against the heavy-bucket registry.
-    # (Streaming note: the registry is the *base* one — stratification is
-    # frozen between compactions, DESIGN.md §9.)
-    hk = index.heavy.keys[l]
-    match = (hk == q_key) & index.heavy.valid[l]
-    found = jnp.any(match)
-    h = jnp.argmax(match)
+        outer_cand = jax.vmap(probe)(lo_q, hi_q, keys_q).reshape(-1)
+        outer_cand = jnp.pad(
+            outer_cand, (0, slot - outer_cand.shape[0]), constant_values=-1
+        )
 
-    if delta is not None:
-        # Delta members of this heavy bucket join its inner-layer population
-        # in global-index order until the P_max cap — mirroring the first
-        # min(size, P_max) rows a union build would stratify.
-        rank = jnp.cumsum(d_outer.astype(jnp.int32)) - 1
-        d_in_pop = d_outer & (index.heavy.size[l, h] + rank < cfg.p_max)
+        if not cfg.use_inner:
+            return outer_cand
 
-    def inner_one(li):
-        ik = index.inner_keys[l, h, li]
-        ii = index.inner_idx[l, h, li]
-        lo2, hi2 = tables.bucket_range(ik, q_in_keys[li])
-        cand = tables.gather_bucket(ii, lo2, hi2, cfg.c_in)
-        if delta is None:
-            return cand
-        dm = d_in_pop & (delta.inner_keys[:, li] == q_in_keys[li])
-        return _merge_capped(cand, dm, delta.gidx, cfg.c_in)
+        # Is this bucket stratified? Match against the heavy-bucket registry.
+        # (Streaming note: the registry is the *base* one — stratification is
+        # frozen between compactions, DESIGN.md §9.)
+        q_key = keys_q[0]
+        match = (index.heavy.keys[l] == q_key) & index.heavy.valid[l]
+        found = jnp.any(match)
+        h = jnp.argmax(match)
 
-    inner_cand = jax.vmap(inner_one)(jnp.arange(cfg.L_in)).reshape(-1)
-    inner_cand = jnp.pad(inner_cand, (0, slot - cfg.L_in * cfg.c_in), constant_values=-1)
+        if delta is not None:
+            # Delta members of this heavy bucket join its inner-layer
+            # population in global-index order until the P_max cap —
+            # mirroring the first min(size, P_max) rows a union build
+            # would stratify.
+            rank = jnp.cumsum(d_outer_q.astype(jnp.int32)) - 1
+            d_in_pop = d_outer_q & (index.heavy.size[l, h] + rank < cfg.p_max)
 
-    return jnp.where(found, inner_cand, outer_cand), bucket_sz
+        def inner_one(li):
+            ik = index.inner_keys[l, h, li]
+            ii = index.inner_idx[l, h, li]
+            lo2, hi2 = tables.bucket_range(ik, in_keys_q[li])
+            cand = tables.gather_bucket(ii, lo2, hi2, cfg.c_in)
+            if delta is None:
+                return cand
+            dm = d_in_pop & (delta.inner_keys[:, li] == in_keys_q[li])
+            return _merge_capped(cand, dm, delta.gidx, cfg.c_in)
+
+        inner_cand = jax.vmap(inner_one)(jnp.arange(cfg.L_in)).reshape(-1)
+        inner_cand = jnp.pad(
+            inner_cand, (0, slot - cfg.L_in * cfg.c_in), constant_values=-1
+        )
+        return jnp.where(found, inner_cand, outer_cand)
+
+    cand = jax.vmap(per_query)(lo, hi, probe_keys_t, inner_keys, d_outer)
+    return cand, bucket_sz
 
 
 def _stage_gather(
@@ -411,16 +464,21 @@ def _stage_gather(
     inner_keys: jax.Array,  # (Q, L_in)
     delta: DeltaView | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Stage 2 — dense candidate tensor (Q, L*slot) + probed bucket sizes."""
+    """Stage 2 — dense candidate tensor (Q, L*slot) + probed bucket sizes.
+
+    Tables are the outer (vmapped) axis so each table's probes resolve in
+    one batched binary search (``_gather_one_table``); the per-(query,
+    table) candidate blocks then transpose back to query-major rows. Row
+    order differs from the old query-major gather only *within* a row —
+    irrelevant after the dedup sort.
+    """
     l_out = index.outer.sorted_keys.shape[0]
-
-    def per_query(pk, qik):
-        cand, bucket_sz = jax.vmap(
-            lambda l, k: _gather_one_table(index, cfg, l, k, qik, delta)
-        )(jnp.arange(l_out), pk)
-        return cand.reshape(-1), jnp.sum(bucket_sz)
-
-    return jax.vmap(per_query)(probe_keys, inner_keys)
+    pk_lt = jnp.moveaxis(probe_keys, 1, 0)  # (L, Q, 1 + multiprobe)
+    cand, bucket_sz = jax.vmap(
+        lambda l, pk: _gather_one_table(index, cfg, l, pk, inner_keys, delta)
+    )(jnp.arange(l_out), pk_lt)  # (L, Q, slot), (L, Q)
+    cand = jnp.moveaxis(cand, 0, 1).reshape(probe_keys.shape[0], -1)
+    return cand, jnp.sum(bucket_sz, axis=0)
 
 
 def _stage_dedup(cand: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -434,19 +492,54 @@ def _stage_dedup(cand: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     return cand_sorted, uniq, comparisons
 
 
+def _compact_width(cfg: SLSHConfig, c_total: int, n: int) -> int:
+    """Static compacted-buffer width for a query chunk.
+
+    Unique survivors are bounded by both the gather width ``c_total`` and
+    the indexed point count ``n``, so clamping ``cfg.c_comp`` to either
+    never costs exactness — it only trims dead slots (small-n indices get
+    tight buffers for free). ``n`` rounds up to the 128-lane width to keep
+    the distance-kernel tile shape stable across nearby dataset sizes.
+    """
+    cc = c_total if cfg.c_comp <= 0 else min(cfg.c_comp, c_total)
+    return max(1, min(cc, -(-n // 128) * 128))
+
+
+def _stage_compact(
+    cand_sorted: jax.Array,  # (Q, C)
+    uniq: jax.Array,  # (Q, C)
+    comparisons: jax.Array,  # (Q,)
+    c_comp: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage 4 — sort-compact unique survivors into a tight (Q, c_comp) buffer.
+
+    Non-survivors become the max-int sentinel, so one value sort moves the
+    deduped candidates (already ascending) to the row front; the gather and
+    distance work downstream then scale with the comparison budget instead
+    of the ``L_out*slot`` gather width. Unique survivors beyond ``c_comp``
+    are *counted* (returned overflow, surfaced in ``QueryResult``), never
+    silently dropped; ``comparisons`` itself is untouched by compaction.
+    """
+    comp = jnp.sort(jnp.where(uniq, cand_sorted, _IDX_SENTINEL), axis=-1)
+    comp = comp[:, :c_comp]
+    valid = comp != _IDX_SENTINEL
+    overflow = jnp.maximum(comparisons - jnp.int32(c_comp), 0)
+    return jnp.where(valid, comp, -1), valid, overflow
+
+
 def _stage_topk(
     data: jax.Array,
     queries: jax.Array,
-    cand_sorted: jax.Array,  # (Q, C)
-    uniq: jax.Array,  # (Q, C)
+    cand: jax.Array,  # (Q, c_comp) compacted, ascending, -1 pad
+    valid: jax.Array,  # (Q, c_comp)
     cfg: SLSHConfig,
     backend: BackendOps,
 ) -> tuple[jax.Array, jax.Array]:
-    """Stage 4 — one masked L1 top-k over the dense (Q, C, d) block."""
-    pts = data[jnp.clip(cand_sorted, 0, data.shape[0] - 1)]  # (Q, C, d)
-    kd, pos = backend.l1_topk(queries, pts, uniq, cfg.k)
+    """Stage 5 — one masked L1 top-k over the compacted (Q, c_comp, d) block."""
+    pts = data[jnp.clip(cand, 0, data.shape[0] - 1)]  # (Q, c_comp, d)
+    kd, pos = backend.l1_topk(queries, pts, valid, cfg.k)
     ki = jnp.where(
-        pos >= 0, jnp.take_along_axis(cand_sorted, jnp.maximum(pos, 0), axis=-1), -1
+        pos >= 0, jnp.take_along_axis(cand, jnp.maximum(pos, 0), axis=-1), -1
     )
     return kd, ki
 
@@ -458,19 +551,23 @@ def query_chunk(
     cfg: SLSHConfig,
     delta: DeltaView | None = None,
 ) -> QueryResult:
-    """Run the four stages for one (Q, d) chunk of queries.
+    """Run the five stages for one (Q, d) chunk of queries.
 
     ``delta`` fans the gather stage out over base + delta segments (the
     streaming path, DESIGN.md §9); the merged candidates flow through the
-    same dedup and L1 top-k stages, so ``cfg.backend`` dispatch covers
-    streaming queries too.
+    same dedup, compaction, and L1 top-k stages, so ``cfg.backend``
+    dispatch covers streaming queries too.
     """
-    backend = get_backend(cfg.backend)
+    backend = get_backend(cfg.backend, cfg)
     probe_keys, inner_keys = _stage_hash(index, queries, cfg, backend)
     cand, bucket_total = _stage_gather(index, cfg, probe_keys, inner_keys, delta)
     cand_sorted, uniq, comparisons = _stage_dedup(cand)
-    kd, ki = _stage_topk(data, queries, cand_sorted, uniq, cfg, backend)
-    return QueryResult(ki, kd, comparisons, bucket_total)
+    cc = _compact_width(cfg, cand.shape[1], data.shape[0])
+    comp_cand, comp_valid, overflow = _stage_compact(
+        cand_sorted, uniq, comparisons, cc
+    )
+    kd, ki = _stage_topk(data, queries, comp_cand, comp_valid, cfg, backend)
+    return QueryResult(ki, kd, comparisons, bucket_total, overflow)
 
 
 def query_batch(

@@ -68,7 +68,10 @@ def masked_l1_topk_batch(
     q: (Q, d); cands: (Q, C, d); mask: (Q, C) bool (False = padded slot).
     Returns dists (Q, k) ascending (inf where fewer than k valid) and
     positions (Q, k) into C (-1 pad) — the same contract the Pallas
-    ``kernels/l1_topk`` op implements (DESIGN.md §6).
+    ``kernels/l1_topk`` op implements (DESIGN.md §6). Distance ties break
+    toward the lower position (``top_k``'s lowest-index-first rule), which
+    the compacted candidate buffer maps to the lower global index — the
+    invariant the backend-equivalence suite pins.
     """
     dists = jnp.sum(jnp.abs(cands - q[:, None, :]), axis=-1)
     dists = jnp.where(mask, dists, INF)

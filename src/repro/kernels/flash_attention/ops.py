@@ -4,18 +4,9 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import blocking
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-
-
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    rem = (-x.shape[axis]) % mult
-    if rem == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, rem)
-    return jnp.pad(x, widths)
 
 
 @functools.partial(
@@ -32,16 +23,17 @@ def flash_attention(
     q_offset: int = 0,
     q_blk: int = 128,
     kv_blk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Blocked attention; pads Sq/Skv/dh to tile multiples and unpads."""
+    interpret = blocking.resolve_interpret(interpret)
     b, hq, sq, dh = q.shape
     skv = k.shape[2]
-    q_blk = min(q_blk, max(8, 1 << (sq - 1).bit_length()))
-    kv_blk = min(kv_blk, max(8, 1 << (skv - 1).bit_length()))
-    qp = _pad_to(_pad_to(q, 2, q_blk), 3, 128)
-    kp = _pad_to(_pad_to(k, 2, kv_blk), 3, 128)
-    vp = _pad_to(_pad_to(v, 2, kv_blk), 3, 128)
+    q_blk = blocking.clamp_pow2(sq, q_blk)
+    kv_blk = blocking.clamp_pow2(skv, kv_blk)
+    qp = blocking.pad_axis(blocking.pad_axis(q, 2, q_blk), 3, blocking.LANE)
+    kp = blocking.pad_axis(blocking.pad_axis(k, 2, kv_blk), 3, blocking.LANE)
+    vp = blocking.pad_axis(blocking.pad_axis(v, 2, kv_blk), 3, blocking.LANE)
     out = flash_attention_pallas(
         qp, kp, vp,
         causal=causal, window=window, kv_len=skv, q_offset=q_offset,

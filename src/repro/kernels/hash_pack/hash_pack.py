@@ -2,13 +2,20 @@
 
 ``bits = (x @ proj + bias) > 0`` packed into uint32 words, so m-bit
 signatures never hit HBM as full float rows. The projection runs on the MXU
-((T_BLK, D_PAD) @ (D_PAD, M_PAD)); sign extraction and 32-way packing are
+((T_BLK, D_PAD) @ (D_PAD, M_TOTAL)); sign extraction and 32-way packing are
 VPU ops on the resident tile. Serves both LSH families (DESIGN.md §4):
 sign random projection (cosine) directly, and l1 bit-sampling via a one-hot
 selector matrix with bias = -thresholds.
 
-Grid: (T_blocks,). proj/bias are small (d, m <= a few hundred) and stay
-VMEM-resident across the grid.
+The column axis carries *all tables of a family at once*: table ``t`` owns
+columns ``[t*m_stride, (t+1)*m_stride)`` with its real ``m`` bits at the
+front of the stride. One launch therefore hashes a batch against the whole
+family (one MXU contraction) instead of a per-table swarm of small calls;
+``m_stride == M_TOTAL`` recovers the single-table form.
+
+Grid: (T_blocks,). proj/bias stay VMEM-resident across the grid — callers
+chunk the table axis when L*m_stride*D_PAD floats would not fit VMEM
+(see ops._family_pack).
 """
 from __future__ import annotations
 
@@ -19,41 +26,87 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _hash_pack_kernel(x_ref, p_ref, b_ref, o_ref, *, m: int):
+def _hash_pack_kernel(x_ref, p_ref, b_ref, o_ref, *, m: int, m_stride: int):
     x = x_ref[...]  # (T_BLK, D_PAD)
-    p = p_ref[...]  # (D_PAD, M_PAD)
-    bias = b_ref[...]  # (1, M_PAD)
+    p = p_ref[...]  # (D_PAD, M_TOTAL)
+    bias = b_ref[...]  # (1, M_TOTAL)
     s = jnp.dot(x, p, preferred_element_type=jnp.float32) + bias  # MXU
-    t_blk, m_pad = s.shape
-    col = jax.lax.broadcasted_iota(jnp.int32, (t_blk, m_pad), 1)
-    bits = (s > 0.0) & (col < m)  # zero out padded bit positions
-    w = m_pad // 32
+    t_blk, m_total = s.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (t_blk, m_total), 1)
+    bits = (s > 0.0) & (col % m_stride < m)  # zero out padded bit positions
+    w = m_total // 32
     b32 = bits.reshape(t_blk, w, 32).astype(jnp.uint32)
     shifts = jax.lax.broadcasted_iota(jnp.uint32, (t_blk, w, 32), 2)
     o_ref[...] = jnp.sum(b32 << shifts, axis=-1, dtype=jnp.uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("m", "t_blk", "interpret"))
+def _bitsample_gather_kernel(x_ref, dims_ref, thr_ref, o_ref):
+    """Interpret-mode bit-sampling: fused gather + compare + pack.
+
+    The one-hot matmul in ``_hash_pack_kernel`` is the MXU formulation —
+    off-TPU it buys nothing and costs a (D_PAD, M_TOTAL) contraction, so
+    the interpret path samples coordinates directly (a lane gather Mosaic
+    does not support, which is fine: this kernel only runs interpreted).
+    Padded columns carry ``thr = +inf`` so their bits pack to zero.
+    """
+    x = x_ref[...]  # (T_BLK, D_PAD)
+    g = x[:, dims_ref[...][0]]  # (T_BLK, M_TOTAL) coordinate gather
+    bits = g > thr_ref[...]
+    t_blk, m_total = bits.shape
+    w = m_total // 32
+    b32 = bits.reshape(t_blk, w, 32).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (t_blk, w, 32), 2)
+    o_ref[...] = jnp.sum(b32 << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk",))
+def bitsample_gather_pallas(
+    x: jax.Array,  # (T, D_PAD) f32, T % t_blk == 0
+    dims: jax.Array,  # (1, M_TOTAL) int32 sampled coordinate per column
+    thrs: jax.Array,  # (1, M_TOTAL) f32, +inf on padded columns
+    *,
+    t_blk: int,
+) -> jax.Array:
+    t = x.shape[0]
+    m_total = dims.shape[1]
+    assert t % t_blk == 0 and m_total % 32 == 0
+    w = m_total // 32
+    return pl.pallas_call(
+        _bitsample_gather_kernel,
+        grid=(t // t_blk,),
+        in_specs=[
+            pl.BlockSpec((t_blk, x.shape[1]), lambda ti: (ti, 0)),
+            pl.BlockSpec((1, m_total), lambda ti: (0, 0)),
+            pl.BlockSpec((1, m_total), lambda ti: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_blk, w), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, w), jnp.uint32),
+        interpret=True,
+    )(x, dims, thrs)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "m_stride", "t_blk", "interpret"))
 def hash_pack_pallas(
     x: jax.Array,  # (T, D_PAD) f32, T % t_blk == 0
-    proj: jax.Array,  # (D_PAD, M_PAD) f32, M_PAD % 32 == 0
-    bias: jax.Array,  # (1, M_PAD) f32
+    proj: jax.Array,  # (D_PAD, M_TOTAL) f32, M_TOTAL % m_stride == 0
+    bias: jax.Array,  # (1, M_TOTAL) f32
     m: int,
     *,
+    m_stride: int,
     t_blk: int = 256,
     interpret: bool = True,
 ) -> jax.Array:
     t, d_pad = x.shape
-    m_pad = proj.shape[1]
-    assert t % t_blk == 0 and m_pad % 32 == 0
-    w = m_pad // 32
+    m_total = proj.shape[1]
+    assert t % t_blk == 0 and m_stride % 32 == 0 and m_total % m_stride == 0
+    w = m_total // 32
     return pl.pallas_call(
-        functools.partial(_hash_pack_kernel, m=m),
+        functools.partial(_hash_pack_kernel, m=m, m_stride=m_stride),
         grid=(t // t_blk,),
         in_specs=[
             pl.BlockSpec((t_blk, d_pad), lambda ti: (ti, 0)),
-            pl.BlockSpec((d_pad, m_pad), lambda ti: (0, 0)),
-            pl.BlockSpec((1, m_pad), lambda ti: (0, 0)),
+            pl.BlockSpec((d_pad, m_total), lambda ti: (0, 0)),
+            pl.BlockSpec((1, m_total), lambda ti: (0, 0)),
         ],
         out_specs=pl.BlockSpec((t_blk, w), lambda ti: (ti, 0)),
         out_shape=jax.ShapeDtypeStruct((t, w), jnp.uint32),

@@ -1,4 +1,10 @@
-"""jit'd wrappers: signature packing for both LSH families via one kernel."""
+"""jit'd wrappers: signature packing for both LSH families via one kernel.
+
+The fused kernel hashes a batch against *all* tables of a family in one
+launch (the table axis rides the matmul's column dimension), so the
+pipeline's hash stage issues one pallas call per chunk instead of an
+L-table swarm.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,88 +13,167 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hashing
-from repro.kernels.hash_pack.hash_pack import hash_pack_pallas
+from repro.kernels import blocking
+from repro.kernels.hash_pack.hash_pack import (
+    bitsample_gather_pallas,
+    hash_pack_pallas,
+)
 
-
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    rem = (-x.shape[axis]) % mult
-    if rem == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, rem)
-    return jnp.pad(x, widths)
-
-
-def _clamp_t_blk(t: int, t_blk: int) -> int:
-    """Shrink the row-block for small batches (streaming inserts hash a
-    handful of points at a time): pad T only up to the next multiple of 8 —
-    the f32 sublane minimum — instead of a full 256-row block."""
-    return min(t_blk, max(8, -(-t // 8) * 8))
+# Per-launch VMEM budget for the resident projection block: chunk the table
+# axis so the D_PAD x (tables * m_stride) weight tile stays ~4 MB on top of
+# the x/out tiles (paper-scale L_out=120, m=125 at d=64 would otherwise
+# demand a ~7.9 MB tile; high-d kNN-LM hidden states far more).
+_MAX_PROJ_ELEMS = 1 << 20  # f32 elements (~4 MB)
 
 
 @functools.partial(jax.jit, static_argnames=("t_blk", "interpret"))
+def _family_pack(
+    x: jax.Array,  # (T, d)
+    proj: jax.Array,  # (L, d, m) — whole family's projection columns
+    bias: jax.Array,  # (L, m)
+    *,
+    t_blk: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed signature words for all tables: -> (T, L, W) uint32.
+
+    Compiled Mosaic pads the contraction and column dims to the 128-lane
+    width and streams 256-row blocks; interpret mode (no tiling
+    constraints, cost ∝ grid steps × padded elements) pads only to the
+    sublane/word-pack granularity and hashes the whole batch in one grid
+    step — per-step block slicing is a real copy there.
+    """
+    interpret = blocking.resolve_interpret(interpret)
+    m_mult = 32 if interpret else blocking.LANE  # word-pack granularity
+    d_mult = blocking.SUBLANE if interpret else blocking.LANE
+    t = x.shape[0]
+    l, _, m = proj.shape
+    m_pad = blocking.round_up(m, m_mult)
+    w = (m + 31) // 32
+    if t_blk is None:
+        t_blk = blocking.round_up(t, blocking.SUBLANE) if interpret else 256
+    t_blk = blocking.clamp_sublane(t, t_blk)
+    xp = blocking.pad_axis(
+        blocking.pad_axis(x.astype(jnp.float32), 1, d_mult), 0, t_blk
+    )
+    pp = blocking.pad_axis(
+        blocking.pad_axis(proj.astype(jnp.float32), 1, d_mult), 2, m_mult
+    )  # (L, D_PAD, m_pad)
+    bb = blocking.pad_axis(bias.astype(jnp.float32), 1, m_mult)  # (L, m_pad)
+    d_pad = xp.shape[1]
+
+    # VMEM weight-tile budget concerns the compiled path only; interpret
+    # mode always fuses the whole family into one launch
+    l_chunk = (
+        l if interpret else max(1, min(l, _MAX_PROJ_ELEMS // (d_pad * m_pad)))
+    )
+    words = []
+    for l0 in range(0, l, l_chunk):
+        pc = pp[l0 : l0 + l_chunk]  # (lc, D_PAD, m_pad)
+        lc = pc.shape[0]
+        cols = jnp.moveaxis(pc, 0, 1).reshape(d_pad, lc * m_pad)
+        bias_c = bb[l0 : l0 + l_chunk].reshape(1, lc * m_pad)
+        out = hash_pack_pallas(
+            xp, cols, bias_c, m, m_stride=m_pad, t_blk=t_blk, interpret=interpret
+        )  # (T_pad, lc * m_pad // 32)
+        words.append(out[:t].reshape(t, lc, m_pad // 32)[:, :, :w])
+    return jnp.concatenate(words, axis=1) if len(words) > 1 else words[0]
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk",))
+def _bitsample_gather_pack(
+    x: jax.Array,  # (T, d)
+    dims: jax.Array,  # (L, m) int32
+    thrs: jax.Array,  # (L, m) f32
+    *,
+    t_blk: int | None = None,
+) -> jax.Array:
+    """Interpret-mode bit-sampling words (T, L, W) via the gather kernel.
+
+    Same contract as ``_family_pack`` on ``BitSampleParams`` — bit
+    ``x[dim] > thr`` directly instead of the MXU one-hot contraction
+    (bit-for-bit identical: the one-hot dot reproduces ``x[dim]`` exactly).
+    """
+    t = x.shape[0]
+    l, m = dims.shape
+    m_pad = blocking.round_up(m, 32)
+    w = (m + 31) // 32
+    if t_blk is None:
+        t_blk = blocking.round_up(t, blocking.SUBLANE)
+    t_blk = blocking.clamp_sublane(t, t_blk)
+    xp = blocking.pad_axis(
+        blocking.pad_axis(x.astype(jnp.float32), 1, blocking.SUBLANE), 0, t_blk
+    )
+    dd = blocking.pad_axis(dims.astype(jnp.int32), 1, m_pad).reshape(1, l * m_pad)
+    tt = blocking.pad_axis(
+        thrs.astype(jnp.float32), 1, m_pad, value=jnp.inf
+    ).reshape(1, l * m_pad)
+    out = bitsample_gather_pallas(xp, dd, tt, t_blk=t_blk)
+    return out[:t].reshape(t, l, m_pad // 32)[:, :, :w]
+
+
 def signrp_pack(
-    x: jax.Array, proj: jax.Array, *, t_blk: int = 256, interpret: bool = True
+    x: jax.Array, proj: jax.Array, *, t_blk: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Sign-random-projection signatures. x: (T, d); proj: (d, m) -> (T, W)."""
-    t, d = x.shape
     m = proj.shape[1]
-    t_blk = _clamp_t_blk(t, t_blk)
-    xp = _pad_to(_pad_to(x.astype(jnp.float32), 1, 128), 0, t_blk)
-    pp = _pad_to(_pad_to(proj.astype(jnp.float32), 0, 128), 1, 128)
     # >= 0 semantics of the family == (s + eps > 0) at s exactly 0; use > 0
     # with +0 bias (measure-zero difference, validated against ref)
-    bias = jnp.zeros((1, pp.shape[1]), jnp.float32)
-    out = hash_pack_pallas(xp, pp, bias, m, t_blk=t_blk, interpret=interpret)
-    return out[:t, : (m + 31) // 32]
+    bias = jnp.zeros((1, m), jnp.float32)
+    return _family_pack(x, proj[None], bias, t_blk=t_blk, interpret=interpret)[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("d", "t_blk", "interpret"))
 def bitsample_pack(
     x: jax.Array,
     dims: jax.Array,  # (m,) int32
     thrs: jax.Array,  # (m,) f32
     d: int,
     *,
-    t_blk: int = 256,
-    interpret: bool = True,
+    t_blk: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """l1 bit-sampling signatures via one-hot selector (bit = x[dim] > thr)."""
-    m = dims.shape[0]
+    """l1 bit-sampling signatures (bit = x[dim] > thr); formulation follows
+    the execution mode — direct coordinate gather when interpreted, one-hot
+    selector matmul when compiled for the MXU."""
+    if blocking.resolve_interpret(interpret):
+        return _bitsample_gather_pack(x, dims[None], thrs[None], t_blk=t_blk)[:, 0]
     onehot = jax.nn.one_hot(dims, d, dtype=jnp.float32).T  # (d, m)
-    t = x.shape[0]
-    t_blk = _clamp_t_blk(t, t_blk)
-    xp = _pad_to(_pad_to(x.astype(jnp.float32), 1, 128), 0, t_blk)
-    pp = _pad_to(_pad_to(onehot, 0, 128), 1, 128)
-    bias = _pad_to((-thrs.astype(jnp.float32))[None, :], 1, 128)
-    out = hash_pack_pallas(xp, pp, bias, m, t_blk=t_blk, interpret=interpret)
-    return out[:t, : (m + 31) // 32]
+    return _family_pack(
+        x, onehot[None], -thrs.astype(jnp.float32)[None, :], t_blk=t_blk,
+        interpret=interpret,
+    )[:, 0]
 
 
 def signature_words_kernel(
-    params, x: jax.Array, *, interpret: bool = True
+    params, x: jax.Array, *, interpret: bool | None = None
 ) -> jax.Array:
     """Packed signature words for all tables of a family via the kernel.
 
     x: (n, d) -> (n, L, W) uint32 — the kernel-backed implementation of the
     pipeline backend contract (DESIGN.md §6); bit-for-bit equal to
-    ``hashing.pack_bits(hashing.signature_bits(params, x))``.
+    ``hashing.pack_bits(hashing.signature_bits(params, x))``. All L tables
+    go through one fused launch (chunked only by the VMEM column budget);
+    bit-sampling picks its formulation per execution mode (see
+    ``bitsample_pack``).
     """
     if isinstance(params, hashing.BitSampleParams):
-        words = jax.vmap(
-            lambda dims, thrs: bitsample_pack(
-                x, dims, thrs, x.shape[1], interpret=interpret
-            )
-        )(params.dims, params.thrs)  # (L, n, W)
+        if blocking.resolve_interpret(interpret):
+            return _bitsample_gather_pack(x, params.dims, params.thrs)
+        d = x.shape[1]
+        proj = jnp.moveaxis(
+            jax.nn.one_hot(params.dims, d, dtype=jnp.float32), 2, 1
+        )  # (L, d, m)
+        bias = -params.thrs.astype(jnp.float32)  # (L, m)
     else:
-        words = jax.vmap(
-            lambda p: signrp_pack(x, p, interpret=interpret)
-        )(params.proj)  # (L, n, W)
-    return jnp.moveaxis(words, 0, 1)
+        proj = params.proj  # (L, d, m)
+        l, _, m = params.proj.shape
+        bias = jnp.zeros((l, m), jnp.float32)
+    return _family_pack(x, proj, bias, interpret=interpret)
 
 
 def hash_points_kernel(
-    params, x: jax.Array, *, interpret: bool = True
+    params, x: jax.Array, *, interpret: bool | None = None
 ) -> jax.Array:
     """Drop-in replacement for ``hashing.hash_points`` using the kernel.
 

@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the l1_topk kernel (padding + sorted output)."""
+"""jit'd public wrapper for the l1_topk kernel (padding + interpret policy)."""
 from __future__ import annotations
 
 import functools
@@ -6,57 +6,67 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import blocking
 from repro.kernels.l1_topk.l1_topk import l1_topk_pallas
 
 
-def _pad_axis(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
-    size = x.shape[axis]
-    rem = (-size) % mult
-    if rem == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, rem)
-    return jnp.pad(x, widths, constant_values=value)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "b_blk", "c_blk", "d_pad", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "b_blk", "c_blk", "d_mult", "interpret"))
 def l1_topk(
     q: jax.Array,  # (B, d)
     cands: jax.Array,  # (B, C, d)
     mask: jax.Array,  # (B, C) bool
     *,
     k: int,
-    b_blk: int = 8,
-    c_blk: int = 512,
-    d_pad: int = 128,
-    interpret: bool = True,
+    b_blk: int | None = None,
+    c_blk: int | None = None,
+    d_mult: int | None = None,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Masked L1 top-k via the Pallas kernel; output sorted ascending.
 
     Returns (dists (B, k), positions-into-C (B, k)); inf/-1 where fewer than
-    k valid candidates exist.
+    k valid candidates exist. Block/pad parameters default per execution
+    mode: compiled Mosaic needs 128-lane feature padding and VMEM-sized
+    (8, 512)-row tiles, while interpret mode (CPU/CI) has no tiling
+    constraints — there the feature dim pads only to the sublane multiple
+    and the whole batch runs as one grid step, since interpret cost scales
+    with grid steps × padded elements. Explicit arguments override either
+    policy. ``interpret=None`` resolves to the platform default (auto-off
+    on real TPU — DESIGN.md §6).
     """
+    interpret = blocking.resolve_interpret(interpret)
     b, c0, d = cands.shape
-    q = _pad_axis(q.astype(jnp.float32), 1, d_pad)
-    cands = _pad_axis(cands.astype(jnp.float32), 2, d_pad)
-    # feature dim may exceed d_pad; then pad to the next multiple (kernel
+    if d_mult is None:
+        d_mult = blocking.SUBLANE if interpret else blocking.LANE
+    if b_blk is None:
+        # interpret: one grid step over the whole batch — per-step block
+        # slicing is a real copy there, not a VMEM window
+        b_blk = blocking.round_up(b, blocking.SUBLANE) if interpret else 8
+    if c_blk is None:
+        # interpret: whole candidate stream as one block; compiled: 512-wide
+        # VMEM tiles, shrunk to the covering power of two for small C
+        c_blk = (
+            blocking.round_up(c0, 32)
+            if interpret
+            else blocking.clamp_pow2(c0, 512, lo=blocking.LANE)
+        )
+    else:
+        c_blk = blocking.clamp_pow2(c0, c_blk, lo=32 if interpret else blocking.LANE)
+    q = blocking.pad_axis(q.astype(jnp.float32), 1, d_mult)
+    cands = blocking.pad_axis(cands.astype(jnp.float32), 2, d_mult)
+    # feature dim may exceed d_mult; then pad to the next multiple (kernel
     # block covers the whole padded feature dim)
-    dp = q.shape[1]
-    q = _pad_axis(q, 0, b_blk)
-    cands = _pad_axis(cands, 0, b_blk)
-    cands = _pad_axis(cands, 1, c_blk)
-    mask = _pad_axis(mask, 0, b_blk, value=False)
-    mask = _pad_axis(mask, 1, c_blk, value=False)
-    c_blk_eff = min(c_blk, cands.shape[1])
+    b_blk = blocking.clamp_sublane(b, b_blk)
+    q = blocking.pad_axis(q, 0, b_blk)
+    cands = blocking.pad_axis(blocking.pad_axis(cands, 0, b_blk), 1, c_blk)
+    mask = blocking.pad_axis(
+        blocking.pad_axis(mask, 0, b_blk, value=False), 1, c_blk, value=False
+    )
 
     dist, pos = l1_topk_pallas(
-        q, cands, mask, k=k, b_blk=min(b_blk, q.shape[0]), c_blk=c_blk_eff,
-        interpret=interpret,
+        q, cands, mask, k=k, b_blk=b_blk, c_blk=c_blk, interpret=interpret
     )
+    # kernel output is already sorted ascending (single-pass stable merge)
     dist, pos = dist[:b], pos[:b]
-    # kernel keeps an unsorted running set; sort ascending for the API
-    order = jnp.argsort(dist, axis=1)
-    dist = jnp.take_along_axis(dist, order, axis=1)
-    pos = jnp.take_along_axis(pos, order, axis=1)
     pos = jnp.where(pos < c0, pos, -1)  # padded slots can never win, but be safe
     return dist, jnp.where(jnp.isfinite(dist), pos, -1)

@@ -138,13 +138,17 @@ def make_knn_lm_hook(
     tokens, as in examples/serve_knn_lm.py), or the model's cache must be
     extended to expose the final hidden state. Retrieval runs the staged
     SLSH pipeline, so the reference-vs-pallas choice rides on
-    ``slsh_cfg.backend`` (DESIGN.md §5/§6).
+    ``slsh_cfg.backend``, the decode-time distance work is bounded by
+    ``slsh_cfg.c_comp`` (``simulate_query``'s fourth return carries the
+    per-cell overflow counts — size the budget so they stay zero, DESIGN.md
+    §3), and ``slsh_cfg.interpret`` follows the §6 platform policy
+    (DESIGN.md §5/§6).
     """
     from repro.core import distributed as D
 
     def hook(logits: jax.Array, carrier) -> jax.Array:
         hq = hidden_fn(carrier)  # (B, d)
-        kd, ki, _ = D.simulate_query(index, datastore_points, hq, slsh_cfg, grid)
+        kd, ki, _, _ = D.simulate_query(index, datastore_points, hq, slsh_cfg, grid)
         return knn_interpolate(
             logits, ki, kd, next_tokens, vocab, lmbda, temperature
         )

@@ -126,7 +126,7 @@ def hash_for_insert(
     Same ``pipeline.hash_keys`` the query and build paths use, so streamed
     points land in exactly the buckets a rebuild would put them in — on
     either backend."""
-    backend = pipeline.get_backend(cfg.backend)
+    backend = pipeline.get_backend(cfg.backend, cfg)
     outer_keys = pipeline.hash_keys(index.outer_params, xs, backend)  # (B, L)
     if cfg.use_inner:
         inner_keys = pipeline.hash_keys(index.inner_params, xs, backend)

@@ -101,6 +101,7 @@ class StreamEvent:
     labels: list  # ground-truth labels for the same windows
     latency_s: float  # wall-clock latency of the prediction query
     comparisons: float  # median per-cell unique candidates scanned
+    overflow: int  # (cell, query) partials whose c_comp budget overflowed
     n_index: int  # points queryable across all nodes after ingest
 
 
@@ -189,13 +190,14 @@ class StreamingMonitor:
         gidx = jnp.where(
             res.knn_idx >= 0, res.knn_idx + node_id * self.node_capacity, -1
         )
-        return res.knn_dist, gidx, res.comparisons
+        return res.knn_dist, gidx, res.comparisons, res.compaction_overflow
 
     def _query_impl(self, state: list[NodeState], queries):
         parts = [self._node_query(nd, i, queries) for i, nd in enumerate(state)]
         kd = jnp.stack([p[0] for p in parts])  # (nu, p, Q, K)
         ki = jnp.stack([p[1] for p in parts])
         comps = jnp.stack([p[2] for p in parts])
+        overflow = jnp.stack([p[3] for p in parts])  # (nu, p, Q)
         q = queries.shape[0]
         kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
         ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
@@ -205,7 +207,7 @@ class StreamingMonitor:
         fd, fi = jax.vmap(
             lambda a, b: topk.masked_unique_topk_smallest(a, b, self.cfg.k)
         )(kd, ki)
-        return fd, fi, comps
+        return fd, fi, comps, overflow
 
     # -------------------------------------------------------- maintenance
 
@@ -335,20 +337,26 @@ class StreamingMonitor:
             compacted=compacted, evicted=evicted,
         )
 
-    def predict(self, queries) -> tuple[np.ndarray, float, float]:
+    def predict(self, queries) -> tuple[np.ndarray, float, float, int]:
         """AHE predictions for ``queries`` against the live sharded index.
 
         Returns (predictions, wall-clock latency seconds, median per-cell
-        comparisons)."""
+        comparisons, count of (cell, query) partials whose compaction
+        budget overflowed — non-zero means c_comp is truncating live
+        candidate sets, DESIGN.md §3)."""
         q = jnp.asarray(np.asarray(queries, np.float32))
         t0 = time.perf_counter()
-        kd, ki, comps = self._query(self.state, q)
+        kd, ki, comps, overflow = self._query(self.state, q)
         jax.block_until_ready((kd, ki, comps))
         latency = time.perf_counter() - t0
         preds = predict_mod.predict_batch(
             jnp.asarray(self.labels.reshape(-1)), ki, kd
         )
-        return np.asarray(preds), latency, float(np.median(np.asarray(comps)))
+        return (
+            np.asarray(preds), latency,
+            float(np.median(np.asarray(comps))),
+            int((np.asarray(overflow) > 0).sum()),
+        )
 
     def n_index(self) -> int:
         """Points queryable right now, across all nodes."""
@@ -358,17 +366,17 @@ class StreamingMonitor:
 
     def step(self, points, labels, t: float, *, predict: bool = True) -> StreamEvent:
         """One monitoring step: predict on the arriving windows, then ingest."""
-        preds, latency, comps = (np.zeros((0,), np.int32), 0.0, 0.0)
+        preds, latency, comps, overflow = (np.zeros((0,), np.int32), 0.0, 0.0, 0)
         if predict:
             self.flush_labels(t)  # reveal labels observable by now, no later ones
-            preds, latency, comps = self.predict(points)
+            preds, latency, comps, overflow = self.predict(points)
         info = self.ingest(points, labels, t)
         ev = StreamEvent(
             t=float(t), node=info["node"], inserted=info["inserted"],
             dropped=info["dropped"], compacted=info["compacted"],
             evicted=info["evicted"], preds=np.asarray(preds).tolist(),
             labels=np.asarray(labels).tolist(), latency_s=latency,
-            comparisons=comps, n_index=self.n_index(),
+            comparisons=comps, overflow=overflow, n_index=self.n_index(),
         )
         self.events.append(ev)
         return ev

@@ -39,7 +39,7 @@ def test_simulated_grid_shapes_and_global_indices():
     data = _data()
     idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
     q = data[:6]
-    kd, ki, comps = D.simulate_query(idx, data, q, cfg, grid)
+    kd, ki, comps, _ = D.simulate_query(idx, data, q, cfg, grid)
     assert kd.shape == (6, cfg.k) and ki.shape == (6, cfg.k)
     assert comps.shape == (4, 2, 6)
     # querying an indexed point must find itself with distance 0 (global idx)
@@ -58,7 +58,7 @@ def test_grid_vs_single_node_recall_similar():
     def recall(grid):
         cfg = _cfg(c_max=64)
         idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
-        _, ki, _ = D.simulate_query(idx, data, q, cfg, grid)
+        _, ki, _, _ = D.simulate_query(idx, data, q, cfg, grid)
         return np.mean(
             [
                 len(set(np.asarray(ki[i]).tolist()) & set(np.asarray(ti[i]).tolist())) / 5
@@ -77,7 +77,7 @@ def test_straggler_drop_mask_excludes_node():
     idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
     q = data[:8]
     drop = jnp.asarray([False, False, True, False])
-    kd, ki, _ = D.simulate_query(idx, data, q, cfg, grid, drop_mask=drop)
+    kd, ki, _, _ = D.simulate_query(idx, data, q, cfg, grid, drop_mask=drop)
     # node 2 owns global indices [256, 384): they must be absent
     ki_np = np.asarray(ki)
     assert not (((ki_np >= 256) & (ki_np < 384)).any())
@@ -104,7 +104,7 @@ def test_comparisons_speedup_vs_pknn():
     cfg, grid = _cfg(m_out=14, L_out=8, c_max=64), D.Grid(nu=2, p=4)
     idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
     q = data[:16]
-    _, _, comps = D.simulate_query(idx, data, q, cfg, grid)
+    _, _, comps, _ = D.simulate_query(idx, data, q, cfg, grid)
     max_comps = np.asarray(comps).max(axis=(0, 1))  # per-query max across cells
     pknn_comps = data.shape[0] // grid.cells
     assert np.median(max_comps) < pknn_comps, (np.median(max_comps), pknn_comps)
@@ -147,10 +147,11 @@ def test_shard_map_matches_simulation_8dev():
         from repro.launch.mesh import make_local_mesh
         mesh = make_local_mesh(2, 4)
         idx = D.dslsh_build(mesh, key, data, cfg, grid)
-        kd, ki, comps = D.dslsh_query(mesh, idx, data, q, cfg, grid)
-        kdt, kit, _ = D.dslsh_query(mesh, idx, data, q, cfg, grid, reducer="tree")
+        kd, ki, comps, ovf = D.dslsh_query(mesh, idx, data, q, cfg, grid)
+        kdt, kit, _, _ = D.dslsh_query(mesh, idx, data, q, cfg, grid, reducer="tree")
         idx2 = D.simulate_build(key, data, cfg, grid)
-        kd2, ki2, comps2 = D.simulate_query(idx2, data, q, cfg, grid)
+        kd2, ki2, comps2, ovf2 = D.simulate_query(idx2, data, q, cfg, grid)
+        assert (np.asarray(ovf) == np.asarray(ovf2)).all()
         assert np.allclose(np.asarray(kd), np.asarray(kd2))
         assert (np.asarray(ki) == np.asarray(ki2)).all()
         assert (np.asarray(comps) == np.asarray(comps2)).all()

@@ -43,7 +43,7 @@ def test_dslsh_speedup_with_bounded_mcc_loss(ahe_setup):
     )
     grid = s["grid"]
     idx = D.simulate_build(jax.random.PRNGKey(1), s["points"], cfg, grid)
-    kd, ki, comps = D.simulate_query(idx, s["points"], s["qx"], cfg, grid)
+    kd, ki, comps, _ = D.simulate_query(idx, s["points"], s["qx"], cfg, grid)
     pred_slsh = predict.predict_batch(s["labels"], ki, kd)
 
     pkd, pki, pcomps = D.pknn_query(s["points"], s["qx"], 10, grid)
@@ -99,7 +99,7 @@ def test_parallelism_does_not_change_predictions(ahe_setup):
     outs = []
     for grid in (D.Grid(nu=1, p=2), D.Grid(nu=2, p=4)):
         idx = D.simulate_build(jax.random.PRNGKey(1), s["points"], cfg, grid)
-        kd, ki, _ = D.simulate_query(idx, s["points"], qx, cfg, grid)
+        kd, ki, _, _ = D.simulate_query(idx, s["points"], qx, cfg, grid)
         outs.append(predict.predict_batch(s["labels"], ki, kd))
     # identical hash family + identical candidate semantics => same K-NN set
     # up to budget truncation; predictions should agree almost everywhere

@@ -129,11 +129,42 @@ def test_simulate_query_backend_identical():
     grid = D.Grid(nu=2, p=2)
     idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg_r, grid)
     q = data[:8]
-    kd_r, ki_r, comps_r = D.simulate_query(idx, data, q, cfg_r, grid)
-    kd_p, ki_p, comps_p = D.simulate_query(idx, data, q, cfg_p, grid)
+    kd_r, ki_r, comps_r, ovf_r = D.simulate_query(idx, data, q, cfg_r, grid)
+    kd_p, ki_p, comps_p, ovf_p = D.simulate_query(idx, data, q, cfg_p, grid)
     np.testing.assert_array_equal(np.asarray(ki_r), np.asarray(ki_p))
     np.testing.assert_array_equal(np.asarray(kd_r), np.asarray(kd_p))
     np.testing.assert_array_equal(np.asarray(comps_r), np.asarray(comps_p))
+    np.testing.assert_array_equal(np.asarray(ovf_r), np.asarray(ovf_p))
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_compaction_budget_is_exact_and_counts_overflow(backend):
+    """The compact stage (DESIGN.md §3): an ample budget is bit-exact with
+    the uncapped pipeline; a binding budget never changes ``comparisons``
+    and surfaces exactly the excess as ``compaction_overflow``."""
+    data = _data()
+    cfg = _cfg(backend=backend)
+    idx = slsh.build_index(jax.random.PRNGKey(1), data, cfg)
+    q = data[:24] + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (24, 12))
+    res_full = slsh.query_batch(idx, data, q, dataclasses.replace(cfg, c_comp=0))
+    assert (np.asarray(res_full.compaction_overflow) == 0).all()
+
+    # ample budget (the default covers min(n, gather width)): identical
+    res = slsh.query_batch(idx, data, q, cfg)
+    _assert_trees_equal(res, res_full)
+
+    # binding budget: comparisons untouched, overflow counted, k-NN results
+    # restricted to the c_comp smallest-index survivors (deterministic)
+    tiny = dataclasses.replace(cfg, c_comp=16)
+    res_t = slsh.query_batch(idx, data, q, tiny)
+    np.testing.assert_array_equal(
+        np.asarray(res_t.comparisons), np.asarray(res_full.comparisons)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res_t.compaction_overflow),
+        np.maximum(np.asarray(res_full.comparisons) - 16, 0),
+    )
+    assert int(np.asarray(res_t.compaction_overflow).max()) > 0
 
 
 def test_unknown_backend_raises():

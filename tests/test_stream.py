@@ -71,7 +71,10 @@ def _union_of(sidx, data, cfg):
 
 
 def _assert_results_equal(a, b, msg=""):
-    for name in ("knn_idx", "knn_dist", "comparisons", "bucket_total"):
+    for name in (
+        "knn_idx", "knn_dist", "comparisons", "bucket_total",
+        "compaction_overflow",
+    ):
         np.testing.assert_array_equal(
             np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
             err_msg=f"{msg}:{name}",
@@ -91,6 +94,17 @@ EQUIV_CASES = [
              h_max=4, p_max=320, query_chunk=8),
         400, "heavy", id="inner+pmax_cap",
     ),
+    # a binding c_comp budget engages real compaction (DESIGN.md §3) on the
+    # streamed path — the §9 exactness contract must hold through the
+    # compact stage, pre- and post-compact(), including the overflow counts
+    pytest.param(
+        dict(use_inner=False, c_comp=48), 380, "uniform", id="no_inner+compact"
+    ),
+    pytest.param(
+        dict(m_out=10, L_out=4, m_in=4, L_in=2, alpha=0.05, c_max=512, c_in=512,
+             h_max=4, p_max=512, query_chunk=8, c_comp=128),
+        400, "heavy", id="inner+compact",
+    ),
 ]
 
 
@@ -109,6 +123,8 @@ def test_insert_then_query_matches_scratch_build(backend, kw, n_base, dataset):
         jax.random.PRNGKey(2), (16, data.shape[1])
     )
     res_u = pipeline.query_batch(union, data, q, cfg)
+    if "c_comp" in kw:  # the compaction cases must actually bind the budget
+        assert int(jnp.max(res_u.compaction_overflow)) > 0
     _assert_results_equal(stream.query_batch(sidx, q, cfg), res_u, "pre-compact")
     compacted = stream.compact(sidx, cfg)
     assert int(compacted.delta.count) == 0
@@ -273,13 +289,13 @@ def test_monitor_label_delay_prevents_lookahead():
     # dominates any self-query
     w = rng.uniform(0, 1, (1, 8)).astype(np.float32)
     mon.ingest(w, np.ones(1, np.int8), t=0.0)
-    preds_hidden, _, _ = mon.predict(w)
+    preds_hidden, _, _, _ = mon.predict(w)
     assert preds_hidden[0] == 0, "label must stay hidden before reveal time"
     mon.flush_labels(now=5.0)
-    preds_still, _, _ = mon.predict(w)
+    preds_still, _, _, _ = mon.predict(w)
     assert preds_still[0] == 0
     mon.flush_labels(now=10.0)
-    preds_revealed, _, _ = mon.predict(w)
+    preds_revealed, _, _, _ = mon.predict(w)
     assert preds_revealed[0] == 1, "label must reveal once the window closes"
     assert mon._pending_labels == []
 
@@ -296,7 +312,7 @@ def test_monitor_merge_never_duplicates_neighbours():
         node_capacity=96, delta_cap=16,
     )
     mon.ingest(rng.uniform(0, 1, (8, 8)).astype(np.float32), np.zeros(8, np.int8), 1.0)
-    kd, ki, _ = mon._query(mon.state, jnp.asarray(pts[:8]))
+    kd, ki, _, _ = mon._query(mon.state, jnp.asarray(pts[:8]))
     ki_np, kd_np = np.asarray(ki), np.asarray(kd)
     assert (ki_np[:, 0] == np.arange(8)).all() and (kd_np[:, 0] == 0.0).all()
     for row_i, row_d in zip(ki_np, kd_np):
@@ -323,7 +339,7 @@ def test_monitor_matches_unsharded_stream_query():
     mon.ingest(extra[:8], np.zeros(8, np.int8), t=1.0)
     mon.ingest(extra[8:], np.zeros(8, np.int8), t=2.0)
     q = jnp.asarray(init_pts[:10])
-    kd, ki, _ = mon._query(mon.state, q)
+    kd, ki, _, _ = mon._query(mon.state, q)
     # Reducer merge is unique-by-index: a neighbour found by several cells
     # must occupy one k slot only (weighted votes never double-count)
     for row in np.asarray(ki):

@@ -182,11 +182,11 @@ def test_elastic_reshard_preserves_retrieval():
     p0, l0, _ = D.pad_to_multiple(pts, labs, grid0.cells)
     idx0 = D.simulate_build(key, jnp.asarray(p0), cfg, grid0)
     q = jnp.asarray(pts[:8])
-    _, ki0, _ = D.simulate_query(idx0, jnp.asarray(p0), q, cfg, grid0)
+    _, ki0, _, _ = D.simulate_query(idx0, jnp.asarray(p0), q, cfg, grid0)
 
     grid1, idx1, p1, l1, _ = ft.elastic_reshard_dslsh(key, pts, labs, cfg, grid0, [3])
     assert grid1.nu == 3
-    _, ki1, _ = D.simulate_query(idx1, p1, q, cfg, grid1)
+    _, ki1, _, _ = D.simulate_query(idx1, p1, q, cfg, grid1)
     # self-hit must survive re-sharding (hash family unchanged)
     assert int(ki1[0, 0]) == 0 and int(ki0[0, 0]) == 0
 
