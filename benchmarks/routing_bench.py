@@ -1,0 +1,128 @@
+"""Replication-aware routing benchmark (DESIGN.md §10).
+
+For grid sizes 1/4/8/40-simulated cells: route a clustered query batch
+through ``simulate_query_routed`` and record
+
+* the queries-routed-per-cell histogram (Forwarder load shape, and how the
+  replica split flattens it on the logical device pool),
+* Reducer merge payload bytes — two-stage tree with routing vs. the flat
+  master collect and the flat all-gather the pre-§10 code used,
+* end-to-end query latency, routed vs. broadcast-everything,
+
+and asserts routed results stay bit-identical to ``simulate_query`` while
+doing it. Emitted to BENCH_routing.json (override:
+REPRO_BENCH_ROUTING_JSON); CSV rows go through benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+
+ROUTING_JSON = os.environ.get(
+    "REPRO_BENCH_ROUTING_JSON",
+    os.path.join(os.path.dirname(__file__), "artifacts", "BENCH_routing.json"),
+)
+
+# (nu, p) per simulated grid size; L_out below divides every p
+GRIDS = ((1, 1), (2, 2), (4, 2), (8, 5))
+
+
+def _clustered(key, n, d, spread=0.01):
+    """Cluster-structured points (ICU windows cluster by patient/regime —
+    the workload shape that makes routing selective)."""
+    kc, kp = jax.random.split(key)
+    n_centers = max(n // 32, 1)
+    centers = jax.random.uniform(kc, (n_centers, d))
+    pts = centers[:, None, :] + spread * jax.random.normal(
+        kp, (n_centers, 32, d)
+    )
+    return pts.reshape(-1, d)[:n]
+
+
+def run():
+    from repro.core import distributed as D
+    from repro.core import routing
+
+    n, d, nq = (16384, 32, 256) if common.FULL else (2560, 16, 64)
+    data = _clustered(jax.random.PRNGKey(0), n, d)
+    queries = data[:nq] + 0.002 * jax.random.normal(
+        jax.random.PRNGKey(1), (nq, d)
+    )
+    cfg = common.slsh_cfg(
+        m_out=24, L_out=20, m_in=8, L_in=4, alpha=0.01, val_lo=0.0, val_hi=1.0,
+        c_max=64, c_in=16, h_max=8, p_max=128, build_chunk=512, query_chunk=32,
+    )
+    report = {
+        "n": n, "d": d, "nq": nq, "k": cfg.k, "replication": 2,
+        "grids": [],
+    }
+    for nu, p in GRIDS:
+        grid = D.Grid(nu=nu, p=p)
+        idx = D.simulate_build(jax.random.PRNGKey(2), jnp.asarray(data), cfg, grid)
+        plan = routing.make_plan(idx, cfg, grid, replication=2)
+
+        f_flat = jax.jit(
+            lambda qs, idx=idx, grid=grid: D.simulate_query(
+                idx, jnp.asarray(data), qs, cfg, grid
+            )
+        )
+        f_routed = jax.jit(
+            lambda qs, idx=idx, grid=grid, plan=plan: D.simulate_query_routed(
+                idx, jnp.asarray(data), qs, cfg, grid, plan
+            )
+        )
+        (kd0, ki0, c0, o0), us_flat = common.timer(lambda: f_flat(queries), repeats=3)
+        (kd1, ki1, c1, o1), us_routed = common.timer(
+            lambda: f_routed(queries), repeats=3
+        )
+        assert np.allclose(np.asarray(kd0), np.asarray(kd1))
+        assert (np.asarray(ki0) == np.asarray(ki1)).all()
+        assert (np.asarray(c0) == np.asarray(c1)).all()
+        assert (np.asarray(o0) == np.asarray(o1)).all()
+
+        *_, stats = D.simulate_query_routed(
+            idx, jnp.asarray(data), queries, cfg, grid, plan, return_stats=True
+        )
+        per_cell = stats.routed.sum(axis=0).reshape(-1)  # (S,) routed queries
+        pay = stats.payload
+        entry = {
+            "cells": grid.cells,
+            "nu": nu, "p": p,
+            "devices": plan.n_devices,
+            "routed_frac": float(stats.routed.mean()),
+            "queries_per_cell": per_cell.tolist(),
+            "queries_per_device": stats.device_load.tolist(),
+            "replicas_per_cell": plan.replicas.reshape(-1).tolist(),
+            "merge_bytes": {
+                "tree_routed": pay["tree_routed_bytes"],
+                "flat_master": pay["flat_master_bytes"],
+                "flat_allgather": pay["flat_allgather_bytes"],
+            },
+            "us_per_query_flat": us_flat / nq,
+            "us_per_query_routed": us_routed / nq,
+        }
+        report["grids"].append(entry)
+        yield (
+            f"routing/query_flat_{grid.cells}c", us_flat,
+            f"us_per_query={us_flat / nq:.1f}",
+        )
+        yield (
+            f"routing/query_routed_{grid.cells}c", us_routed,
+            f"routed_frac={entry['routed_frac']:.2f}",
+        )
+        yield (
+            f"routing/merge_bytes_{grid.cells}c", 0.0,
+            f"tree={pay['tree_routed_bytes']} vs master={pay['flat_master_bytes']}"
+            f" allgather={pay['flat_allgather_bytes']}",
+        )
+
+    os.makedirs(os.path.dirname(ROUTING_JSON) or ".", exist_ok=True)
+    with open(ROUTING_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    yield ("routing/json_report", 0.0, ROUTING_JSON)

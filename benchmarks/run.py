@@ -17,6 +17,7 @@ def main() -> None:
         kernels_bench,
         pipeline_bench,
         roofline,
+        routing_bench,
         stream_bench,
         table2_scaling,
         table3_scaling,
@@ -31,6 +32,7 @@ def main() -> None:
         "pipeline": pipeline_bench,
         "roofline": roofline,
         "stream": stream_bench,
+        "routing": routing_bench,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

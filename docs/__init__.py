@@ -1,0 +1,8 @@
+"""Documentation tooling: built API reference + doc-tested operator guide.
+
+``python -m docs.build`` renders the API reference (docs/_build/) from the
+public-surface docstrings; ``python -m docs.check_guide`` executes every
+shell command in docs/operating.md. Both run in CI — the reference build
+fails on missing public docstrings, the guide check fails on any command
+that no longer works.
+"""

@@ -1,0 +1,81 @@
+"""Doc-test the operator guide: run every shell command in operating.md.
+
+``python -m docs.check_guide [--list]`` extracts the fenced ```bash blocks
+from docs/operating.md and executes each one from the repository root under
+``bash -euo pipefail`` — so a guide command that stops working fails CI
+instead of rotting. Blocks fenced as ```bash skip are rendered but not
+executed (paper-scale runs that take hours); everything else must pass.
+
+Each block runs in a fresh shell with the repo root as cwd; commands are
+expected to set ``PYTHONPATH=src`` themselves, exactly as the guide tells
+the operator to.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import time
+
+GUIDE = os.path.join(os.path.dirname(__file__), "operating.md")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BLOCK_RE = re.compile(r"^```bash([^\n`]*)\n(.*?)^```", re.M | re.S)
+TIMEOUT_S = 1800
+
+
+def extract_blocks(text: str) -> list[tuple[str, bool]]:
+    """(block body, should_run) for every ```bash fence in the guide."""
+    out = []
+    for m in BLOCK_RE.finditer(text):
+        info, body = m.group(1).strip(), m.group(2)
+        out.append((body, info != "skip"))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true", help="print blocks, run nothing")
+    args = ap.parse_args(argv)
+    with open(GUIDE) as f:
+        blocks = extract_blocks(f.read())
+    if not blocks:
+        print("check_guide: no ```bash blocks found in operating.md", file=sys.stderr)
+        return 1
+    failures = 0
+    for i, (body, should_run) in enumerate(blocks, 1):
+        head = body.strip().splitlines()[0] if body.strip() else "(empty)"
+        if args.list or not should_run:
+            status = "skip" if not should_run else "would run"
+            print(f"[{i}/{len(blocks)}] {status}: {head}")
+            continue
+        print(f"[{i}/{len(blocks)}] run: {head}", flush=True)
+        t0 = time.time()
+        try:
+            proc = subprocess.run(
+                ["bash", "-euo", "pipefail", "-c", body],
+                cwd=REPO, timeout=TIMEOUT_S,
+                stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+            )
+        except subprocess.TimeoutExpired as e:
+            failures += 1
+            tail = (e.stdout or b"")[-3000:]
+            tail = tail.decode(errors="replace") if isinstance(tail, bytes) else tail
+            print(f"  FAILED (timeout after {TIMEOUT_S}s):\n{tail}", flush=True)
+            continue
+        dt = time.time() - t0
+        if proc.returncode != 0:
+            failures += 1
+            print(f"  FAILED ({dt:.0f}s):\n{proc.stdout[-3000:]}", flush=True)
+        else:
+            print(f"  ok ({dt:.0f}s)", flush=True)
+    if failures:
+        print(f"check_guide: {failures} block(s) failed", file=sys.stderr)
+        return 1
+    print(f"check_guide: all runnable blocks passed ({len(blocks)} total)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

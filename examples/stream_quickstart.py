@@ -60,3 +60,6 @@ print(f"prediction latency: median={np.median(lat)*1e3:.1f} ms  "
 print(f"rolling MCC={monitor.mcc():.3f}  "
       f"(median per-cell comparisons="
       f"{np.median([e.comparisons for e in events if e.preds]):.0f})")
+print(f"routing: median fraction of cells visited per batch="
+      f"{np.median([e.routed_frac for e in events if e.preds]):.2f} "
+      f"(DESIGN.md §10 — 1.00 would mean the Forwarder broadcast)")

@@ -6,9 +6,13 @@ Paper -> mesh mapping (DESIGN.md §2):
   * Root's hash-function broadcast -> same PRNG key everywhere; each core
     slices its own rows out of the full (L_out, m) family, so table t uses
     identical hash functions on every node (required for correctness).
-  * Forwarder -> queries replicated to all cells.
+  * Forwarder -> queries replicated to all cells — or, with a
+    ``routing.RoutingPlan``, routed only to the cells their probe keys can
+    land in (``simulate_query_routed`` / ``dslsh_query(plan=...)``,
+    DESIGN.md §10).
   * Reducer / Master -> top-K merges: all-gather (small K) or a ppermute
-    butterfly tree; both implemented, selectable.
+    tournament tree (any axis size); both implemented, selectable, and
+    bit-identical including distance-tie resolution.
 
 Two execution paths share the same per-cell functions:
   * ``dslsh_*``     — shard_map over a real device mesh (dry-run / production)
@@ -25,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import hashing, pipeline, slsh, topk
+from repro.core import hashing, pipeline, routing, slsh, topk
 
 from repro.sharding.ctx import shard_map as _shard_map
 
@@ -39,6 +43,7 @@ class Grid:
 
     @property
     def cells(self) -> int:
+        """Total SLSH cells (one per (node, core) pair — the paper's nu*p)."""
         return self.nu * self.p
 
 
@@ -111,6 +116,12 @@ def cell_query(
     cfg: slsh.SLSHConfig,
     grid: Grid,
 ) -> CellResult:
+    """Query one cell's tables over its node's data slice.
+
+    Runs the shared staged pipeline and lifts the shard-local neighbour
+    indices to global dataset indices via ``node_offset`` (-1 pads stay
+    -1) — the form every Reducer merge operates on.
+    """
     del grid  # the pipeline derives this cell's table count from the index
     res = pipeline.query_batch(index, data_local, queries, cfg)
     gidx = jnp.where(res.knn_idx >= 0, res.knn_idx + node_offset, -1)
@@ -131,17 +142,41 @@ def merge_axis_allgather(axis: str, kd: jax.Array, ki: jax.Array, k: int):
 
 
 def merge_axis_tree(axis: str, kd: jax.Array, ki: jax.Array, k: int, size: int):
-    """Reducer via a ppermute butterfly (log2(size) exchange+merge rounds)."""
-    assert size & (size - 1) == 0, "tree reducer needs power-of-two axis"
-    step = 1
-    while step < size:
-        perm = [(i, i ^ step) for i in range(size)]
+    """Reducer via a ppermute tournament tree + broadcast (DESIGN.md §10).
+
+    ``routing.tournament_rounds`` supplies the (dst, src) exchange schedule:
+    sources fold into ascending destinations over ``ceil(log2(size))``
+    rounds (any ``size`` — non-power-of-two ranks just sit out rounds), rank
+    0 ends with the full merge, and one broadcast round replicates it. The
+    fold visits partials in ascending rank order, so the result is
+    bit-identical to :func:`merge_axis_allgather` *including distance ties*
+    (property-tested via the shared schedule in tests/test_routing.py).
+    Payload: ``size - 1`` truncated partials + the broadcast, vs. the
+    all-gather's ``size`` partials to every rank.
+    """
+    if size == 1:
+        return kd, ki
+    me = jax.lax.axis_index(axis)
+    for rnd in routing.tournament_rounds(size):
+        perm = [(src, dst) for dst, src in rnd]
         pd = jax.lax.ppermute(kd, axis, perm)
         pi = jax.lax.ppermute(ki, axis, perm)
+        # ranks receiving nothing see zeros — neutralize before merging
+        is_dst = jnp.any(me == jnp.asarray([d for d, _ in rnd], jnp.int32))
+        pd = jnp.where(is_dst, pd, jnp.inf)
+        pi = jnp.where(is_dst, pi, -1)
         kd, ki = jax.vmap(
             lambda a, b, c, d_: topk.merge_topk(a, b, c, d_, k)
         )(kd, ki, pd, pi)
-        step *= 2
+    # broadcast rank 0's result back down the same tree (ppermute wants
+    # unique sources, so the broadcast is the reduce tree reversed)
+    for rnd in reversed(routing.tournament_rounds(size)):
+        perm = list(rnd)  # dst -> src: holders push one level down
+        bd = jax.lax.ppermute(kd, axis, perm)
+        bi = jax.lax.ppermute(ki, axis, perm)
+        is_recv = jnp.any(me == jnp.asarray([s for _, s in rnd], jnp.int32))
+        kd = jnp.where(is_recv, bd, kd)
+        ki = jnp.where(is_recv, bi, ki)
     return kd, ki
 
 
@@ -151,7 +186,23 @@ def merge_axis_tree(axis: str, kd: jax.Array, ki: jax.Array, k: int, size: int):
 def dslsh_build(mesh, root_key, data, cfg: slsh.SLSHConfig, grid: Grid):
     """Build the distributed index. data: (n, d) sharded over ``data`` axis.
 
-    Returns a per-cell-stacked SLSHIndex with leading (nu, p) dims.
+    Returns a per-cell-stacked SLSHIndex with leading (nu, p) dims. Works on
+    a 2-axis ``(data, model)`` mesh or a 3-axis ``(rep, data, model)`` one
+    (the index replicates over ``rep`` — see ``dslsh_query``).
+
+    >>> import jax
+    >>> from repro.launch.mesh import make_local_mesh
+    >>> cfg = slsh.SLSHConfig(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05,
+    ...                       k=3, val_lo=0.0, val_hi=1.0, c_max=16, c_in=8,
+    ...                       h_max=2, p_max=32)
+    >>> grid, mesh = Grid(nu=1, p=1), make_local_mesh(1, 1)
+    >>> data = jax.random.uniform(jax.random.PRNGKey(0), (64, 8))
+    >>> index = dslsh_build(mesh, jax.random.PRNGKey(1), data, cfg, grid)
+    >>> kd, ki, comps, ovf = dslsh_query(mesh, index, data, data[:2], cfg, grid)
+    >>> [int(i) for i in ki[:, 0]]  # indexed points find themselves
+    [0, 1]
+    >>> comps.shape  # comparisons are reported per (node, core, query)
+    (1, 1, 2)
     """
 
     def body(key, data_local):
@@ -179,46 +230,89 @@ def dslsh_query(
     grid: Grid,
     reducer: str = "allgather",
     drop_mask: jax.Array | None = None,
+    plan: routing.RoutingPlan | None = None,
+    max_cells: int | None = None,
 ):
     """Resolve queries on the distributed index.
 
     Returns (knn_dist (Q,K), knn_idx (Q,K) global, comparisons (nu, p, Q),
     compaction_overflow (nu, p, Q)).
+
     ``drop_mask`` (nu,) bool marks nodes dropped by the straggler deadline —
     the Reducer proceeds without their partials (paper's latency-first mode).
+
+    ``plan`` routes each query only to the cells its probe keys can land in
+    (DESIGN.md §10): the router hashes the batch once against the full
+    family on the host, and each cell masks its partial by its slice of the
+    route mask — bit-identical to the unrouted query because the key→cell
+    map has no false negatives. ``max_cells`` additionally caps the probed
+    cells per query (deadline degradation — approximate by design).
+
+    Replication: on a mesh with a leading ``rep`` axis (``grid.cells * r``
+    devices, ``launch.mesh.make_replicated_mesh``), the query batch row-
+    shards across the ``r`` replicas of every cell; the Reducer then runs
+    the two-stage §10 merge — cross-cell tournament on each replica's row
+    block, replica reassembly via all-gather over ``rep``. Requires
+    ``Q % r == 0``.
     """
     if drop_mask is None:
         drop_mask = jnp.zeros((grid.nu,), bool)
+    has_rep = "rep" in mesh.axis_names
+    if has_rep:
+        assert queries.shape[0] % mesh.shape["rep"] == 0, (
+            "query batch must divide across the rep axis"
+        )
+    if plan is not None:
+        pk = routing.probe_keys(routing.family_from_index(index), queries, cfg)
+        routed, scores = routing.route_mask(plan.occupancy, pk, grid)
+        if max_cells is not None:
+            routed = routing.apply_cell_budget(routed, scores, max_cells)
+    else:
+        routed = jnp.ones((queries.shape[0], grid.nu, grid.p), bool)
 
-    def body(index_local, data_local, qs, dropm):
+    def body(index_local, data_local, qs, dropm, routedm):
         index_local = jax.tree.map(lambda a: a[0, 0], index_local)
         node = jax.lax.axis_index("data")
+        core = jax.lax.axis_index("model")
         n_loc = data_local.shape[0]
         res = cell_query(index_local, data_local, node * n_loc, qs, cfg, grid)
-        kd, ki = res.knn_dist, res.knn_idx
+        r_q = routedm[:, node, core]  # this cell's slice of the route mask
+        kd = jnp.where(r_q[:, None], res.knn_dist, jnp.inf)
+        ki = jnp.where(r_q[:, None], res.knn_idx, -1)
+        comps = jnp.where(r_q, res.comparisons, 0)
+        overflow = jnp.where(r_q, res.compaction_overflow, 0)
         dropped = dropm[node]
         kd = jnp.where(dropped, jnp.inf, kd)
         ki = jnp.where(dropped, -1, ki)
-        # Master: merge within the node (over cores)
+        # Master: merge within the node (over cores), then across nodes
         if reducer == "tree":
             kd, ki = merge_axis_tree("model", kd, ki, cfg.k, grid.p)
             kd, ki = merge_axis_tree("data", kd, ki, cfg.k, grid.nu)
         else:
             kd, ki = merge_axis_allgather("model", kd, ki, cfg.k)
             kd, ki = merge_axis_allgather("data", kd, ki, cfg.k)
-        return kd, ki, res.comparisons[None, None], res.compaction_overflow[None, None]
+        if has_rep:
+            # stage 2 of the §10 merge: replicas own disjoint contiguous row
+            # blocks, so reassembly is a concat in rep order
+            kd = jax.lax.all_gather(kd, "rep").reshape(-1, kd.shape[-1])
+            ki = jax.lax.all_gather(ki, "rep").reshape(-1, ki.shape[-1])
+        return kd, ki, comps[None, None], overflow[None, None]
 
+    if has_rep:
+        q_specs = (P("rep", None), P(), P("rep", None, None))
+        counter_spec = P("data", "model", "rep")
+    else:
+        q_specs = (P(), P(), P())
+        counter_spec = P("data", "model")
     qd, qi, comps, overflow = _shard_map(
         body,
         mesh,
         in_specs=(
             jax.tree.map(lambda _: P("data", "model"), index),
             P("data", None),
-            P(),
-            P(),
-        ),
-        out_specs=(P(), P(), P("data", "model"), P("data", "model")),
-    )(index, data, queries, drop_mask)
+        ) + q_specs,
+        out_specs=(P(), P(), counter_spec, counter_spec),
+    )(index, data, queries, drop_mask, routed)
     return qd, qi, comps, overflow
 
 
@@ -239,6 +333,27 @@ def simulate_build(root_key, data, cfg: slsh.SLSHConfig, grid: Grid):
     return jax.lax.map(node_build, data_n)  # leading dims (nu, p)
 
 
+def _simulate_cells(index, data, queries, cfg: slsh.SLSHConfig, grid: Grid):
+    """Per-cell partial results (CellResult stacked (nu, p, ...)) — the
+    shared front half of ``simulate_query`` and ``simulate_query_routed``."""
+    n, d = data.shape
+    data_n = data.reshape(grid.nu, n // grid.nu, d)
+
+    def node_query(args):
+        node_id, data_local, index_node = args
+        return jax.lax.map(
+            lambda ix: cell_query(
+                ix, data_local, node_id * (n // grid.nu), queries, cfg, grid
+            ),
+            index_node,
+        )  # stacked over p
+
+    return jax.lax.map(
+        node_query,
+        (jnp.arange(grid.nu, dtype=jnp.int32), data_n, index),
+    )  # (nu, p, ...)
+
+
 def simulate_query(
     index,
     data,
@@ -248,25 +363,9 @@ def simulate_query(
     drop_mask: jax.Array | None = None,
 ):
     """vmap-over-cells query + host-side reduction. Same math as dslsh_query."""
-    n, d = data.shape
-    data_n = data.reshape(grid.nu, n // grid.nu, d)
     if drop_mask is None:
         drop_mask = jnp.zeros((grid.nu,), bool)
-
-    def node_query(args):
-        node_id, data_local, index_node = args
-        res = jax.lax.map(
-            lambda ix: cell_query(
-                ix, data_local, node_id * (n // grid.nu), queries, cfg, grid
-            ),
-            index_node,
-        )  # stacked over p
-        return res
-
-    res = jax.lax.map(
-        node_query,
-        (jnp.arange(grid.nu, dtype=jnp.int32), data_n, index),
-    )  # (nu, p, ...)
+    res = _simulate_cells(index, data, queries, cfg, grid)
     kd = jnp.where(drop_mask[:, None, None, None], jnp.inf, res.knn_dist)
     ki = jnp.where(drop_mask[:, None, None, None], -1, res.knn_idx)
     q = queries.shape[0]
@@ -275,6 +374,85 @@ def simulate_query(
     fd, fi = jax.vmap(lambda a, b: topk.masked_topk_smallest(a, b, cfg.k))(kd, ki)
     # comparisons / compaction_overflow: (nu, p, Q)
     return fd, fi, res.comparisons, res.compaction_overflow
+
+
+def simulate_query_routed(
+    index,
+    data,
+    queries,
+    cfg: slsh.SLSHConfig,
+    grid: Grid,
+    plan: routing.RoutingPlan,
+    drop_mask: jax.Array | None = None,
+    max_cells: int | None = None,
+    return_stats: bool = False,
+):
+    """Routed + replicated form of ``simulate_query`` (DESIGN.md §10).
+
+    The Forwarder hashes the batch once against the full family, routes each
+    query only to the cells its probe keys can land in (``plan.occupancy``),
+    block-splits every cell's routed rows across that cell's replicas, and
+    the Reducer runs the two-stage merge: replica reassembly, then a
+    cross-cell tournament tree. Without ``max_cells`` the result is
+    **bit-identical** to ``simulate_query`` — distances, indices,
+    comparisons, and overflow — because routed-out (cell, query) pairs are
+    exactly the pairs whose candidate set is empty and the tournament
+    visits partials in flat-concatenation order (tests/test_routing.py).
+
+    ``max_cells`` enables deadline degradation: only the ``max_cells``
+    best-landing cells are probed per query (approximate by design).
+    ``return_stats`` appends a ``routing.RoutingStats`` with the route
+    mask, per-device load, and Reducer payload accounting.
+    """
+    if drop_mask is None:
+        drop_mask = jnp.zeros((grid.nu,), bool)
+    res = _simulate_cells(index, data, queries, cfg, grid)
+    pk = routing.probe_keys(routing.family_from_index(index), queries, cfg)
+    routed, scores = routing.route_mask(plan.occupancy, pk, grid)
+    if max_cells is not None:
+        routed = routing.apply_cell_budget(routed, scores, max_cells)
+    mask = jnp.transpose(routed, (1, 2, 0))  # (nu, p, Q)
+    kd = jnp.where(mask[..., None], res.knn_dist, jnp.inf)
+    ki = jnp.where(mask[..., None], res.knn_idx, -1)
+    comps = jnp.where(mask, res.comparisons, 0)
+    overflow = jnp.where(mask, res.compaction_overflow, 0)
+    kd = jnp.where(drop_mask[:, None, None, None], jnp.inf, kd)
+    ki = jnp.where(drop_mask[:, None, None, None], -1, ki)
+    q = queries.shape[0]
+    kd_s = kd.reshape(grid.cells, q, cfg.k)
+    ki_s = ki.reshape(grid.cells, q, cfg.k)
+    if plan.r_max > 1:
+        # stage 1: split each cell's partial across its replicas by row
+        # block, then reassemble — exercises the replica topology while
+        # staying exact (replicas own disjoint rows of identical indices)
+        owner = jnp.asarray(
+            np.stack(
+                [
+                    routing.replica_owner(q, int(plan.replicas[j, c]))
+                    for j in range(grid.nu)
+                    for c in range(grid.p)
+                ]
+            )
+        )  # (S, Q)
+        kd_r, ki_r = jax.vmap(
+            lambda a, b, o: routing.split_replicas(a, b, o, plan.r_max)
+        )(kd_s, ki_s, owner)
+        kd_s, ki_s = jax.vmap(
+            lambda a, b: routing.merge_replica_partials(a, b, cfg.k)
+        )(kd_r, ki_r)
+    fd, fi = routing.merge_partials_tree(kd_s, ki_s, cfg.k)
+    if not return_stats:
+        return fd, fi, comps, overflow
+    routed_np = np.asarray(routed)
+    stats = routing.RoutingStats(
+        routed=routed_np,
+        scores=np.asarray(scores),
+        payload=routing.merge_payload(
+            np.asarray(mask).reshape(grid.cells, q), cfg.k
+        ),
+        device_load=routing.device_load(plan, routed_np),
+    )
+    return fd, fi, comps, overflow, stats
 
 
 # ----------------------------------------------------------------- PKNN

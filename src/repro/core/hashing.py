@@ -72,6 +72,8 @@ HashParams = BitSampleParams | SignRPParams
 def make_bitsample(
     key: jax.Array, L: int, m: int, d: int, lo: float, hi: float
 ) -> BitSampleParams:
+    """Sample an l1 bit-sampling family: L tables, m bits over value range
+    [lo, hi] (bit j of table t is the predicate ``x[dims[t,j]] > thrs[t,j]``)."""
     kd, kt, ks = jax.random.split(key, 3)
     dims = jax.random.randint(kd, (L, m), 0, d, dtype=jnp.int32)
     thrs = jax.random.uniform(kt, (L, m), jnp.float32, lo, hi)
@@ -82,6 +84,8 @@ def make_bitsample(
 
 
 def make_signrp(key: jax.Array, L: int, m: int, d: int) -> SignRPParams:
+    """Sample a cosine sign-random-projection family: L tables, m gaussian
+    projections each (``bit_j = (x . proj[:, j]) >= 0``)."""
     kp, ks = jax.random.split(key)
     proj = jax.random.normal(kp, (L, d, m), jnp.float32)
     salts = jax.random.randint(ks, (L,), 0, 2**31 - 1, dtype=jnp.int32).astype(

@@ -42,6 +42,21 @@ from repro.core import hashing, tables, topk
 
 @dataclasses.dataclass(frozen=True)
 class SLSHConfig:
+    """Static configuration shared by every SLSH execution path.
+
+    One frozen object carries the paper parameters (``m_out``/``L_out``
+    outer bit-sampling layer, ``m_in``/``L_in`` inner cosine layer,
+    ``alpha`` heavy-bucket threshold, ``k``), the static-shape budgets
+    (DESIGN.md §8.4), and the compute-backend choice (§6). Defaults are the
+    paper's Table 1 settings.
+
+    >>> cfg = SLSHConfig(m_out=16, L_out=8, c_max=64, multiprobe=1)
+    >>> cfg.slot  # per-table candidate slot width: max(2*64, L_in*c_in)
+    640
+    >>> cfg.backend
+    'reference'
+    """
+
     # paper parameters
     m_out: int = 125
     L_out: int = 120
@@ -156,6 +171,8 @@ def register_backend(
 
 
 def get_backend(name: str, cfg: "SLSHConfig | None" = None) -> BackendOps:
+    """Resolve a registered backend name to its ``BackendOps`` (factories
+    are invoked with ``cfg``); raises ``ValueError`` for unknown names."""
     try:
         entry = _BACKENDS[name]
     except KeyError:

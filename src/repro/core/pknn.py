@@ -25,6 +25,7 @@ def knn_exhaustive(
 def knn_batch(
     data: jax.Array, queries: jax.Array, k: int, chunk: int = 64
 ) -> tuple[jax.Array, jax.Array]:
+    """Chunked exact l1 K-NN: (Q, d) queries -> (Q, k) dists & indices."""
     nq = queries.shape[0]
     chunk = min(chunk, nq)
     n_chunks = (nq + chunk - 1) // chunk

@@ -23,10 +23,12 @@ def weighted_vote(
 def predict_batch(
     labels: jax.Array, knn_idx: jax.Array, knn_dist: jax.Array
 ) -> jax.Array:
+    """Batched :func:`weighted_vote`: (Q, K) neighbours -> (Q,) {0,1}."""
     return jax.vmap(lambda i, d: weighted_vote(labels, i, d))(knn_idx, knn_dist)
 
 
 def confusion(pred: jax.Array, true: jax.Array) -> tuple[jax.Array, ...]:
+    """Binary confusion counts ``(tp, tn, fp, fn)`` over {0,1} vectors."""
     pred = pred.astype(jnp.int32)
     true = true.astype(jnp.int32)
     tp = jnp.sum((pred == 1) & (true == 1))

@@ -1,0 +1,464 @@
+"""Replication-aware distributed query routing (DESIGN.md §10).
+
+The paper's Forwarder broadcasts every query to every cell and the Reducer
+merges a flat all-gather of partial top-Ks — fine at 8 cells, a network/load
+wall at 40. This module supplies the three pieces that remove it, shared by
+``distributed.simulate_query_routed`` / ``dslsh_query`` and the serving and
+streaming paths:
+
+* **Key→cell map** (:func:`key_cell_map`) — a per-(node, table) coarse
+  occupancy bitmap computed at build time from the CSR keys. A query batch is
+  routed only to the cells one of its probe keys can land in; the map has no
+  false negatives (an unoccupied coarse slot proves the probe key is absent
+  from the table), so routing never changes any result bit — skipped
+  (cell, query) pairs are exactly the pairs whose candidate set is empty.
+* **Replication plan** (:func:`make_plan`) — cells are assigned to a logical
+  device pool with a static replication factor: cells whose stratified layer
+  is hot (heavy-bucket mass from ``tables.find_heavy``) get up to ``r``
+  replicas, and a query batch block-splits across the replicas of each cell.
+* **Two-stage tree merge** (:func:`merge_partials_tree`,
+  ``distributed.merge_axis_tree``) — partial top-Ks merge through a
+  (dst, src) tournament (replica reassembly first, then cross-cell) instead
+  of the flat all-gather. The tournament visits partials in ascending cell
+  order, so the result is bit-identical to the flat merge *including
+  distance-tie resolution*, for any cell count (power of two not required).
+  It moves at most ``(S-1)·Q·K`` entries where the flat all-gather moves
+  ``S²·Q·K`` (``S·Q·K`` for an idealized master collect), and routed-out
+  rows are not sent at all (:func:`merge_payload`).
+
+Queries under deadline pressure degrade gracefully: :func:`degrade_max_cells`
+maps a remaining-latency budget to a cap on the number of cells probed per
+query, and :func:`apply_cell_budget` keeps the cells with the most probe-key
+landings (serve/engine.py threads this through the kNN-LM hook).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, pipeline, topk
+
+DEFAULT_BITS = 12  # coarse key-map slots per table = 2**bits (4 KiB as bool)
+
+
+# ------------------------------------------------------------- key→cell map
+
+
+def coarse_slot(keys: jax.Array, bits: int) -> jax.Array:
+    """Coarse map slot of each uint32 bucket key (its ``bits`` high bits).
+
+    Bucket keys are FNV-mixed (DESIGN.md §8.3), so the high bits are
+    uniformly distributed and a ``2**bits``-slot map keeps per-table false
+    positives near ``n_distinct / 2**bits``.
+    """
+    return (keys >> jnp.uint32(32 - bits)).astype(jnp.int32)
+
+
+def key_cell_map(
+    sorted_keys: jax.Array, n_valid: jax.Array, bits: int = DEFAULT_BITS
+) -> jax.Array:
+    """Build-time coarse occupancy map: which coarse slots hold >= 1 point.
+
+    ``sorted_keys`` is the cell-stacked CSR key tensor ``(nu, p, L_loc,
+    rows)`` and ``n_valid`` ``(nu, p)`` the live row count per cell (rows
+    beyond it are capacity padding in the streaming layout and must not mark
+    slots). Returns ``(nu, L_out, 2**bits)`` bool, table-major — table ``t``
+    of the family is row ``t`` regardless of which core owns it, matching
+    the ``core_id * L_loc + row`` slicing in ``distributed.cell_build``.
+    """
+    nu, p, l_loc, rows = sorted_keys.shape
+    b = 1 << bits
+    slots = coarse_slot(sorted_keys, bits)
+    valid = jnp.arange(rows) < n_valid[:, :, None, None]
+    target = jnp.where(valid, slots, b)  # b = out of range -> dropped
+
+    def mark(tg):
+        return jnp.zeros((b,), bool).at[tg].set(True, mode="drop")
+
+    occ = jax.vmap(jax.vmap(jax.vmap(mark)))(target)
+    return occ.reshape(nu, p * l_loc, b)
+
+
+def delta_occupancy(
+    outer_keys: jax.Array, valid: jax.Array, bits: int, b: int
+) -> jax.Array:
+    """Coarse occupancy of one cell's delta segment: ``(L_loc, b)`` bool.
+
+    A delta segment inherits its owning cell's placement (DESIGN.md §10):
+    streamed-in keys are OR-ed into the cell's build-time map at query time,
+    so routing stays exact between compactions. ``outer_keys`` is the
+    segment's ``(cap, L_loc)`` key matrix, ``valid`` its slot mask.
+    """
+    slots = coarse_slot(outer_keys, bits)  # (cap, L_loc)
+    target = jnp.where(valid[:, None], slots, b)
+
+    def mark(tg):  # tg: (cap,) slots of one table
+        return jnp.zeros((b,), bool).at[tg].set(True, mode="drop")
+
+    return jax.vmap(mark)(target.T)
+
+
+def cell_occupancy(
+    sorted_keys: jax.Array, n_valid: jax.Array, bits: int = DEFAULT_BITS
+) -> jax.Array:
+    """Coarse occupancy of one cell's tables: ``(L_loc, 2**bits)`` bool.
+
+    The single-cell form of :func:`key_cell_map` (used by the streaming
+    monitor, whose cells live in per-node pytrees rather than one stacked
+    index). Capacity-padded rows beyond ``n_valid`` never mark slots.
+    """
+    occ = key_cell_map(
+        sorted_keys[None, None], jnp.asarray(n_valid)[None, None], bits
+    )
+    return occ[0]
+
+
+def route_cell(occ: jax.Array, pk_cell: jax.Array) -> jax.Array:
+    """Per-query route decision against one cell's occupancy.
+
+    ``pk_cell`` is the query batch's probe keys for this cell's tables
+    ``(Q, L_loc, P)``; returns ``(Q,)`` bool — True iff any probe key lands
+    in an occupied coarse slot.
+    """
+    bits = occ.shape[-1].bit_length() - 1
+    slots = coarse_slot(pk_cell, bits)
+    hit = occ[jnp.arange(occ.shape[0])[None, :, None], slots]
+    return jnp.any(hit, axis=(1, 2))
+
+
+def family_from_index(index) -> hashing.BitSampleParams:
+    """The full outer hash family from a (possibly cell-stacked) index.
+
+    Every cell slices its rows out of the same root-broadcast family, so
+    node 0's per-core slices concatenate back to the full ``(L_out, m)``
+    params — which the router hashes queries with *once*, instead of once
+    per cell.
+    """
+    dims = index.outer_params.dims
+    if dims.ndim == 2:  # already a full (or single-cell) family
+        return index.outer_params
+    m = dims.shape[-1]
+    return hashing.BitSampleParams(
+        dims[0].reshape(-1, m),
+        index.outer_params.thrs[0].reshape(-1, m),
+        index.outer_params.salts[0].reshape(-1),
+    )
+
+
+def probe_keys(
+    params: hashing.BitSampleParams, queries: jax.Array, cfg
+) -> jax.Array:
+    """All probe keys of a query batch: ``(Q, L_out, 1 + multiprobe)``.
+
+    Signatures come from the configured compute backend (DESIGN.md §6), so
+    the router sees bit-identical keys to the ones each cell derives from
+    its own family slice — the fact routing exactness rests on.
+    """
+    backend = pipeline.get_backend(cfg.backend, cfg)
+    words = backend.signature_words(params, queries)
+    return hashing.probe_keys_from_words(params, queries, words, cfg.multiprobe)
+
+
+# ------------------------------------------------------------ routing plan
+
+
+class RoutingPlan(NamedTuple):
+    """Build-time routing state (DESIGN.md §10).
+
+    ``occupancy`` lives on device (queries route under jit); the placement
+    fields are host-side numpy — they parameterize accounting and the
+    simulated device pool, not traced computation.
+    """
+
+    occupancy: jax.Array  # (nu, L_out, 2**bits) bool key→cell map
+    replicas: np.ndarray  # (nu, p) int32 replica count per cell, >= 1
+    heat: np.ndarray  # (nu, p) float32 heavy-bucket mass driving placement
+    cell_device: np.ndarray  # (nu, p, r_max) int32 device ids, -1 pad
+
+    @property
+    def bits(self) -> int:
+        """Coarse key-map resolution (slots per table = ``2**bits``)."""
+        return int(self.occupancy.shape[-1]).bit_length() - 1
+
+    @property
+    def r_max(self) -> int:
+        """Largest replica count any cell was assigned."""
+        return int(self.cell_device.shape[-1])
+
+    @property
+    def n_devices(self) -> int:
+        """Size of the logical device pool (``sum(replicas)``)."""
+        return int(self.cell_device.max()) + 1
+
+
+def make_plan(index, cfg, grid, *, replication: int = 1, bits: int = DEFAULT_BITS) -> RoutingPlan:
+    """Routing plan for a cell-stacked index (``simulate_build``/``dslsh_build``).
+
+    Replication is static and heat-driven: a cell's heat is its heavy-bucket
+    mass (``tables.find_heavy`` population sums — the load magnet, since
+    stratified probes are exactly the dense-traffic buckets); cells at or
+    above the grid-mean heat get ``replication`` replicas, the rest one.
+    Device ids are dealt sequentially, so the pool size is ``sum(replicas)``.
+    """
+    occupancy = key_cell_map(index.outer.sorted_keys, index.n, bits)
+    heat = np.asarray(
+        (index.heavy.size * index.heavy.valid).sum(axis=(-1, -2)), np.float32
+    )
+    replicas = np.ones((grid.nu, grid.p), np.int32)
+    if replication > 1:
+        replicas[heat >= heat.mean()] = replication
+    r_max = int(replicas.max())
+    cell_device = np.full((grid.nu, grid.p, r_max), -1, np.int32)
+    dev = 0
+    for j in range(grid.nu):
+        for c in range(grid.p):
+            for r in range(int(replicas[j, c])):
+                cell_device[j, c, r] = dev
+                dev += 1
+    return RoutingPlan(occupancy, replicas, heat, cell_device)
+
+
+def route_mask(
+    occupancy: jax.Array, pk: jax.Array, grid
+) -> tuple[jax.Array, jax.Array]:
+    """Which cells each query must visit, plus per-cell landing scores.
+
+    ``pk`` is the full-family probe-key tensor ``(Q, L_out, P)``. Returns
+    ``routed (Q, nu, p)`` bool — True iff any probe key of any table owned
+    by the cell lands in an occupied coarse slot of that node — and
+    ``scores (Q, nu, p)`` int32, the count of landed tables (the degradation
+    priority used by :func:`apply_cell_budget`).
+    """
+    l_out = occupancy.shape[1]
+    slots = coarse_slot(pk, occupancy.shape[-1].bit_length() - 1)  # (Q, L, P)
+    rows = jnp.arange(l_out)[None, :, None]
+
+    def per_node(occ_j):  # (L, B) -> (Q, L, P) hits
+        return occ_j[rows, slots]
+
+    hit = jax.vmap(per_node)(occupancy)  # (nu, Q, L, P)
+    landed = jnp.moveaxis(jnp.any(hit, axis=-1), 0, 1)  # (Q, nu, L)
+    scores = landed.reshape(
+        landed.shape[0], grid.nu, grid.p, l_out // grid.p
+    ).sum(-1).astype(jnp.int32)
+    return scores > 0, scores
+
+
+def apply_cell_budget(
+    routed: jax.Array, scores: jax.Array, max_cells: int
+) -> jax.Array:
+    """Deadline degradation: probe at most ``max_cells`` cells per query.
+
+    Keeps the routed cells with the highest landing scores (ties to the
+    lower cell id, so degradation is deterministic). Dropping cells trades
+    recall for latency — the paper's latency-first mode — and is only ever
+    applied on an explicit budget (serve/engine.py), never silently.
+    """
+    q, nu, p = routed.shape
+    s = nu * p
+    if max_cells >= s:
+        return routed
+    flat_r = routed.reshape(q, s)
+    flat_s = scores.reshape(q, s)
+    # lexicographic priority (score desc, cell id asc); -1 marks unrouted
+    prio = jnp.where(flat_r, flat_s * (s + 1) + (s - jnp.arange(s)), -1)
+    top, pos = jax.lax.top_k(prio, max_cells)
+    keep = jnp.zeros((q, s + 1), bool)
+    keep = jax.vmap(lambda k, pp, t: k.at[jnp.where(t > -1, pp, s)].set(True))(
+        keep, pos, top
+    )
+    return keep[:, :s].reshape(q, nu, p)
+
+
+def degrade_max_cells(
+    budget_s: float, levels: tuple[tuple[float, int | None], ...]
+) -> int | None:
+    """Map a remaining-latency budget to a probe-cell cap.
+
+    ``levels`` are ``(min_budget_s, max_cells)`` pairs sorted by descending
+    budget; the first level whose threshold the budget meets wins, and a
+    budget below every threshold takes the last (most degraded) level.
+    ``None`` means "no cap".
+
+    >>> levels = ((0.05, None), (0.01, 2))
+    >>> degrade_max_cells(0.2, levels) is None
+    True
+    >>> degrade_max_cells(0.02, levels)
+    2
+    >>> degrade_max_cells(-1.0, levels)
+    2
+    """
+    for thr, cells in levels:
+        if budget_s >= thr:
+            return cells
+    return levels[-1][1]
+
+
+# ------------------------------------------------------- tree-merge topology
+
+
+def tournament_rounds(size: int) -> list[list[tuple[int, int]]]:
+    """(dst, src) merge pairs per round; rank 0 ends with the full merge.
+
+    Sources always exceed destinations and accumulate in ascending rank
+    order, so the fold visits partials exactly in flat-concatenation order —
+    which makes the tree merge bit-identical to the flat merge even through
+    distance ties. Works for any ``size`` (non-power-of-two ranks simply sit
+    out rounds without a partner).
+
+    >>> tournament_rounds(5)
+    [[(0, 1), (2, 3)], [(0, 2)], [(0, 4)]]
+    >>> tournament_rounds(1)
+    []
+    """
+    rounds, step = [], 1
+    while step < size:
+        rnd = [(d, d + step) for d in range(0, size, 2 * step) if d + step < size]
+        rounds.append(rnd)
+        step *= 2
+    return rounds
+
+
+def _merge2(kd_a, ki_a, kd_b, ki_b, k: int):
+    """Merge two (Q, K) partial top-Ks; ``a`` entries win distance ties."""
+    return jax.vmap(lambda a, b, c, d: topk.merge_topk(a, b, c, d, k))(
+        kd_a, ki_a, kd_b, ki_b
+    )
+
+
+def merge_partials_flat(kd: jax.Array, ki: jax.Array, k: int):
+    """Flat Reducer baseline: concat all ``(S, Q, K)`` partials, one top-k."""
+    s, q, kk = kd.shape
+    fd = jnp.moveaxis(kd, 0, 1).reshape(q, s * kk)
+    fi = jnp.moveaxis(ki, 0, 1).reshape(q, s * kk)
+    return jax.vmap(lambda a, b: topk.masked_topk_smallest(a, b, k))(fd, fi)
+
+
+def merge_partials_tree(kd: jax.Array, ki: jax.Array, k: int):
+    """Cross-cell tournament merge of ``(S, Q, K)`` partials -> ``(Q, K)``.
+
+    Bit-identical to :func:`merge_partials_flat` (ties included — see
+    :func:`tournament_rounds`) while moving ``S-1`` truncated partials
+    instead of gathering all ``S``.
+    """
+    s = kd.shape[0]
+    parts_d = [kd[i] for i in range(s)]
+    parts_i = [ki[i] for i in range(s)]
+    for rnd in tournament_rounds(s):
+        for dst, src in rnd:
+            parts_d[dst], parts_i[dst] = _merge2(
+                parts_d[dst], parts_i[dst], parts_d[src], parts_i[src], k
+            )
+    return parts_d[0], parts_i[0]
+
+
+# ------------------------------------------------------------- replication
+
+
+def replica_owner(n_queries: int, r: int) -> np.ndarray:
+    """Block owner of each query row under an ``r``-way replica split.
+
+    Contiguous blocks (not round-robin) so the SPMD form is a plain
+    ``P('rep')`` row sharding of the query batch.
+
+    >>> replica_owner(5, 2).tolist()
+    [0, 0, 0, 1, 1]
+    >>> replica_owner(4, 1).tolist()
+    [0, 0, 0, 0]
+    """
+    blk = -(-n_queries // r)
+    return np.minimum(np.arange(n_queries) // blk, r - 1).astype(np.int32)
+
+
+def split_replicas(
+    kd: jax.Array, ki: jax.Array, owner: jax.Array, r_max: int
+):
+    """Split one cell's (Q, K) partial across its replicas by row owner."""
+    reps = jnp.arange(r_max)[:, None]  # (r_max, 1)
+    mine = owner[None, :] == reps  # (r_max, Q)
+    kd_r = jnp.where(mine[..., None], kd[None], jnp.inf)
+    ki_r = jnp.where(mine[..., None], ki[None], -1)
+    return kd_r, ki_r
+
+
+def merge_replica_partials(kd_r: jax.Array, ki_r: jax.Array, k: int):
+    """Stage-1 merge: reassemble a cell's partial from its replicas.
+
+    Replicas own disjoint query rows, so the fold reduces to a select; it
+    still runs as a real top-k merge so the two-stage topology is exercised
+    end to end (and stays correct if replica ownership ever overlaps).
+    """
+    r = kd_r.shape[0]
+    kd, ki = kd_r[0], ki_r[0]
+    for i in range(1, r):
+        kd, ki = _merge2(kd, ki, kd_r[i], ki_r[i], k)
+    return kd, ki
+
+
+# ------------------------------------------------------------- cost model
+
+
+class RoutingStats(NamedTuple):
+    """Per-batch routing observability (host-side, for benchmarks/serving).
+
+    ``routed``/``scores`` are the ``(Q, nu, p)`` route mask and landing
+    counts, ``device_load`` the routed-row histogram over the logical device
+    pool (replica-split), and ``payload`` the Reducer byte accounting from
+    :func:`merge_payload`.
+    """
+
+    routed: np.ndarray  # (Q, nu, p) bool
+    scores: np.ndarray  # (Q, nu, p) int32 landed-table counts
+    payload: dict  # merge_payload() output
+    device_load: np.ndarray  # (n_devices,) int64 routed rows per device
+
+
+def merge_payload(
+    routed_rows: np.ndarray, k: int, *, bytes_per_entry: int = 8
+) -> dict:
+    """Reducer payload accounting for one query batch (DESIGN.md §10).
+
+    ``routed_rows`` is the ``(S, Q)`` bool matrix of (cell, query) pairs the
+    router visited. The tree merge sends, per (dst, src) tournament edge,
+    only the rows where the src subtree holds any routed partial (plus a
+    ``Q``-bit row bitmap); the flat baselines always move full partials.
+    Entries are (f32 distance, i32 index) pairs = 8 bytes.
+    """
+    routed_rows = np.asarray(routed_rows, bool)
+    s, q = routed_rows.shape
+    active = routed_rows.copy()
+    tree = 0
+    for rnd in tournament_rounds(s):
+        for dst, src in rnd:
+            tree += int(active[src].sum()) * k * bytes_per_entry + (q + 7) // 8
+            active[dst] |= active[src]
+    master = s * q * k * bytes_per_entry  # idealized master collect
+    return dict(
+        tree_routed_bytes=tree,
+        flat_master_bytes=master,
+        flat_allgather_bytes=s * master,  # what merge_axis_allgather moves
+        routed_pairs=int(routed_rows.sum()),
+        total_pairs=s * q,
+    )
+
+
+def device_load(plan: RoutingPlan, routed: np.ndarray) -> np.ndarray:
+    """Routed query rows per logical device (the per-cell histogram input).
+
+    ``routed`` is ``(Q, nu, p)``; each cell's routed rows block-split across
+    its replicas, so a hot cell's load divides by its replica count.
+    """
+    routed = np.asarray(routed, bool)
+    q = routed.shape[0]
+    load = np.zeros((plan.n_devices,), np.int64)
+    for j in range(plan.replicas.shape[0]):
+        for c in range(plan.replicas.shape[1]):
+            r = int(plan.replicas[j, c])
+            owner = replica_owner(q, r)
+            rows = routed[:, j, c]
+            for rep in range(r):
+                load[plan.cell_device[j, c, rep]] += int(rows[owner == rep].sum())
+    return load

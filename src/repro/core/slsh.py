@@ -25,7 +25,22 @@ from repro.core.pipeline import (  # noqa: F401  (re-exported public API)
 
 
 def build_index(key: jax.Array, data: jax.Array, cfg: SLSHConfig) -> SLSHIndex:
-    """Build a stratified LSH index over ``data`` (n, d)."""
+    """Build a stratified LSH index over ``data`` (n, d).
+
+    >>> import jax
+    >>> cfg = SLSHConfig(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05, k=3,
+    ...                  val_lo=0.0, val_hi=1.0, c_max=16, c_in=8, h_max=2,
+    ...                  p_max=32)
+    >>> data = jax.random.uniform(jax.random.PRNGKey(0), (64, 8))
+    >>> index = build_index(jax.random.PRNGKey(1), data, cfg)
+    >>> int(index.n)
+    64
+    >>> res = query_batch(index, data, data[:4], cfg)
+    >>> [int(i) for i in res.knn_idx[:, 0]]  # each point finds itself first
+    [0, 1, 2, 3]
+    >>> int((res.compaction_overflow > 0).sum())  # budgets not truncating
+    0
+    """
     _, d = data.shape
     outer_params, inner_params = pipeline.make_family(key, d, cfg)
     return pipeline.build_from_params(data, outer_params, inner_params, cfg)

@@ -68,6 +68,12 @@ def _heavy_one_table(
 
 
 def find_heavy(tables: TableSet, alpha_n: jax.Array, h_max: int) -> HeavyBuckets:
+    """Top-``h_max`` buckets per table with population > ``alpha_n``.
+
+    The registry the stratified (inner) layer indexes — and the heat signal
+    replication-aware routing places replicas by (DESIGN.md §10). The
+    streaming PAD segment is never classified heavy (DESIGN.md §9.1).
+    """
     key, start, size, valid, overflow = jax.vmap(
         lambda sk: _heavy_one_table(sk, alpha_n, h_max)
     )(tables.sorted_keys)

@@ -82,6 +82,7 @@ def masked_l1_topk_batch(
 
 
 def cosine_distances(q: jax.Array, pts: jax.Array) -> jax.Array:
+    """q: (d,), pts: (C, d) -> (C,) cosine distances (1 - cos similarity)."""
     qn = q / (jnp.linalg.norm(q) + 1e-9)
     pn = pts / (jnp.linalg.norm(pts, axis=-1, keepdims=True) + 1e-9)
     return 1.0 - pn @ qn

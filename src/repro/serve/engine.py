@@ -48,6 +48,15 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_len = max_len + model.cfg.meta_tokens
         self.logits_hook = logits_hook  # e.g. SLSH-kNN-LM interpolation
+        # deadline-aware hooks opt in explicitly by carrying
+        # ``accepts_budget = True`` (make_knn_lm_hook sets it); they then
+        # receive (logits, carrier, budget_s) and may degrade retrieval
+        # under pressure (DESIGN.md §10). Anything else — including hooks
+        # that happen to have a third optional parameter — keeps the legacy
+        # two-argument call, so no pre-existing hook changes behavior.
+        self._hook_takes_budget = bool(
+            getattr(logits_hook, "accepts_budget", False)
+        )
         self._decode = jax.jit(model.decode_step)
 
     def _prefill_one(self, req: Request):
@@ -94,7 +103,16 @@ class ServeEngine:
                 if all(r.done for r in group):
                     break
                 if self.logits_hook is not None:
-                    logits = self.logits_hook(logits, cache)
+                    if self._hook_takes_budget:
+                        # tightest remaining latency budget in the batch —
+                        # the router degrades retrieval when it runs short
+                        budget = min(
+                            (r.deadline_s - elapsed for r in group if not r.done),
+                            default=float("inf"),
+                        )
+                        logits = self.logits_hook(logits, cache, budget)
+                    else:
+                        logits = self.logits_hook(logits, cache)
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 for i, r in enumerate(group):
                     if not r.done and len(r.result) < r.max_new:
@@ -123,7 +141,9 @@ def make_knn_lm_hook(
     vocab: int,
     lmbda: float = 0.25,
     temperature: float = 1.0,
-) -> Callable[[jax.Array, Any], jax.Array]:
+    plan=None,
+    degrade: tuple[tuple[float, int | None], ...] | None = None,
+) -> Callable[..., jax.Array]:
     """SLSH-kNN-LM logits hook: interpolate LM logits with a distribution
     over the next tokens of the K nearest hidden states (Khandelwal et al.,
     adapted to DSLSH retrieval).
@@ -143,16 +163,43 @@ def make_knn_lm_hook(
     per-cell overflow counts — size the budget so they stay zero, DESIGN.md
     §3), and ``slsh_cfg.interpret`` follows the §6 platform policy
     (DESIGN.md §5/§6).
+
+    Routing (DESIGN.md §10): pass a ``routing.make_plan`` result as ``plan``
+    to route each decode-time batch only to the cells its probe keys can
+    land in — bit-identical retrieval. ``degrade`` additionally declares
+    deadline-degradation levels ``((min_budget_s, max_cells), ...)``: the
+    engine hands the hook the batch's tightest remaining latency budget
+    every step, and ``routing.degrade_max_cells`` maps it to a cap on the
+    cells probed per query (approximate retrieval, the paper's
+    latency-first mode — never applied without an explicit ``degrade``).
     """
     from repro.core import distributed as D
+    from repro.core import routing
 
-    def hook(logits: jax.Array, carrier) -> jax.Array:
+    if degrade is not None and plan is None:
+        raise ValueError(
+            "degrade levels require a routing plan (pass plan=routing.make_plan(...))"
+        )
+
+    def hook(logits: jax.Array, carrier, budget_s: float = float("inf")) -> jax.Array:
         hq = hidden_fn(carrier)  # (B, d)
-        kd, ki, _, _ = D.simulate_query(index, datastore_points, hq, slsh_cfg, grid)
+        if plan is None:
+            kd, ki, _, _ = D.simulate_query(
+                index, datastore_points, hq, slsh_cfg, grid
+            )
+        else:
+            max_cells = (
+                routing.degrade_max_cells(budget_s, degrade) if degrade else None
+            )
+            kd, ki, _, _ = D.simulate_query_routed(
+                index, datastore_points, hq, slsh_cfg, grid, plan,
+                max_cells=max_cells,
+            )
         return knn_interpolate(
             logits, ki, kd, next_tokens, vocab, lmbda, temperature
         )
 
+    hook.accepts_budget = True  # opt into the engine's deadline budget
     return hook
 
 

@@ -19,9 +19,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:
-    """Logical-axis -> mesh-axis mapping for the (pod, data, model) mesh."""
+    """Logical-axis -> mesh-axis mapping for the (pod, [rep,] data, model)
+    mesh. ``rep`` (replicated DSLSH cells, DESIGN.md §10) joins the batch
+    axes — replicas split query/batch rows — but never the parameter axes:
+    replicas hold identical state by construction."""
 
-    batch: tuple = ("pod", "data")  # data parallel
+    batch: tuple = ("pod", "rep", "data")  # data parallel (+ replica split)
     fsdp: tuple = ("pod", "data")  # parameter/optimizer sharding (ZeRO)
     tensor: tuple = ("model",)  # tensor parallel (heads / ffn / vocab / experts)
     seq: tuple = ("model",)  # sequence parallel (activations between blocks)

@@ -48,6 +48,7 @@ class StreamIndex(NamedTuple):
 
     @property
     def capacity(self) -> int:
+        """Fixed store size; CSR rows stay padded to it (DESIGN.md §9.1)."""
         return self.store.shape[0]
 
 
@@ -104,7 +105,26 @@ def stream_init(
     delta_cap: int,
     t0: float = 0.0,
 ) -> StreamIndex:
-    """Build a fresh single-shard streaming index over ``data`` (n0, d)."""
+    """Build a fresh single-shard streaming index over ``data`` (n0, d).
+
+    >>> import jax
+    >>> from repro.core import slsh
+    >>> cfg = slsh.SLSHConfig(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05,
+    ...                       k=3, val_lo=0.0, val_hi=1.0, c_max=16, c_in=8,
+    ...                       h_max=2, p_max=32, use_inner=False)
+    >>> data = jax.random.uniform(jax.random.PRNGKey(0), (32, 8))
+    >>> sidx = stream_init(jax.random.PRNGKey(1), data, cfg,
+    ...                    capacity=48, delta_cap=16)
+    >>> extra = jax.random.uniform(jax.random.PRNGKey(2), (8, 8))
+    >>> sidx = insert_batch(sidx, extra, cfg, t=1.0)
+    >>> int(sidx.n_total)  # streamed points are queryable immediately
+    40
+    >>> res = query_batch(sidx, extra[:2], cfg)
+    >>> [int(i) for i in res.knn_idx[:, 0]]  # ...and find themselves
+    [32, 33]
+    >>> int(compact(sidx, cfg).delta.count)  # compaction empties the delta
+    0
+    """
     outer_params, inner_params = pipeline.make_family(key, data.shape[1], cfg)
     base = pipeline.build_from_params(data, outer_params, inner_params, cfg)
     return from_base(base, data, cfg, capacity=capacity, delta_cap=delta_cap, t0=t0)

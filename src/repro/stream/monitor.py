@@ -37,16 +37,24 @@ import numpy as np
 from repro.core import distributed as D
 from repro.core import pipeline
 from repro.core import predict as predict_mod
+from repro.core import routing
 from repro.core import slsh, topk
 from repro.stream import delta as delta_mod
 from repro.stream import index as stream_index
 
 
 class CellState(NamedTuple):
-    """One core's share of a node: its tables + delta keys (no store)."""
+    """One core's share of a node: its tables + delta keys (no store).
+
+    ``occ`` is the cell's coarse key→cell map over its *base* tables
+    (DESIGN.md §10); the delta segment inherits the cell's placement, so
+    query-time routing ORs the delta keys' occupancy in on the fly and the
+    map stays exact between compactions.
+    """
 
     base: pipeline.SLSHIndex  # capacity-padded CSR tables (DESIGN.md §9.1)
     delta: delta_mod.DeltaIndex
+    occ: jax.Array  # (L_loc, 2**route_bits) bool key→cell map
 
 
 class NodeState(NamedTuple):
@@ -64,6 +72,7 @@ def node_init(
     capacity: int,
     delta_cap: int,
     t0: float = 0.0,
+    route_bits: int = routing.DEFAULT_BITS,
 ) -> NodeState:
     """One node: p cells over a shared store of the node's data slice."""
     n0, d = data_local.shape
@@ -72,8 +81,11 @@ def node_init(
     def per_core(core_id):
         base = D.cell_build(root_key, data_local, core_id, cfg, grid)
         base = base._replace(outer=stream_index.pad_tables(base.outer, capacity))
+        occ = routing.cell_occupancy(base.outer.sorted_keys, base.n, route_bits)
         return CellState(
-            base, delta_mod.make_delta(delta_cap, cfg.L_out // grid.p, cfg.L_in)
+            base,
+            delta_mod.make_delta(delta_cap, cfg.L_out // grid.p, cfg.L_in),
+            occ,
         )
 
     cells = jax.vmap(per_core)(jnp.arange(grid.p, dtype=jnp.int32))
@@ -103,10 +115,31 @@ class StreamEvent:
     comparisons: float  # median per-cell unique candidates scanned
     overflow: int  # (cell, query) partials whose c_comp budget overflowed
     n_index: int  # points queryable across all nodes after ingest
+    # fraction of (cell, query) pairs the §10 router visited (1.0 when
+    # routing is disabled — every pair probed)
+    routed_frac: float = 1.0
 
 
 class StreamingMonitor:
-    """Replay a timestamped window stream through a sharded streaming DSLSH."""
+    """Replay a timestamped window stream through a sharded streaming DSLSH.
+
+    >>> import jax, numpy as np
+    >>> from repro.core import distributed as D
+    >>> from repro.core import slsh
+    >>> cfg = slsh.SLSHConfig(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05,
+    ...                       k=3, val_lo=0.0, val_hi=1.0, c_max=16, c_in=8,
+    ...                       h_max=2, p_max=32, query_chunk=8,
+    ...                       use_inner=False)
+    >>> pts = np.random.default_rng(0).uniform(0, 1, (32, 8)).astype(np.float32)
+    >>> mon = StreamingMonitor(jax.random.PRNGKey(0), pts,
+    ...                        np.zeros(32, np.int8), cfg, D.Grid(nu=1, p=1),
+    ...                        node_capacity=64, delta_cap=16)
+    >>> ev = mon.step(pts[:4], np.zeros(4, np.int8), t=1.0)
+    >>> (ev.inserted, ev.dropped, len(ev.preds))
+    (4, 0, 4)
+    >>> mon.n_index()
+    36
+    """
 
     def __init__(
         self,
@@ -121,13 +154,20 @@ class StreamingMonitor:
         retention_s: float = float("inf"),
         label_delay_s: float = 0.0,
         t0: float = 0.0,
+        route: bool = True,
+        route_bits: int = routing.DEFAULT_BITS,
     ):
         """``label_delay_s``: how long after ingestion a window's AHE label
         becomes observable (the condition window must close first —
         ``cond_beats`` for windowed ABP data). Until revealed, a streamed
         window votes as non-AHE (label 0), the conservative majority class;
         0 attaches labels immediately (oracle mode, for equivalence tests).
-        Warmup labels are historical and attach immediately either way."""
+        Warmup labels are historical and attach immediately either way.
+
+        ``route``: apply the §10 key→cell router to every prediction query
+        (delta segments inherit their cell's placement, so routing is exact
+        — bit-identical predictions, fewer cells visited; StreamEvent
+        reports the visited fraction). ``route_bits`` sizes the coarse map."""
         init_points = np.asarray(init_points, np.float32)
         init_labels = np.asarray(init_labels)
         n0 = init_points.shape[0]
@@ -137,7 +177,12 @@ class StreamingMonitor:
         self.node_capacity, self.delta_cap = node_capacity, delta_cap
         self.retention_s = retention_s
         self.label_delay_s = label_delay_s
+        self.route, self.route_bits = route, route_bits
+        # full outer family (the root broadcast the cells slice their
+        # tables from) — the router hashes each query batch against it once
+        self._family = pipeline.make_family(key, init_points.shape[1], cfg)
         self._rr = 0  # round-robin Forwarder cursor
+        self.last_routed_frac = 1.0
         self._pending_labels: list[tuple[float, int, np.ndarray, np.ndarray]] = []
         self.events: list[StreamEvent] = []
 
@@ -150,6 +195,7 @@ class StreamingMonitor:
             node_init(
                 key, data_nodes[i], cfg, grid,
                 capacity=node_capacity, delta_cap=delta_cap, t0=t0,
+                route_bits=route_bits,
             )
             for i in range(grid.nu)
         ]
@@ -171,6 +217,7 @@ class StreamingMonitor:
             return CellState(
                 cell.base,
                 delta_mod.append_keys(cell.delta, outer_keys, inner_keys, room),
+                cell.occ,  # base map untouched; delta keys OR in at query time
             )
 
         cells = jax.vmap(per_cell)(node.cells)
@@ -179,26 +226,59 @@ class StreamingMonitor:
         )
         return NodeState(store, ts, cells)
 
-    def _node_query(self, node: NodeState, node_id: int, queries):
-        res = jax.lax.map(
-            lambda cell: pipeline.query_batch(
+    def _node_query(self, node: NodeState, node_id: int, queries, pk):
+        """One node's partial results; ``pk`` is the full-family probe-key
+        tensor reshaped per cell ``(p, Q, L_loc, 1+multiprobe)``."""
+
+        def per_cell(args):
+            cell, pk_cell = args
+            res = pipeline.query_batch(
                 cell.base, node.store, queries, self.cfg,
                 delta=delta_mod.as_view(cell.delta, cell.base.n),
-            ),
-            node.cells,
-        )  # stacked over p
+            )
+            if not self.route:
+                return res, jnp.ones((queries.shape[0],), bool)
+            # delta segments inherit the cell's placement (DESIGN.md §10):
+            # OR the live delta keys' occupancy into the base map, then
+            # route — exact, so masking never changes a prediction
+            cap = cell.delta.outer_keys.shape[0]
+            d_occ = routing.delta_occupancy(
+                cell.delta.outer_keys,
+                jnp.arange(cap) < cell.delta.count,
+                self.route_bits,
+                cell.occ.shape[-1],
+            )
+            routed = routing.route_cell(cell.occ | d_occ, pk_cell)
+            res = pipeline.QueryResult(
+                knn_idx=jnp.where(routed[:, None], res.knn_idx, -1),
+                knn_dist=jnp.where(routed[:, None], res.knn_dist, jnp.inf),
+                comparisons=jnp.where(routed, res.comparisons, 0),
+                bucket_total=res.bucket_total,
+                compaction_overflow=jnp.where(routed, res.compaction_overflow, 0),
+            )
+            return res, routed
+
+        res, routed = jax.lax.map(per_cell, (node.cells, pk))  # stacked over p
         gidx = jnp.where(
             res.knn_idx >= 0, res.knn_idx + node_id * self.node_capacity, -1
         )
-        return res.knn_dist, gidx, res.comparisons, res.compaction_overflow
+        return res.knn_dist, gidx, res.comparisons, res.compaction_overflow, routed
 
     def _query_impl(self, state: list[NodeState], queries):
-        parts = [self._node_query(nd, i, queries) for i, nd in enumerate(state)]
+        q = queries.shape[0]
+        l_loc = self.cfg.L_out // self.grid.p
+        pk = routing.probe_keys(self._family[0], queries, self.cfg)
+        pk = jnp.moveaxis(
+            pk.reshape(q, self.grid.p, l_loc, -1), 0, 1
+        )  # (p, Q, L_loc, 1+multiprobe) — cell c owns family rows [c*L_loc, ...)
+        parts = [
+            self._node_query(nd, i, queries, pk) for i, nd in enumerate(state)
+        ]
         kd = jnp.stack([p[0] for p in parts])  # (nu, p, Q, K)
         ki = jnp.stack([p[1] for p in parts])
         comps = jnp.stack([p[2] for p in parts])
         overflow = jnp.stack([p[3] for p in parts])  # (nu, p, Q)
-        q = queries.shape[0]
+        routed = jnp.stack([p[4] for p in parts])  # (nu, p, Q)
         kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
         ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
         # cells of a node share its points, so the same neighbour can appear
@@ -207,7 +287,7 @@ class StreamingMonitor:
         fd, fi = jax.vmap(
             lambda a, b: topk.masked_unique_topk_smallest(a, b, self.cfg.k)
         )(kd, ki)
-        return fd, fi, comps, overflow
+        return fd, fi, comps, overflow, routed
 
     # -------------------------------------------------------- maintenance
 
@@ -246,6 +326,9 @@ class StreamingMonitor:
                     delta_mod.make_delta(
                         self.delta_cap, self.cfg.L_out // self.grid.p, self.cfg.L_in
                     ),
+                    routing.cell_occupancy(
+                        base.outer.sorted_keys, base.n, self.route_bits
+                    ),
                 )
 
             cells = [rebuilt_cell(c) for c in cells]
@@ -269,7 +352,13 @@ class StreamingMonitor:
         else:
             store, ts = node.store, node.ts
             cells = [
-                CellState(s.base, s.delta)
+                CellState(
+                    s.base,
+                    s.delta,
+                    routing.cell_occupancy(
+                        s.base.outer.sorted_keys, s.base.n, self.route_bits
+                    ),
+                )
                 for s in (
                     stream_index.compact(_cell_as_stream(c, node), self.cfg)
                     for c in cells
@@ -343,12 +432,14 @@ class StreamingMonitor:
         Returns (predictions, wall-clock latency seconds, median per-cell
         comparisons, count of (cell, query) partials whose compaction
         budget overflowed — non-zero means c_comp is truncating live
-        candidate sets, DESIGN.md §3)."""
+        candidate sets, DESIGN.md §3). ``self.last_routed_frac`` holds the
+        fraction of (cell, query) pairs the router visited for this batch."""
         q = jnp.asarray(np.asarray(queries, np.float32))
         t0 = time.perf_counter()
-        kd, ki, comps, overflow = self._query(self.state, q)
+        kd, ki, comps, overflow, routed = self._query(self.state, q)
         jax.block_until_ready((kd, ki, comps))
         latency = time.perf_counter() - t0
+        self.last_routed_frac = float(np.asarray(routed).mean())
         preds = predict_mod.predict_batch(
             jnp.asarray(self.labels.reshape(-1)), ki, kd
         )
@@ -367,9 +458,11 @@ class StreamingMonitor:
     def step(self, points, labels, t: float, *, predict: bool = True) -> StreamEvent:
         """One monitoring step: predict on the arriving windows, then ingest."""
         preds, latency, comps, overflow = (np.zeros((0,), np.int32), 0.0, 0.0, 0)
+        routed_frac = 1.0
         if predict:
             self.flush_labels(t)  # reveal labels observable by now, no later ones
             preds, latency, comps, overflow = self.predict(points)
+            routed_frac = self.last_routed_frac
         info = self.ingest(points, labels, t)
         ev = StreamEvent(
             t=float(t), node=info["node"], inserted=info["inserted"],
@@ -377,6 +470,7 @@ class StreamingMonitor:
             evicted=info["evicted"], preds=np.asarray(preds).tolist(),
             labels=np.asarray(labels).tolist(), latency_s=latency,
             comparisons=comps, overflow=overflow, n_index=self.n_index(),
+            routed_frac=routed_frac,
         )
         self.events.append(ev)
         return ev

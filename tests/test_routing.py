@@ -1,0 +1,401 @@
+"""Replication-aware routing tests (DESIGN.md §10).
+
+The load-bearing contract: routing, replication, and the two-stage tree
+merge never change a single result bit — distances, indices, comparisons,
+AND compaction overflow — versus the broadcast-everything + flat-merge
+baseline, on every execution path (batch grids, both compute backends,
+streaming deltas, shard_map meshes including non-power-of-two and
+replicated ones). Degradation (`max_cells`) is the only sanctioned
+approximation and is tested separately.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed as D
+from repro.core import routing, slsh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(**kw):
+    base = dict(
+        m_out=12, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5,
+        val_lo=0.0, val_hi=1.0, c_max=32, c_in=8, h_max=4, p_max=64,
+        build_chunk=128, query_chunk=8,
+    )
+    base.update(kw)
+    return slsh.SLSHConfig(**base)
+
+
+def _clustered(n=512, d=12, seed=1):
+    kc, kp = jax.random.split(jax.random.PRNGKey(seed))
+    centers = jax.random.uniform(kc, (n // 16, d))
+    pts = centers[:, None, :] + 0.01 * jax.random.normal(kp, (n // 16, 16, d))
+    return pts.reshape(-1, d)
+
+
+GRIDS = [D.Grid(nu=1, p=1), D.Grid(nu=2, p=2), D.Grid(nu=4, p=2)]
+
+
+# ------------------------------------------------------- batch equivalence
+
+
+@pytest.mark.parametrize("grid", GRIDS, ids=lambda g: f"{g.nu}x{g.p}")
+@pytest.mark.parametrize("replication", [1, 2])
+def test_routed_bitexact_with_simulate(grid, replication):
+    """Acceptance: routed query == simulate_query on 1/4/8-cell grids,
+    for r=1 and r=2, on distances, indices, comparisons, and overflow."""
+    cfg = _cfg()
+    data = _clustered()
+    q = data[:16] + 0.001 * jax.random.normal(jax.random.PRNGKey(9), (16, 12))
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    plan = routing.make_plan(idx, cfg, grid, replication=replication)
+    fd, fi, c, o = D.simulate_query(idx, data, q, cfg, grid)
+    rd, ri, rc, ro, stats = D.simulate_query_routed(
+        idx, data, q, cfg, grid, plan, return_stats=True
+    )
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(fd))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(fi))
+    np.testing.assert_array_equal(np.asarray(rc), np.asarray(c))
+    np.testing.assert_array_equal(np.asarray(ro), np.asarray(o))
+    # the router masked real work out iff the map had a false negative
+    assert not ((~stats.routed.transpose(1, 2, 0)) & (np.asarray(c) > 0)).any()
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_routed_bitexact_both_backends(backend):
+    """Router keys come from the configured backend, so exactness must hold
+    on the pallas path too (small sizes — interpret mode on CPU)."""
+    cfg = _cfg(backend=backend, m_out=8, L_out=4, L_in=2, c_max=16, c_in=8)
+    grid = D.Grid(nu=2, p=2)
+    data = _clustered(n=256, d=8, seed=3)
+    q = data[:8]
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    plan = routing.make_plan(idx, cfg, grid, replication=2)
+    fd, fi, c, o = D.simulate_query(idx, data, q, cfg, grid)
+    rd, ri, rc, ro = D.simulate_query_routed(idx, data, q, cfg, grid, plan)
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(fd))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(fi))
+    np.testing.assert_array_equal(np.asarray(rc), np.asarray(c))
+    np.testing.assert_array_equal(np.asarray(ro), np.asarray(o))
+
+
+def test_routed_bitexact_with_multiprobe():
+    """Multiprobe adds bit-flip probe keys; the router must account for
+    every one of them (a missed flip key would be a false negative)."""
+    cfg, grid = _cfg(multiprobe=2), D.Grid(nu=4, p=2)
+    data = _clustered()
+    q = data[:12] + 0.01 * jax.random.normal(jax.random.PRNGKey(5), (12, 12))
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    plan = routing.make_plan(idx, cfg, grid, replication=2)
+    ref = D.simulate_query(idx, data, q, cfg, grid)
+    out = D.simulate_query_routed(idx, data, q, cfg, grid, plan)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref[0]))
+    for a, b in zip(out[1:], ref[1:]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_routed_respects_drop_mask():
+    cfg, grid = _cfg(), D.Grid(nu=4, p=2)
+    data = _clustered()
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    plan = routing.make_plan(idx, cfg, grid)
+    drop = jnp.asarray([False, False, True, False])
+    q = data[:8]
+    fd, fi, *_ = D.simulate_query(idx, data, q, cfg, grid, drop_mask=drop)
+    rd, ri, *_ = D.simulate_query_routed(
+        idx, data, q, cfg, grid, plan, drop_mask=drop
+    )
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(fi))
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(fd))
+
+
+# ------------------------------------------------- streaming (DeltaView)
+
+
+def test_monitor_routing_bitexact_incl_delta_and_compaction():
+    """Acceptance: the DeltaView path — a routed monitor equals an unrouted
+    one bit-for-bit, pre- and post-compaction (delta segments inherit the
+    owning cell's placement, so streamed-in points stay reachable)."""
+    from repro import stream
+
+    cfg = _cfg(m_out=16, L_out=8)
+    grid = D.Grid(nu=2, p=2)
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1, (128, 12)).astype(np.float32)
+    labs = np.zeros(128, np.int8)
+    extra = rng.uniform(0, 1, (8, 12)).astype(np.float32)
+    q = jnp.asarray(pts[:12])
+    mons = {}
+    for route in (False, True):
+        m = stream.StreamingMonitor(
+            jax.random.PRNGKey(0), pts, labs, cfg, grid,
+            node_capacity=128, delta_cap=32, route=route,
+        )
+        m.ingest(extra, np.zeros(8, np.int8), 1.0)
+        mons[route] = m
+    for phase in ("pre-compact", "post-compact"):
+        if phase == "post-compact":
+            for m in mons.values():
+                m._maintain_node(0, 2.0)
+                m._maintain_node(1, 2.0)
+        rf = mons[False]._query(mons[False].state, q)
+        rt = mons[True]._query(mons[True].state, q)
+        for a, b in zip(rf[:4], rt[:4]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=phase)
+        # routing found real sparsity (the test is not vacuous) but no
+        # false negatives (unrouted cells truly scanned nothing)
+        routed = np.asarray(rt[4])
+        comps = np.asarray(rf[2])
+        assert not ((~routed) & (comps > 0)).any()
+
+
+def test_monitor_query_after_delta_only_insert_finds_new_point():
+    """A point that exists ONLY in a delta segment must still be routed to
+    (the inherited-placement half of the §10.2 contract)."""
+    from repro import stream
+
+    cfg = _cfg(m_out=16, L_out=8, use_inner=False)
+    grid = D.Grid(nu=1, p=2)
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 1, (64, 12)).astype(np.float32)
+    mon = stream.StreamingMonitor(
+        jax.random.PRNGKey(0), pts, np.zeros(64, np.int8), cfg, grid,
+        node_capacity=96, delta_cap=16, route=True,
+    )
+    novel = rng.uniform(2.0, 3.0, (4, 12)).astype(np.float32)  # far cluster
+    mon.ingest(novel, np.zeros(4, np.int8), t=1.0)
+    kd, ki, *_ = mon._query(mon.state, jnp.asarray(novel))
+    assert (np.asarray(ki)[:, 0] == np.arange(64, 68)).all()
+    assert (np.asarray(kd)[:, 0] == 0.0).all()
+
+
+# ------------------------------------------------------------ degradation
+
+
+def test_apply_cell_budget_caps_and_prioritizes():
+    routed = jnp.ones((3, 2, 2), bool)
+    scores = jnp.asarray(
+        [[[3, 1], [2, 0]], [[1, 1], [1, 1]], [[0, 4], [4, 0]]], jnp.int32
+    )
+    capped = routing.apply_cell_budget(routed, scores, 2)
+    assert capped.sum() == 6  # two cells per query
+    # q0 keeps the two highest scores (3 and 2)
+    assert bool(capped[0, 0, 0]) and bool(capped[0, 1, 0])
+    # q1: all tie at 1 -> deterministic lowest cell ids win
+    assert bool(capped[1, 0, 0]) and bool(capped[1, 0, 1])
+    # q2 keeps the two 4s
+    assert bool(capped[2, 0, 1]) and bool(capped[2, 1, 0])
+    # a cap >= cells is the identity
+    np.testing.assert_array_equal(
+        np.asarray(routing.apply_cell_budget(routed, scores, 4)),
+        np.asarray(routed),
+    )
+
+
+def test_degrade_max_cells_levels():
+    levels = ((0.1, None), (0.05, 4), (0.0, 1))
+    assert routing.degrade_max_cells(1.0, levels) is None
+    assert routing.degrade_max_cells(0.07, levels) == 4
+    assert routing.degrade_max_cells(0.01, levels) == 1
+    assert routing.degrade_max_cells(-5.0, levels) == 1  # past-deadline floor
+
+
+def test_max_cells_degrades_gracefully():
+    """Capped probing loses recall monotonically-ish, never crashes, and
+    keeps the self-cell for indexed queries (highest landing score)."""
+    cfg, grid = _cfg(), D.Grid(nu=4, p=2)
+    data = _clustered()
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    plan = routing.make_plan(idx, cfg, grid)
+    q = data[:16]
+    full = D.simulate_query(idx, data, q, cfg, grid)
+    capped = D.simulate_query_routed(idx, data, q, cfg, grid, plan, max_cells=2)
+    # self-hit survives: the owning cell has the max landing count
+    assert (np.asarray(capped[1])[:, 0] == np.arange(16)).all()
+    # capping sheds cells, so per-cell work can only shrink
+    assert (np.asarray(capped[2]) <= np.asarray(full[2])).all()
+    # results stay well-formed: ascending distances, inf aligned with -1
+    cd, ci = np.asarray(capped[0]), np.asarray(capped[1])
+    assert (np.diff(cd, axis=-1) >= 0).all()
+    assert ((ci >= 0) == np.isfinite(cd)).all()
+
+
+# ------------------------------------------------------- merge topologies
+
+
+def test_tournament_rounds_cover_any_size():
+    for size in (1, 2, 3, 5, 8, 13, 40):
+        rounds = routing.tournament_rounds(size)
+        seen_src = set()
+        for rnd in rounds:
+            for dst, src in rnd:
+                assert dst < src < size
+                assert src not in seen_src
+                seen_src.add(src)
+        assert seen_src == set(range(1, size))  # every rank folds in once
+        assert len(rounds) == (max(size - 1, 1)).bit_length() if size > 1 else len(rounds) == 0
+
+
+def _rand_partials(rng, s, q, k):
+    """Partials with engineered distance ties and -1 pads, rows ascending."""
+    kd = rng.choice([0.25, 0.5, 1.0, 2.0], size=(s, q, k)).astype(np.float32)
+    ki = rng.integers(0, 50, size=(s, q, k)).astype(np.int32)
+    pad = rng.random((s, q, k)) < 0.2
+    kd[pad] = np.inf
+    ki[pad] = -1
+    order = np.argsort(kd, axis=-1, kind="stable")  # ascending, pads last
+    return (
+        jnp.asarray(np.take_along_axis(kd, order, axis=-1)),
+        jnp.asarray(np.take_along_axis(ki, order, axis=-1)),
+    )
+
+
+@pytest.mark.parametrize("s", [1, 2, 3, 5, 7, 12])
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_tree_merge_matches_flat_with_ties(s, k):
+    rng = np.random.default_rng(100 * s + k)
+    kd, ki = _rand_partials(rng, s, q=6, k=k)
+    td, ti = routing.merge_partials_tree(kd, ki, k)
+    fd, fi = routing.merge_partials_flat(kd, ki, k)
+    np.testing.assert_array_equal(np.asarray(td), np.asarray(fd))
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(fi))
+
+
+def test_merge_payload_model():
+    q, k = 8, 5
+    all_routed = np.ones((6, q), bool)
+    pay = routing.merge_payload(all_routed, k)
+    # the tournament moves S-1 partials; flat master collects S
+    assert pay["tree_routed_bytes"] < pay["flat_master_bytes"]
+    assert pay["flat_allgather_bytes"] == 6 * pay["flat_master_bytes"]
+    sparse = all_routed.copy()
+    sparse[3:] = False
+    assert (
+        routing.merge_payload(sparse, k)["tree_routed_bytes"]
+        < pay["tree_routed_bytes"]
+    )
+
+
+def test_device_load_accounts_every_routed_row():
+    grid = D.Grid(nu=2, p=2)
+    cfg = _cfg()
+    data = _clustered(n=256)
+    idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg, grid)
+    plan = routing.make_plan(idx, cfg, grid, replication=2)
+    routed = np.ones((10, 2, 2), bool)
+    routed[5:, 0, 0] = False
+    load = routing.device_load(plan, routed)
+    assert load.sum() == routed.sum()
+    assert load.shape == (plan.n_devices,)
+
+
+# ------------------------------------------------------------ shard_map
+
+
+@pytest.mark.slow
+def test_dslsh_routed_matches_simulation_multidevice():
+    """Routed dslsh_query == simulate_query on an 8-cell mesh (r=1), a
+    non-power-of-two 6-cell mesh, and a replicated (r=2) 2x2 mesh."""
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import distributed as D, routing, slsh
+        from repro.launch.mesh import make_local_mesh, make_replicated_mesh
+        base = dict(m_out=10, m_in=6, L_in=4, alpha=0.02, k=5,
+                    val_lo=0., val_hi=1., c_max=32, c_in=8, h_max=4,
+                    p_max=64, build_chunk=128, query_chunk=8)
+        key = jax.random.PRNGKey(0)
+        data = jax.random.uniform(jax.random.PRNGKey(1), (528, 12))
+
+        def check(mesh, grid, cfg, q, replication):
+            idx = D.dslsh_build(mesh, key, data, cfg, grid)
+            plan = routing.make_plan(idx, cfg, grid, replication=replication)
+            out = D.dslsh_query(mesh, idx, data, q, cfg, grid,
+                                reducer="tree", plan=plan)
+            idxs = D.simulate_build(key, data, cfg, grid)
+            ref = D.simulate_query(idxs, data, q, cfg, grid)
+            assert np.allclose(np.asarray(out[0]), np.asarray(ref[0]))
+            for a, b in zip(out[1:], ref[1:]):
+                assert (np.asarray(a) == np.asarray(b)).all()
+
+        # 8 cells, r=1
+        check(make_local_mesh(4, 2), D.Grid(nu=4, p=2),
+              slsh.SLSHConfig(L_out=8, **base), data[:10], 1)
+        # non-power-of-two: 6 cells
+        check(make_local_mesh(2, 3), D.Grid(nu=2, p=3),
+              slsh.SLSHConfig(L_out=6, **base), data[:9], 1)
+        # replicated mesh: rep=2 over a 2x2 grid
+        check(make_replicated_mesh(2, 2, 2), D.Grid(nu=2, p=2),
+              slsh.SLSHConfig(L_out=8, **base), data[:8], 2)
+        print("OK")
+        """
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+# --------------------------------------------------- hypothesis property
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs it, image may not
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        s=st.integers(1, 9),
+        k=st.integers(1, 6),
+        q=st.integers(1, 4),
+        data=st.data(),
+    )
+    def test_property_tree_merge_equals_allgather_merge(s, k, q, data):
+        """Satellite: merge_axis_tree vs merge_axis_allgather — the shared
+        schedule (`tournament_rounds`) merged host-side must equal the flat
+        merge for arbitrary k, heavy distance ties, -1 pads, and
+        non-power-of-two axis sizes. (The ppermute form runs the identical
+        schedule; the slow multidevice test pins it on a real mesh.)"""
+        dists = data.draw(
+            st.lists(
+                st.lists(
+                    st.sampled_from([0.0, 0.5, 1.0, np.inf]),
+                    min_size=s * k, max_size=s * k,
+                ),
+                min_size=q, max_size=q,
+            )
+        )
+        kd = np.sort(
+            np.asarray(dists, np.float32).reshape(q, s, k), axis=-1
+        ).transpose(1, 0, 2)
+        ki = data.draw(
+            st.lists(
+                st.lists(st.integers(0, 20), min_size=s * k, max_size=s * k),
+                min_size=q, max_size=q,
+            )
+        )
+        ki = np.asarray(ki, np.int32).reshape(q, s, k).transpose(1, 0, 2)
+        ki = np.where(np.isinf(kd), -1, ki)
+        td, ti = routing.merge_partials_tree(jnp.asarray(kd), jnp.asarray(ki), k)
+        fd, fi = routing.merge_partials_flat(jnp.asarray(kd), jnp.asarray(ki), k)
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(fd))
+        np.testing.assert_array_equal(np.asarray(ti), np.asarray(fi))

@@ -312,7 +312,7 @@ def test_monitor_merge_never_duplicates_neighbours():
         node_capacity=96, delta_cap=16,
     )
     mon.ingest(rng.uniform(0, 1, (8, 8)).astype(np.float32), np.zeros(8, np.int8), 1.0)
-    kd, ki, _, _ = mon._query(mon.state, jnp.asarray(pts[:8]))
+    kd, ki, _, _, _ = mon._query(mon.state, jnp.asarray(pts[:8]))
     ki_np, kd_np = np.asarray(ki), np.asarray(kd)
     assert (ki_np[:, 0] == np.arange(8)).all() and (kd_np[:, 0] == 0.0).all()
     for row_i, row_d in zip(ki_np, kd_np):
@@ -339,7 +339,7 @@ def test_monitor_matches_unsharded_stream_query():
     mon.ingest(extra[:8], np.zeros(8, np.int8), t=1.0)
     mon.ingest(extra[8:], np.zeros(8, np.int8), t=2.0)
     q = jnp.asarray(init_pts[:10])
-    kd, ki, _, _ = mon._query(mon.state, q)
+    kd, ki, _, _, _ = mon._query(mon.state, q)
     # Reducer merge is unique-by-index: a neighbour found by several cells
     # must occupy one k slot only (weighted votes never double-count)
     for row in np.asarray(ki):
