@@ -45,42 +45,47 @@ def slsh_cfg(**kw):
         build_chunk=4096, query_chunk=50,
     )
     base.update(kw)
-    return slsh.SLSHConfig(**base)
+    return slsh.SLSHConfig.compose(**base)
 
 
 def evaluate(points, labels, qx, qy, cfg, grid, key=None):
-    """Build + query DSLSH and PKNN; returns the paper's metrics."""
-    from repro.core import distributed as D
+    """Build + query DSLSH (via the repro.dslsh handle) and PKNN; returns
+    the paper's metrics."""
+    from repro import api
     from repro.core import predict
 
     key = key if key is not None else jax.random.PRNGKey(7)
-    pts, labs, _ = D.pad_to_multiple(np.asarray(points), np.asarray(labels), grid.cells)
+    deploy = api.grid(nu=grid.nu, p=grid.p)
+    pts, labs, _ = api.pad_to_multiple(
+        np.asarray(points), np.asarray(labels), deploy.cells
+    )
     pts_j, labs_j = jnp.asarray(pts), jnp.asarray(labs)
     qx_j, qy_j = jnp.asarray(qx), jnp.asarray(qy)
 
     t0 = time.perf_counter()
-    idx = D.simulate_build(key, pts_j, cfg, grid)
-    jax.block_until_ready(idx)
+    index = api.build(key, pts_j, cfg, deploy)
+    jax.block_until_ready(index.pipeline_index)
     build_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    kd, ki, comps, ovf = D.simulate_query(idx, pts_j, qx_j, cfg, grid)
-    jax.block_until_ready((kd, ki, comps))
+    res = index.query(qx_j)
+    jax.block_until_ready((res.knn_dist, res.knn_idx, res.comparisons))
     query_s = time.perf_counter() - t0
+    kd, ki = res.knn_dist, res.knn_idx
 
     pred = predict.predict_batch(labs_j, ki, kd)
     mcc_slsh = float(predict.mcc(pred, qy_j))
 
-    pkd, pki, pcomps = D.pknn_query(pts_j, qx_j, cfg.k, grid)
+    pkd, pki, pcomps = api.pknn_query(pts_j, qx_j, cfg.k, grid)
     pred_p = predict.predict_batch(labs_j, pki, pkd)
     mcc_pknn = float(predict.mcc(pred_p, qy_j))
 
-    max_comps = np.asarray(comps).max(axis=(0, 1)).astype(np.float64)  # per query
+    max_comps = np.asarray(res.max_comparisons_per_cell).astype(np.float64)  # per query
     med = float(np.median(max_comps))
     lo, hi = np.percentile(max_comps, [2.5, 97.5])
     pknn_per_proc = float(np.asarray(pcomps)[0, 0, 0])
     return dict(
-        overflow_cells=int((np.asarray(ovf) > 0).sum()),
+        overflow_cells=res.overflow_cells,
         mcc_slsh=mcc_slsh,
         mcc_pknn=mcc_pknn,
         mcc_loss=mcc_pknn - mcc_slsh,

@@ -7,7 +7,7 @@ frontier, on the synthetic AHE-301-30c-scale dataset.
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import distributed as D
+from repro import api
 
 M_GRID_FULL = (100, 125, 150, 175, 200)
 L_GRID_FULL = (72, 96, 120)
@@ -18,7 +18,7 @@ L_GRID = (8, 16, 24)
 def run():
     n_rec, n_beats, n_test = (40, 800_000, 2000) if common.FULL else (24, 400_000, 500)
     train, qx, qy, pct = common.ahe_dataset("AHE-301-30c", n_rec, n_beats, n_test)
-    grid = D.Grid(nu=2, p=8)  # paper: p=8, nu=2
+    grid = api.Grid(nu=2, p=8)  # paper: p=8, nu=2
     ms = M_GRID_FULL if common.FULL else M_GRID
     ls = L_GRID_FULL if common.FULL else L_GRID
     for m in ms:

@@ -6,7 +6,7 @@ At the onset configuration (best outer point within 10% MCC loss), sweep
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import distributed as D
+from repro import api
 
 ONSET = dict(m_out=32, L_out=16)  # scaled analogue of paper's (125, 120)
 M_IN = (8, 12, 16, 24)
@@ -16,7 +16,7 @@ L_IN = (4, 8)
 def run():
     n_rec, n_beats, n_test = (40, 800_000, 2000) if common.FULL else (24, 400_000, 500)
     train, qx, qy, _ = common.ahe_dataset("AHE-301-30c", n_rec, n_beats, n_test)
-    grid = D.Grid(nu=2, p=8)
+    grid = api.Grid(nu=2, p=8)
     onset_cfg = common.slsh_cfg(**ONSET, use_inner=False)
     r0 = common.evaluate(train["points"], train["labels"], qx, qy, onset_cfg, grid)
     yield (

@@ -14,7 +14,6 @@ so later PRs have a perf trajectory.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
@@ -30,6 +29,10 @@ PIPELINE_JSON = os.environ.get(
 )
 
 QUERY_ROUNDS = 21
+# pairwise rounds for the handle-overhead gate: the per-round ratio is
+# noisy (+-10% single-call jitter on shared runners), the median over many
+# rounds is tight (~+-1.5% at 120 rounds) around the true ~0.4% overhead
+OVERHEAD_ROUNDS = 120
 
 
 def _sample(fn) -> float:
@@ -67,7 +70,7 @@ def run():
     backends = ("reference", "pallas")
     qfns, idxs, res = {}, {}, None
     for backend in backends:
-        cfg_b = dataclasses.replace(cfg, backend=backend)
+        cfg_b = cfg.replace(backend=backend)
         build = jax.jit(lambda d_: slsh.build_index(jax.random.PRNGKey(2), d_, cfg_b))
         idx, us_build = common.timer(lambda: build(data))
         idxs[backend] = idx
@@ -91,6 +94,49 @@ def run():
         report["backends"][backend]["query_us"] = us_query
         report["backends"][backend]["us_per_query"] = us_query / nq
         yield (f"pipeline/query_{backend}_{nq}q", us_query, f"backend={backend}")
+
+    # --- Deployment-API overhead gate (DESIGN.md §11): the typed handle
+    # wraps the same jitted pipeline, so its end-to-end query latency must
+    # track the legacy slsh.query_batch path. Two measurements:
+    #
+    # * api/legacy latency (recorded): min-of-samples of each path. On
+    #   shared runners two *different* executables of identical work can
+    #   differ by several % from compile nondeterminism alone, so this
+    #   ratio is a trajectory record, not a gate.
+    # * api_handle_overhead (CI gates <= 1.03): handle.query() end-to-end
+    #   vs its OWN jitted core — numerator and denominator run the same
+    #   compiled executable, so drift and compile variance cancel and the
+    #   median pairwise ratio isolates exactly what the handle layer adds
+    #   (argument conversion, dispatch, no math — DESIGN.md §11.1).
+    from repro import api
+
+    handle = api.wrap_single(idxs["reference"], data, cfg)
+    core_fn = handle._single_fn()  # the jitted program handle.query calls
+    jax.block_until_ready(handle.query(q))  # warmup (compile)
+    api_samples, legacy_samples = [], []
+    for _ in range(QUERY_ROUNDS):
+        legacy_samples.append(
+            _sample(lambda: qfns["reference"](idxs["reference"], q))
+        )
+        api_samples.append(_sample(lambda: handle.query(q)))
+    api_us = float(np.min(api_samples)) * 1e6
+    legacy_us = float(np.min(legacy_samples)) * 1e6
+    overhead = []
+    for rnd in range(OVERHEAD_ROUNDS):
+        if rnd % 2 == 0:
+            a, b = _sample(lambda: handle.query(q)), _sample(lambda: core_fn(q))
+        else:
+            b, a = _sample(lambda: core_fn(q)), _sample(lambda: handle.query(q))
+        overhead.append(a / b)
+    report["api_query_us"] = api_us
+    report["legacy_query_us"] = legacy_us
+    report["api_over_legacy_query"] = api_us / legacy_us
+    report["api_handle_overhead"] = float(np.median(overhead))
+    yield (
+        "pipeline/query_api_handle", api_us,
+        f"api_over_legacy={api_us / legacy_us:.3f}"
+        f";handle_overhead={report['api_handle_overhead']:.3f}",
+    )
 
     # --- the paper's headline metric + compaction health (backend-agnostic:
     # both backends return identical results, so either serves)

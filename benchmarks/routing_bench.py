@@ -1,7 +1,7 @@
 """Replication-aware routing benchmark (DESIGN.md §10).
 
 For grid sizes 1/4/8/40-simulated cells: route a clustered query batch
-through ``simulate_query_routed`` and record
+through a routed ``repro.dslsh`` grid deployment and record
 
 * the queries-routed-per-cell histogram (Forwarder load shape, and how the
   replica split flattens it on the logical device pool),
@@ -9,8 +9,8 @@ through ``simulate_query_routed`` and record
   master collect and the flat all-gather the pre-§10 code used,
 * end-to-end query latency, routed vs. broadcast-everything,
 
-and asserts routed results stay bit-identical to ``simulate_query`` while
-doing it. Emitted to BENCH_routing.json (override:
+and asserts routed results stay bit-identical to the broadcast deployment
+while doing it. Emitted to BENCH_routing.json (override:
 REPRO_BENCH_ROUTING_JSON); CSV rows go through benchmarks/run.py.
 """
 from __future__ import annotations
@@ -46,8 +46,7 @@ def _clustered(key, n, d, spread=0.01):
 
 
 def run():
-    from repro.core import distributed as D
-    from repro.core import routing
+    from repro import api
 
     n, d, nq = (16384, 32, 256) if common.FULL else (2560, 16, 64)
     data = _clustered(jax.random.PRNGKey(0), n, d)
@@ -63,32 +62,26 @@ def run():
         "grids": [],
     }
     for nu, p in GRIDS:
-        grid = D.Grid(nu=nu, p=p)
-        idx = D.simulate_build(jax.random.PRNGKey(2), jnp.asarray(data), cfg, grid)
-        plan = routing.make_plan(idx, cfg, grid, replication=2)
+        grid = api.Grid(nu=nu, p=p)
+        index = api.build(
+            jax.random.PRNGKey(2), jnp.asarray(data), cfg, api.grid(nu=nu, p=p)
+        )
+        routed_index = index.with_routing(replication=2)
+        plan = routed_index.plan
 
-        f_flat = jax.jit(
-            lambda qs, idx=idx, grid=grid: D.simulate_query(
-                idx, jnp.asarray(data), qs, cfg, grid
-            )
+        r_flat, us_flat = common.timer(lambda: index.query(queries), repeats=3)
+        r_routed, us_routed = common.timer(
+            lambda: routed_index.query(queries), repeats=3
         )
-        f_routed = jax.jit(
-            lambda qs, idx=idx, grid=grid, plan=plan: D.simulate_query_routed(
-                idx, jnp.asarray(data), qs, cfg, grid, plan
-            )
-        )
-        (kd0, ki0, c0, o0), us_flat = common.timer(lambda: f_flat(queries), repeats=3)
-        (kd1, ki1, c1, o1), us_routed = common.timer(
-            lambda: f_routed(queries), repeats=3
-        )
-        assert np.allclose(np.asarray(kd0), np.asarray(kd1))
-        assert (np.asarray(ki0) == np.asarray(ki1)).all()
-        assert (np.asarray(c0) == np.asarray(c1)).all()
-        assert (np.asarray(o0) == np.asarray(o1)).all()
+        assert np.allclose(np.asarray(r_flat.knn_dist), np.asarray(r_routed.knn_dist))
+        assert (np.asarray(r_flat.knn_idx) == np.asarray(r_routed.knn_idx)).all()
+        assert (np.asarray(r_flat.comparisons) == np.asarray(r_routed.comparisons)).all()
+        assert (
+            np.asarray(r_flat.compaction_overflow)
+            == np.asarray(r_routed.compaction_overflow)
+        ).all()
 
-        *_, stats = D.simulate_query_routed(
-            idx, jnp.asarray(data), queries, cfg, grid, plan, return_stats=True
-        )
+        _, stats = routed_index.query_with_stats(queries)
         per_cell = stats.routed.sum(axis=0).reshape(-1)  # (S,) routed queries
         pay = stats.payload
         entry = {

@@ -7,7 +7,6 @@ benchmarks/run.py like every other module.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 
@@ -49,7 +48,7 @@ def run():
         "backends": {},
     }
     for backend in ("reference", "pallas"):
-        cfg = dataclasses.replace(cfg0, backend=backend)
+        cfg = cfg0.replace(backend=backend)
         sidx = stream.stream_init(
             jax.random.PRNGKey(3), data, cfg, capacity=n + delta_cap,
             delta_cap=delta_cap,

@@ -5,10 +5,8 @@ to the single-node run, and the PKNN/DSLSH ratio.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
-from repro.core import distributed as D
+from repro import api
 
 DATASET = "AHE-301-30c"
 SIZES_FULL = (40, 800_000, 2000)
@@ -20,7 +18,7 @@ def run(dataset=DATASET, tag="table2"):
     train, qx, qy, _ = common.ahe_dataset(dataset, n_rec, n_beats, n_test)
     base_median = None
     for nu in (1, 2, 3, 4, 5):
-        grid = D.Grid(nu=nu, p=8)
+        grid = api.Grid(nu=nu, p=8)
         cfg = common.slsh_cfg()
         r = common.evaluate(train["points"], train["labels"], qx, qy, cfg, grid)
         if base_median is None:

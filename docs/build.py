@@ -27,6 +27,7 @@ import sys
 
 #: The public API surface. Order is the index order.
 MODULES: tuple[str, ...] = (
+    "repro.api",
     "repro.core.slsh",
     "repro.core.pipeline",
     "repro.core.routing",
@@ -38,6 +39,7 @@ MODULES: tuple[str, ...] = (
     "repro.core.predict",
     "repro.stream.index",
     "repro.stream.delta",
+    "repro.stream.shard",
     "repro.stream.monitor",
     "repro.serve.engine",
     "repro.launch.mesh",

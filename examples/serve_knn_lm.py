@@ -12,8 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed as D
-from repro.core import slsh
+from repro import dslsh
 from repro.data.lm_data import TokenStream
 from repro.models import api
 from repro.models.api import ModelConfig
@@ -45,7 +44,6 @@ ds_tokens = jnp.asarray(stream.batch(32, 64))
 
 def hidden_states(params, tokens):
     from repro.models import dense as dmod
-    from repro.models import common as C
 
     x, _ = dmod._embed_inputs(cfg, params, {"tokens": tokens})
     x = dmod._run_layers(cfg, params, x, jnp.arange(tokens.shape[1]), "none")
@@ -56,15 +54,16 @@ h = hidden_states(params, ds_tokens)  # (B, S, D)
 keys_data = np.asarray(h[:, :-1].reshape(-1, cfg.d_model), np.float32)
 next_tokens = np.asarray(ds_tokens[:, 1:].reshape(-1), np.int32)
 
-grid = D.Grid(nu=2, p=4)
+deploy = dslsh.grid(nu=2, p=4)
 vlo, vhi = float(keys_data.min()), float(keys_data.max())
-slsh_cfg = slsh.SLSHConfig(
-    m_out=24, L_out=8, m_in=12, L_in=4, alpha=0.02, k=8,
-    val_lo=vlo, val_hi=vhi, c_max=64, c_in=16, h_max=4, p_max=128,
+slsh_cfg = dslsh.make_config(
+    dslsh.FamilyConfig(m_out=24, L_out=8, m_in=12, L_in=4, alpha=0.02,
+                       val_lo=vlo, val_hi=vhi),
+    dslsh.BudgetConfig(k=8, c_max=64, c_in=16, h_max=4, p_max=128),
 )
-pts, labs, _ = D.pad_to_multiple(keys_data, next_tokens, grid.cells)
+pts, labs, _ = dslsh.pad_to_multiple(keys_data, next_tokens, deploy.cells)
 pts_j = jnp.asarray(pts)
-index = D.simulate_build(jax.random.PRNGKey(9), pts_j, slsh_cfg, grid)
+index = dslsh.build(jax.random.PRNGKey(9), pts_j, slsh_cfg, deploy)
 print(f"SLSH datastore: {keys_data.shape[0]} hidden states, grid nu=2 p=4")
 
 # -- 3. batched serving with the kNN hook ----------------------------------
@@ -76,7 +75,7 @@ def run_serve(lmbda: float):
     # hidden_fn closure: the hook's carrier is the running token tensor here
     # (ServeEngine instead passes its decode cache as the carrier).
     hook = engine.make_knn_lm_hook(
-        index, pts_j, jnp.asarray(labs), slsh_cfg, grid,
+        index, jnp.asarray(labs),
         hidden_fn=lambda cur: hidden_states(params, cur)[:, -1],
         vocab=cfg.vocab, lmbda=lmbda,
     )

@@ -13,9 +13,7 @@ Run:  PYTHONPATH=src python examples/stream_quickstart.py
 import jax
 import numpy as np
 
-from repro import stream
-from repro.core import distributed as D
-from repro.core import slsh
+from repro import dslsh, stream
 from repro.data import abp, windows
 
 # --- dataset: 8 synthetic ABP records; 7 historical + 1 live (paper §4)
@@ -31,11 +29,12 @@ print(f"history={hist['points'].shape[0]} windows "
       f"live={live_pts.shape[0]} windows ({int(live_lab.sum())} AHE)")
 
 # --- warm the sharded streaming index on the historical windows
-grid = D.Grid(nu=2, p=2)
-cfg = slsh.SLSHConfig(
-    m_out=24, L_out=8, m_in=12, L_in=4, alpha=0.01, k=10,
-    val_lo=20.0, val_hi=180.0, c_max=128, c_in=32, h_max=8, p_max=256,
-    query_chunk=16,
+grid = dslsh.Grid(nu=2, p=2)
+cfg = dslsh.make_config(
+    dslsh.FamilyConfig(m_out=24, L_out=8, m_in=12, L_in=4, alpha=0.01,
+                       val_lo=20.0, val_hi=180.0),
+    dslsh.BudgetConfig(k=10, c_max=128, c_in=32, h_max=8, p_max=256),
+    dslsh.RuntimeConfig(query_chunk=16),
 )
 n_warm = hist["points"].shape[0] // grid.nu * grid.nu
 monitor = stream.StreamingMonitor(

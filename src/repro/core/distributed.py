@@ -8,20 +8,28 @@ Paper -> mesh mapping (DESIGN.md §2):
     identical hash functions on every node (required for correctness).
   * Forwarder -> queries replicated to all cells — or, with a
     ``routing.RoutingPlan``, routed only to the cells their probe keys can
-    land in (``simulate_query_routed`` / ``dslsh_query(plan=...)``,
+    land in (``grid_query(plan=...)`` / ``mesh_query(plan=...)``,
     DESIGN.md §10).
   * Reducer / Master -> top-K merges: all-gather (small K) or a ppermute
     tournament tree (any axis size); both implemented, selectable, and
     bit-identical including distance-tie resolution.
 
-Two execution paths share the same per-cell functions:
-  * ``dslsh_*``     — shard_map over a real device mesh (dry-run / production)
-  * ``simulate_*``  — vmap over the cell grid on one device (CPU benchmarks;
-    the paper's #comparisons metric is device-count independent)
+Two execution paths share the same per-cell functions, and both resolve to
+the one typed :class:`DistributedQueryResult` (DESIGN.md §11):
+  * ``dslsh_build`` + ``mesh_query`` — shard_map over a real device mesh
+    (dry-run / production)
+  * ``simulate_build`` + ``grid_query`` — vmap over the cell grid on one
+    device (CPU benchmarks; the paper's #comparisons metric is
+    device-count independent)
+
+The positional-tuple entry points (``simulate_query``, ``dslsh_query``,
+``simulate_query_routed``) are deprecated shims over those cores; hold a
+``repro.dslsh`` Index instead.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -108,6 +116,45 @@ class CellResult(NamedTuple):
     compaction_overflow: jax.Array  # (Q,)
 
 
+class DistributedQueryResult(NamedTuple):
+    """The one typed result every DSLSH query path returns (DESIGN.md §11).
+
+    Whatever the deployment — single shard, simulated grid, real device
+    mesh, or streaming — ``repro.dslsh`` queries (and the typed
+    :func:`grid_query`/:func:`mesh_query` cores below) resolve to this
+    NamedTuple: merged top-K neighbours plus the per-(node, core, query)
+    counters that certify exactness (DESIGN.md §3) and routing behaviour
+    (§10). Single-shard results use ``nu = p = 1``.
+    """
+
+    knn_dist: jax.Array  # (Q, K) merged distances, inf pad
+    knn_idx: jax.Array  # (Q, K) merged GLOBAL indices, -1 pad
+    comparisons: jax.Array  # (nu, p, Q) unique candidates scanned per cell
+    compaction_overflow: jax.Array  # (nu, p, Q) survivors beyond c_comp
+    # which (cell, query) pairs the Forwarder visited — all True for
+    # broadcast deployments, the §10 route mask otherwise
+    routed: jax.Array  # (nu, p, Q) bool
+
+    @property
+    def routed_frac(self) -> float:
+        """Fraction of (cell, query) pairs visited (1.0 = broadcast)."""
+        return float(jnp.mean(self.routed.astype(jnp.float32)))
+
+    @property
+    def overflow_cells(self) -> int:
+        """Count of (cell, query) partials whose c_comp budget overflowed
+        (non-zero means the compacted result may not be exact — §3)."""
+        return int(jnp.sum((self.compaction_overflow > 0).astype(jnp.int32)))
+
+    @property
+    def max_comparisons_per_cell(self) -> jax.Array:
+        """Per-query max of comparisons over cells — the paper's
+        per-processor work metric (its median is the headline number)."""
+        return jnp.max(self.comparisons, axis=(0, 1))
+
+
+
+
 def cell_query(
     index: slsh.SLSHIndex,
     data_local: jax.Array,
@@ -192,16 +239,16 @@ def dslsh_build(mesh, root_key, data, cfg: slsh.SLSHConfig, grid: Grid):
 
     >>> import jax
     >>> from repro.launch.mesh import make_local_mesh
-    >>> cfg = slsh.SLSHConfig(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05,
-    ...                       k=3, val_lo=0.0, val_hi=1.0, c_max=16, c_in=8,
-    ...                       h_max=2, p_max=32)
+    >>> cfg = slsh.SLSHConfig.compose(m_out=8, L_out=4, m_in=4, L_in=2,
+    ...                               alpha=0.05, k=3, val_lo=0.0, val_hi=1.0,
+    ...                               c_max=16, c_in=8, h_max=2, p_max=32)
     >>> grid, mesh = Grid(nu=1, p=1), make_local_mesh(1, 1)
     >>> data = jax.random.uniform(jax.random.PRNGKey(0), (64, 8))
     >>> index = dslsh_build(mesh, jax.random.PRNGKey(1), data, cfg, grid)
-    >>> kd, ki, comps, ovf = dslsh_query(mesh, index, data, data[:2], cfg, grid)
-    >>> [int(i) for i in ki[:, 0]]  # indexed points find themselves
+    >>> res = mesh_query(mesh, index, data, data[:2], cfg, grid)
+    >>> [int(i) for i in res.knn_idx[:, 0]]  # indexed points find themselves
     [0, 1]
-    >>> comps.shape  # comparisons are reported per (node, core, query)
+    >>> res.comparisons.shape  # counters are reported per (node, core, query)
     (1, 1, 2)
     """
 
@@ -221,7 +268,7 @@ def dslsh_build(mesh, root_key, data, cfg: slsh.SLSHConfig, grid: Grid):
     )(root_key, data)
 
 
-def dslsh_query(
+def mesh_query(
     mesh,
     index,
     data,
@@ -232,11 +279,11 @@ def dslsh_query(
     drop_mask: jax.Array | None = None,
     plan: routing.RoutingPlan | None = None,
     max_cells: int | None = None,
-):
-    """Resolve queries on the distributed index.
+) -> DistributedQueryResult:
+    """Resolve queries on the distributed index (shard_map execution path).
 
-    Returns (knn_dist (Q,K), knn_idx (Q,K) global, comparisons (nu, p, Q),
-    compaction_overflow (nu, p, Q)).
+    Returns a :class:`DistributedQueryResult` — merged global top-K plus the
+    per-cell counters and the §10 route mask.
 
     ``drop_mask`` (nu,) bool marks nodes dropped by the straggler deadline —
     the Reducer proceeds without their partials (paper's latency-first mode).
@@ -313,7 +360,42 @@ def dslsh_query(
         ) + q_specs,
         out_specs=(P(), P(), counter_spec, counter_spec),
     )(index, data, queries, drop_mask, routed)
-    return qd, qi, comps, overflow
+    return DistributedQueryResult(
+        qd, qi, comps, overflow, jnp.transpose(routed, (1, 2, 0))
+    )
+
+
+def dslsh_query(
+    mesh,
+    index,
+    data,
+    queries,
+    cfg: slsh.SLSHConfig,
+    grid: Grid,
+    reducer: str = "allgather",
+    drop_mask: jax.Array | None = None,
+    plan: routing.RoutingPlan | None = None,
+    max_cells: int | None = None,
+):
+    """Deprecated positional-tuple form of :func:`mesh_query`.
+
+    Returns (knn_dist, knn_idx, comparisons, compaction_overflow) — the
+    pre-§11 contract. Kept for one release; new code should hold a
+    ``repro.dslsh`` Index (or call :func:`mesh_query`) and read the typed
+    :class:`DistributedQueryResult` instead.
+    """
+    warnings.warn(
+        "dslsh_query is deprecated: build a repro.dslsh Index"
+        " (dslsh.build(..., deploy=dslsh.mesh(...))) and call .query(), or"
+        " use distributed.mesh_query for the typed result",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    res = mesh_query(
+        mesh, index, data, queries, cfg, grid, reducer=reducer,
+        drop_mask=drop_mask, plan=plan, max_cells=max_cells,
+    )
+    return res.knn_dist, res.knn_idx, res.comparisons, res.compaction_overflow
 
 
 # ------------------------------------------------------------ simulated API
@@ -354,59 +436,62 @@ def _simulate_cells(index, data, queries, cfg: slsh.SLSHConfig, grid: Grid):
     )  # (nu, p, ...)
 
 
-def simulate_query(
+def grid_query(
     index,
     data,
     queries,
     cfg: slsh.SLSHConfig,
     grid: Grid,
-    drop_mask: jax.Array | None = None,
-):
-    """vmap-over-cells query + host-side reduction. Same math as dslsh_query."""
-    if drop_mask is None:
-        drop_mask = jnp.zeros((grid.nu,), bool)
-    res = _simulate_cells(index, data, queries, cfg, grid)
-    kd = jnp.where(drop_mask[:, None, None, None], jnp.inf, res.knn_dist)
-    ki = jnp.where(drop_mask[:, None, None, None], -1, res.knn_idx)
-    q = queries.shape[0]
-    kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
-    ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
-    fd, fi = jax.vmap(lambda a, b: topk.masked_topk_smallest(a, b, cfg.k))(kd, ki)
-    # comparisons / compaction_overflow: (nu, p, Q)
-    return fd, fi, res.comparisons, res.compaction_overflow
-
-
-def simulate_query_routed(
-    index,
-    data,
-    queries,
-    cfg: slsh.SLSHConfig,
-    grid: Grid,
-    plan: routing.RoutingPlan,
+    *,
+    plan: routing.RoutingPlan | None = None,
     drop_mask: jax.Array | None = None,
     max_cells: int | None = None,
     return_stats: bool = False,
 ):
-    """Routed + replicated form of ``simulate_query`` (DESIGN.md §10).
+    """vmap-over-cells query + host-side reduction -> typed result.
 
-    The Forwarder hashes the batch once against the full family, routes each
-    query only to the cells its probe keys can land in (``plan.occupancy``),
-    block-splits every cell's routed rows across that cell's replicas, and
-    the Reducer runs the two-stage merge: replica reassembly, then a
-    cross-cell tournament tree. Without ``max_cells`` the result is
-    **bit-identical** to ``simulate_query`` — distances, indices,
-    comparisons, and overflow — because routed-out (cell, query) pairs are
-    exactly the pairs whose candidate set is empty and the tournament
+    The single simulated-grid query core (DESIGN.md §11): with ``plan=None``
+    the Forwarder broadcasts to every cell and the Reducer runs the flat
+    masked top-K merge — the same math as :func:`mesh_query`. With a
+    ``routing.RoutingPlan`` the batch is hashed once against the full
+    family, routed only to the cells its probe keys can land in,
+    block-split across each cell's replicas, and merged by the two-stage
+    §10 tournament — **bit-identical** to the broadcast path (distances,
+    indices, comparisons, overflow) because routed-out (cell, query) pairs
+    are exactly the pairs whose candidate set is empty and the tournament
     visits partials in flat-concatenation order (tests/test_routing.py).
 
     ``max_cells`` enables deadline degradation: only the ``max_cells``
-    best-landing cells are probed per query (approximate by design).
-    ``return_stats`` appends a ``routing.RoutingStats`` with the route
-    mask, per-device load, and Reducer payload accounting.
+    best-landing cells are probed per query (approximate by design —
+    requires a ``plan``). ``drop_mask`` (nu,) excludes straggler nodes from
+    the Reducer. ``return_stats`` appends a ``routing.RoutingStats`` with
+    the route mask, per-device load, and Reducer payload accounting
+    (``plan`` required).
     """
     if drop_mask is None:
         drop_mask = jnp.zeros((grid.nu,), bool)
+    if plan is None and (max_cells is not None or return_stats):
+        raise ValueError(
+            "max_cells / return_stats require a routing plan — build one"
+            " with routing.make_plan(index, cfg, grid) (or use a routed"
+            " repro.dslsh deployment)"
+        )
     res = _simulate_cells(index, data, queries, cfg, grid)
+    q = queries.shape[0]
+
+    if plan is None:
+        kd = jnp.where(drop_mask[:, None, None, None], jnp.inf, res.knn_dist)
+        ki = jnp.where(drop_mask[:, None, None, None], -1, res.knn_idx)
+        kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
+        ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
+        fd, fi = jax.vmap(
+            lambda a, b: topk.masked_topk_smallest(a, b, cfg.k)
+        )(kd, ki)
+        visited = jnp.ones((grid.nu, grid.p, q), bool)
+        return DistributedQueryResult(
+            fd, fi, res.comparisons, res.compaction_overflow, visited
+        )
+
     pk = routing.probe_keys(routing.family_from_index(index), queries, cfg)
     routed, scores = routing.route_mask(plan.occupancy, pk, grid)
     if max_cells is not None:
@@ -418,7 +503,6 @@ def simulate_query_routed(
     overflow = jnp.where(mask, res.compaction_overflow, 0)
     kd = jnp.where(drop_mask[:, None, None, None], jnp.inf, kd)
     ki = jnp.where(drop_mask[:, None, None, None], -1, ki)
-    q = queries.shape[0]
     kd_s = kd.reshape(grid.cells, q, cfg.k)
     ki_s = ki.reshape(grid.cells, q, cfg.k)
     if plan.r_max > 1:
@@ -441,8 +525,9 @@ def simulate_query_routed(
             lambda a, b: routing.merge_replica_partials(a, b, cfg.k)
         )(kd_r, ki_r)
     fd, fi = routing.merge_partials_tree(kd_s, ki_s, cfg.k)
+    result = DistributedQueryResult(fd, fi, comps, overflow, mask)
     if not return_stats:
-        return fd, fi, comps, overflow
+        return result
     routed_np = np.asarray(routed)
     stats = routing.RoutingStats(
         routed=routed_np,
@@ -452,7 +537,65 @@ def simulate_query_routed(
         ),
         device_load=routing.device_load(plan, routed_np),
     )
-    return fd, fi, comps, overflow, stats
+    return result, stats
+
+
+def simulate_query(
+    index,
+    data,
+    queries,
+    cfg: slsh.SLSHConfig,
+    grid: Grid,
+    drop_mask: jax.Array | None = None,
+):
+    """Deprecated positional-tuple form of the broadcast :func:`grid_query`.
+
+    Returns (knn_dist, knn_idx, comparisons, compaction_overflow) — the
+    pre-§11 contract, bit-identical to ``grid_query(...)`` fields. Kept for
+    one release; new code should hold a ``repro.dslsh`` Index.
+    """
+    warnings.warn(
+        "simulate_query is deprecated: build a repro.dslsh Index"
+        " (dslsh.build(..., deploy=dslsh.grid(nu, p))) and call .query(),"
+        " or use distributed.grid_query for the typed result",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    res = grid_query(index, data, queries, cfg, grid, drop_mask=drop_mask)
+    return res.knn_dist, res.knn_idx, res.comparisons, res.compaction_overflow
+
+
+def simulate_query_routed(
+    index,
+    data,
+    queries,
+    cfg: slsh.SLSHConfig,
+    grid: Grid,
+    plan: routing.RoutingPlan,
+    drop_mask: jax.Array | None = None,
+    max_cells: int | None = None,
+    return_stats: bool = False,
+):
+    """Deprecated positional-tuple form of the routed :func:`grid_query`.
+
+    Returns (knn_dist, knn_idx, comparisons, compaction_overflow[, stats]).
+    Kept for one release; new code should hold a routed ``repro.dslsh``
+    Index (``dslsh.grid(nu, p, replication=r, routed=True)``).
+    """
+    warnings.warn(
+        "simulate_query_routed is deprecated: build a routed repro.dslsh"
+        " Index (dslsh.grid(..., routed=True)) and call .query(), or use"
+        " distributed.grid_query(plan=...) for the typed result",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    out = grid_query(
+        index, data, queries, cfg, grid, plan=plan, drop_mask=drop_mask,
+        max_cells=max_cells, return_stats=return_stats,
+    )
+    res, stats = out if return_stats else (out, None)
+    flat = (res.knn_dist, res.knn_idx, res.comparisons, res.compaction_overflow)
+    return flat + (stats,) if return_stats else flat
 
 
 # ----------------------------------------------------------------- PKNN

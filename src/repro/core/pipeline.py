@@ -28,8 +28,10 @@ equivalent — enforced by tests/test_pipeline_backends.py.
 """
 from __future__ import annotations
 
+import contextvars
 import dataclasses
 import functools
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -40,24 +42,190 @@ from repro.core import hashing, tables, topk
 # ------------------------------------------------------------ configuration
 
 
+class ConfigError(ValueError):
+    """A rejected SLSH configuration (every message says how to fix it)."""
+
+
+def _require(ok: bool, msg: str) -> None:
+    if not ok:
+        raise ConfigError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyConfig:
+    """The hash-family half of an SLSH configuration (paper §2).
+
+    ``m_out``/``L_out`` parameterize the outer l1 bit-sampling layer,
+    ``m_in``/``L_in`` the inner cosine layer over heavy buckets,
+    ``alpha`` the heavy-bucket threshold, and ``val_lo``/``val_hi`` the
+    value range the bit-sampling thresholds are drawn from (mmHg for MAP
+    data). Defaults are the paper's Table 1 settings. Invalid combinations
+    raise :class:`ConfigError` at construction time.
+
+    >>> FamilyConfig(m_out=16, L_out=8).L_out
+    8
+    """
+
+    m_out: int = 125
+    L_out: int = 120
+    m_in: int = 65
+    L_in: int = 20
+    alpha: float = 0.005
+    use_inner: bool = True
+    multiprobe: int = 0  # extra low-margin bit-flip probes per outer table
+    val_lo: float = 0.0
+    val_hi: float = 200.0
+
+    def __post_init__(self):
+        _require(
+            self.m_out >= 1 and self.L_out >= 1,
+            f"m_out={self.m_out}, L_out={self.L_out}: the outer family needs"
+            " at least one bit and one table (m_out >= 1, L_out >= 1)",
+        )
+        _require(
+            not self.use_inner or (self.m_in >= 1 and self.L_in >= 1),
+            f"m_in={self.m_in}, L_in={self.L_in} with use_inner=True: the"
+            " stratified inner layer needs m_in >= 1 and L_in >= 1 — raise"
+            " them or set use_inner=False",
+        )
+        _require(
+            0.0 < self.alpha <= 1.0,
+            f"alpha={self.alpha}: the heavy-bucket threshold is a population"
+            " fraction and must lie in (0, 1]",
+        )
+        _require(
+            0 <= self.multiprobe < self.m_out,
+            f"multiprobe={self.multiprobe} with m_out={self.m_out}: each"
+            " extra probe flips one distinct signature bit, so 0 <="
+            " multiprobe < m_out must hold",
+        )
+        _require(
+            self.val_lo < self.val_hi,
+            f"val_lo={self.val_lo} >= val_hi={self.val_hi}: bit-sampling"
+            " thresholds are drawn uniformly from [val_lo, val_hi), which"
+            " must be a non-empty range",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetConfig:
+    """The static-shape budget half of an SLSH configuration (DESIGN.md §8.4).
+
+    ``k`` neighbours per query; ``c_max``/``c_in`` candidates gathered per
+    outer/inner bucket probe; ``h_max`` heavy buckets indexed per table;
+    ``p_max`` inner-layer population cap; ``c_comp`` the compacted distance
+    buffer (§3 — unique survivors beyond it are counted in
+    ``QueryResult.compaction_overflow``, never silently dropped; <= 0
+    disables the cap). Invalid budgets raise :class:`ConfigError`.
+
+    >>> BudgetConfig(k=5, c_comp=0).c_comp
+    0
+    """
+
+    k: int = 10
+    c_max: int = 128
+    c_in: int = 32
+    h_max: int = 8
+    p_max: int = 512
+    c_comp: int = 1024
+
+    def __post_init__(self):
+        _require(self.k >= 1, f"k={self.k}: need at least one neighbour")
+        _require(
+            self.c_max >= 1,
+            f"c_max={self.c_max}: each outer probe must be able to gather"
+            " at least one candidate",
+        )
+        _require(
+            self.c_in >= 1 and self.p_max >= 1,
+            f"c_in={self.c_in}, p_max={self.p_max}: inner-layer budgets must"
+            " be >= 1 (set use_inner=False to disable the inner layer"
+            " instead of zeroing its budgets)",
+        )
+        _require(
+            self.h_max >= 0,
+            f"h_max={self.h_max}: the heavy-bucket registry size cannot be"
+            " negative",
+        )
+        _require(
+            self.c_comp <= 0 or self.c_comp >= self.k,
+            f"c_comp={self.c_comp} < k={self.k}: the compacted distance"
+            " buffer cannot hold k candidates, so every query would"
+            " silently return fewer than k neighbours — raise c_comp to at"
+            " least k, or set c_comp <= 0 to disable compaction",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """The execution half of an SLSH configuration (DESIGN.md §6).
+
+    ``backend`` selects the compute backend for the hash and distance
+    stages (``"reference"`` pure jnp, ``"pallas"`` the fused kernels);
+    ``interpret`` overrides the Pallas interpret-mode platform policy;
+    ``build_chunk``/``query_chunk`` bound per-step memory. Unknown
+    backends are rejected at construction time, not at first build.
+
+    >>> RuntimeConfig(backend="pallas").backend
+    'pallas'
+    """
+
+    build_chunk: int = 4096
+    query_chunk: int = 64
+    backend: str = "reference"
+    # Pallas interpret-mode override: None = platform policy (interpret
+    # everywhere except real TPU), True/False forces it (DESIGN.md §6)
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        _require(
+            self.build_chunk >= 1 and self.query_chunk >= 1,
+            f"build_chunk={self.build_chunk}, query_chunk={self.query_chunk}:"
+            " chunk sizes must be >= 1",
+        )
+        _require(
+            self.backend in _BACKENDS,
+            f"unknown SLSH backend {self.backend!r}; registered:"
+            f" {sorted(_BACKENDS)}",
+        )
+
+
+_FAMILY_FIELDS = tuple(f.name for f in dataclasses.fields(FamilyConfig))
+_BUDGET_FIELDS = tuple(f.name for f in dataclasses.fields(BudgetConfig))
+_RUNTIME_FIELDS = tuple(f.name for f in dataclasses.fields(RuntimeConfig))
+
+# Internal construction paths (compose/replace) flip this so only *direct*
+# flat ``SLSHConfig(...)`` calls fire the deprecation warning.
+_COMPOSED_CTOR: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "slsh_composed_ctor", default=False
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class SLSHConfig:
     """Static configuration shared by every SLSH execution path.
 
-    One frozen object carries the paper parameters (``m_out``/``L_out``
-    outer bit-sampling layer, ``m_in``/``L_in`` inner cosine layer,
-    ``alpha`` heavy-bucket threshold, ``k``), the static-shape budgets
-    (DESIGN.md §8.4), and the compute-backend choice (§6). Defaults are the
-    paper's Table 1 settings.
+    One frozen object carries the hash-family parameters
+    (:class:`FamilyConfig`), the static-shape budgets
+    (:class:`BudgetConfig`), and the execution knobs
+    (:class:`RuntimeConfig`). Build it from those parts with
+    :meth:`compose` (also exported as ``repro.dslsh.make_config``); the
+    flat field list below is retained so every execution path keeps reading
+    ``cfg.m_out`` etc., but constructing ``SLSHConfig(...)`` with flat
+    keywords directly is **deprecated** (it emits a ``DeprecationWarning``
+    and will be removed one release later).
 
-    >>> cfg = SLSHConfig(m_out=16, L_out=8, c_max=64, multiprobe=1)
+    >>> cfg = SLSHConfig.compose(FamilyConfig(m_out=16, L_out=8, multiprobe=1),
+    ...                          BudgetConfig(c_max=64))
     >>> cfg.slot  # per-table candidate slot width: max(2*64, L_in*c_in)
     640
-    >>> cfg.backend
-    'reference'
+    >>> cfg.replace(backend="pallas").backend
+    'pallas'
+    >>> cfg.family.m_out
+    16
     """
 
-    # paper parameters
+    # hash-family parameters (FamilyConfig)
     m_out: int = 125
     L_out: int = 120
     m_in: int = 65
@@ -65,35 +233,130 @@ class SLSHConfig:
     alpha: float = 0.005
     k: int = 10
     use_inner: bool = True
-    multiprobe: int = 0  # extra low-margin bit-flip probes per outer table
-    # value range for bit-sampling thresholds (mmHg for MAP data)
+    multiprobe: int = 0
     val_lo: float = 0.0
     val_hi: float = 200.0
-    # static-shape budgets (DESIGN.md §8.4)
+    # static-shape budgets (BudgetConfig, DESIGN.md §8.4)
     c_max: int = 128
     c_in: int = 32
     h_max: int = 8
     p_max: int = 512
-    # compacted candidate budget for the distance stage (DESIGN.md §3):
-    # unique survivors beyond it are counted in
-    # ``QueryResult.compaction_overflow``; <= 0 disables the cap. The
-    # effective width is further clamped to both the gather width and the
-    # indexed point count (either bounds the unique-survivor count, so the
-    # clamp never costs exactness — see ``_compact_width``).
     c_comp: int = 1024
+    # execution knobs (RuntimeConfig, DESIGN.md §6)
     build_chunk: int = 4096
     query_chunk: int = 64
-    # compute backend for the hash and top-k stages (DESIGN.md §6)
     backend: str = "reference"
-    # Pallas interpret-mode override: None = platform policy (interpret
-    # everywhere except real TPU), True/False forces it (DESIGN.md §6)
     interpret: bool | None = None
+
+    def __post_init__(self):
+        if not _COMPOSED_CTOR.get():
+            warnings.warn(
+                "constructing SLSHConfig(...) from flat keywords is"
+                " deprecated; build it from parts with"
+                " SLSHConfig.compose(FamilyConfig(...), BudgetConfig(...),"
+                " RuntimeConfig(...)) (repro.dslsh.make_config), and derive"
+                " variants with cfg.replace(...)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        # Sub-config validation runs on the grouped views; the constructors
+        # below raise ConfigError with actionable messages.
+        self.family, self.budget, self.runtime  # noqa: B018
+        # cross-group checks
+        _require(
+            not self.use_inner or self.h_max >= 1,
+            f"h_max={self.h_max} with use_inner=True: stratification is on"
+            " but the heavy-bucket registry holds zero buckets, so the"
+            " inner layer would silently never fire — set h_max >= 1 or"
+            " use_inner=False",
+        )
+
+    # -------------------------------------------------- composed interface
+
+    @classmethod
+    def compose(
+        cls,
+        family: FamilyConfig | None = None,
+        budget: BudgetConfig | None = None,
+        runtime: RuntimeConfig | None = None,
+        **overrides,
+    ) -> "SLSHConfig":
+        """The canonical constructor: compose the three sub-configs.
+
+        ``overrides`` accepts flat field names and routes each to its
+        sub-config (a migration convenience for call sites still holding
+        flat keyword dicts); unknown names raise :class:`ConfigError`.
+        """
+        parts = {
+            "family": dataclasses.asdict(family or FamilyConfig()),
+            "budget": dataclasses.asdict(budget or BudgetConfig()),
+            "runtime": dataclasses.asdict(runtime or RuntimeConfig()),
+        }
+        for name, val in overrides.items():
+            group = _field_group(name)
+            parts[group][name] = val
+        # re-validate each group after overrides land
+        fam = FamilyConfig(**parts["family"])
+        bud = BudgetConfig(**parts["budget"])
+        run = RuntimeConfig(**parts["runtime"])
+        tok = _COMPOSED_CTOR.set(True)
+        try:
+            return cls(
+                **dataclasses.asdict(fam),
+                **dataclasses.asdict(bud),
+                **dataclasses.asdict(run),
+            )
+        finally:
+            _COMPOSED_CTOR.reset(tok)
+
+    def replace(self, **overrides) -> "SLSHConfig":
+        """Derive a validated variant (the composed form of
+        ``dataclasses.replace``); flat field names route to sub-configs."""
+        return SLSHConfig.compose(
+            self.family, self.budget, self.runtime, **overrides
+        )
+
+    @property
+    def family(self) -> FamilyConfig:
+        """This config's hash-family half as a :class:`FamilyConfig`."""
+        return FamilyConfig(
+            **{name: getattr(self, name) for name in _FAMILY_FIELDS}
+        )
+
+    @property
+    def budget(self) -> BudgetConfig:
+        """This config's budget half as a :class:`BudgetConfig`."""
+        return BudgetConfig(
+            **{name: getattr(self, name) for name in _BUDGET_FIELDS}
+        )
+
+    @property
+    def runtime(self) -> RuntimeConfig:
+        """This config's execution half as a :class:`RuntimeConfig`."""
+        return RuntimeConfig(
+            **{name: getattr(self, name) for name in _RUNTIME_FIELDS}
+        )
 
     @property
     def slot(self) -> int:
         """Per-outer-table candidate slot width."""
         outer = (1 + self.multiprobe) * self.c_max
         return max(outer, self.L_in * self.c_in) if self.use_inner else outer
+
+
+def _field_group(name: str) -> str:
+    """Which sub-config a flat SLSH field name belongs to."""
+    if name in _FAMILY_FIELDS:
+        return "family"
+    if name in _BUDGET_FIELDS:
+        return "budget"
+    if name in _RUNTIME_FIELDS:
+        return "runtime"
+    raise ConfigError(
+        f"unknown SLSH config field {name!r}; family fields:"
+        f" {_FAMILY_FIELDS}, budget fields: {_BUDGET_FIELDS}, runtime"
+        f" fields: {_RUNTIME_FIELDS}"
+    )
 
 
 class SLSHIndex(NamedTuple):

@@ -3,8 +3,9 @@
 The paper's Forwarder broadcasts every query to every cell and the Reducer
 merges a flat all-gather of partial top-Ks — fine at 8 cells, a network/load
 wall at 40. This module supplies the three pieces that remove it, shared by
-``distributed.simulate_query_routed`` / ``dslsh_query`` and the serving and
-streaming paths:
+the typed ``distributed.grid_query`` / ``mesh_query`` cores (routed
+``repro.dslsh`` deployments, DESIGN.md §11) and the serving and streaming
+paths:
 
 * **Key→cell map** (:func:`key_cell_map`) — a per-(node, table) coarse
   occupancy bitmap computed at build time from the CSR keys. A query batch is

@@ -18,7 +18,11 @@ import jax
 
 from repro.core import pipeline
 from repro.core.pipeline import (  # noqa: F401  (re-exported public API)
+    BudgetConfig,
+    ConfigError,
+    FamilyConfig,
     QueryResult,
+    RuntimeConfig,
     SLSHConfig,
     SLSHIndex,
 )
@@ -28,9 +32,9 @@ def build_index(key: jax.Array, data: jax.Array, cfg: SLSHConfig) -> SLSHIndex:
     """Build a stratified LSH index over ``data`` (n, d).
 
     >>> import jax
-    >>> cfg = SLSHConfig(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05, k=3,
-    ...                  val_lo=0.0, val_hi=1.0, c_max=16, c_in=8, h_max=2,
-    ...                  p_max=32)
+    >>> cfg = SLSHConfig.compose(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05,
+    ...                          k=3, val_lo=0.0, val_hi=1.0, c_max=16, c_in=8,
+    ...                          h_max=2, p_max=32)
     >>> data = jax.random.uniform(jax.random.PRNGKey(0), (64, 8))
     >>> index = build_index(jax.random.PRNGKey(1), data, cfg)
     >>> int(index.n)

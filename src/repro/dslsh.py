@@ -1,0 +1,13 @@
+"""``repro.dslsh`` — the public name of the Deployment API (``repro.api``).
+
+One import gives the whole lifecycle (DESIGN.md §11)::
+
+    from repro import dslsh
+
+    cfg = dslsh.make_config(dslsh.FamilyConfig(...), dslsh.BudgetConfig(...))
+    index = dslsh.build(key, data, cfg, dslsh.grid(nu=2, p=8))
+    res = index.query(queries)          # one typed DistributedQueryResult
+    index.save("ckpt/"); index = dslsh.load("ckpt/")
+"""
+from repro.api import *  # noqa: F401,F403
+from repro.api import __all__  # noqa: F401

@@ -30,7 +30,7 @@ def make_replicated_mesh(rep: int = 1, data: int = 1, model: int = 1):
     """Mesh with a leading replica axis for routed DSLSH queries.
 
     ``rep * data * model`` devices: each (data, model) cell exists ``rep``
-    times, and ``distributed.dslsh_query`` row-shards the query batch over
+    times, and ``distributed.mesh_query`` row-shards the query batch over
     the ``rep`` axis before its two-stage merge (DESIGN.md §10)."""
     return jax.make_mesh(
         (rep, data, model), ("rep", "data", "model"), **_axis_types_kwargs(3)

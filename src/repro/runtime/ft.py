@@ -7,7 +7,8 @@ hold disjoint slices), so the recovery story is:
   liveness (simulated here; on a real cluster this is the coordinator
   service). Missed deadline => node marked down.
 * **Straggler mitigation (serving)** — the Reducer proceeds with a
-  ``drop_mask`` excluding late nodes (core/distributed.dslsh_query):
+  ``drop_mask`` excluding late nodes (core/distributed.mesh_query, or
+  ``index.query(q, drop_mask=...)`` on a ``repro.dslsh`` handle):
   bounded tail latency at a small recall cost — faithful to the paper's
   latency-first design.
 * **Elastic re-mesh** — on permanent failure the dataset is re-sharded over
@@ -87,6 +88,31 @@ def elastic_reshard_dslsh(key, points, labels, cfg, old_grid, failed_nodes: list
     pts_j = jnp.asarray(pts)
     index = D.simulate_build(key, pts_j, cfg, grid)
     return grid, index, pts_j, jnp.asarray(labs), n_real
+
+
+def elastic_reshard_index(key, points, labels, cfg, deploy, failed_nodes: list[int]):
+    """Deployment-API form of :func:`elastic_reshard_dslsh`.
+
+    Rebuilds on the surviving nodes and returns ``(index, labels, n_real)``
+    where ``index`` is a fresh ``repro.dslsh`` grid handle (same hash-family
+    key — queries remain exactly comparable) and ``labels`` is padded to the
+    new grid.
+    """
+    import jax.numpy as jnp
+
+    from repro import api
+
+    nu_new = deploy.nu - len(failed_nodes)
+    assert nu_new >= 1, "no surviving nodes"
+    new_deploy = api.grid(
+        nu=nu_new, p=deploy.p, replication=deploy.replication,
+        routed=deploy.routed,
+    )
+    pts, labs, n_real = api.pad_to_multiple(
+        np.asarray(points), np.asarray(labels), new_deploy.cells
+    )
+    index = api.build(key, jnp.asarray(pts), cfg, new_deploy)
+    return index, jnp.asarray(labs), n_real
 
 
 def simulate_training_failure_and_restart(

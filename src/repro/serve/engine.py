@@ -132,11 +132,8 @@ class ServeEngine:
 
 def make_knn_lm_hook(
     index,
-    datastore_points: jax.Array,
-    next_tokens: jax.Array,
-    slsh_cfg,
-    grid,
-    *,
+    next_tokens: jax.Array = None,
+    *legacy_args,
     hidden_fn: Callable[[Any], jax.Array],
     vocab: int,
     lmbda: float = 0.25,
@@ -148,55 +145,81 @@ def make_knn_lm_hook(
     over the next tokens of the K nearest hidden states (Khandelwal et al.,
     adapted to DSLSH retrieval).
 
-    ``index`` is a prebuilt ``simulate_build`` index over the hidden-state
-    keys ``datastore_points``; ``next_tokens`` holds each entry's label.
+    ``index`` is a ``repro.dslsh`` :class:`~repro.api.Index` built over the
+    hidden-state keys (any deployment); ``next_tokens`` holds each
+    datastore entry's label. Retrieval is ``index.query(...)`` — the one
+    typed result (DESIGN.md §11) — so the backend choice, the ``c_comp``
+    distance budget (keep ``res.overflow_cells`` zero, §3), and §10
+    routing all ride on the handle's config and deployment.
+
     ``hidden_fn(carrier) -> (B, d)`` extracts the query hidden states from
     whatever the caller passes as the hook's second argument. NOTE: the
     stock ``ServeEngine`` passes its decode cache, which holds only
     {k, v, len} — no hidden states — so with that engine ``hidden_fn``
     must derive the query from state it closes over (e.g. the running
     tokens, as in examples/serve_knn_lm.py), or the model's cache must be
-    extended to expose the final hidden state. Retrieval runs the staged
-    SLSH pipeline, so the reference-vs-pallas choice rides on
-    ``slsh_cfg.backend``, the decode-time distance work is bounded by
-    ``slsh_cfg.c_comp`` (``simulate_query``'s fourth return carries the
-    per-cell overflow counts — size the budget so they stay zero, DESIGN.md
-    §3), and ``slsh_cfg.interpret`` follows the §6 platform policy
-    (DESIGN.md §5/§6).
+    extended to expose the final hidden state.
 
-    Routing (DESIGN.md §10): pass a ``routing.make_plan`` result as ``plan``
-    to route each decode-time batch only to the cells its probe keys can
-    land in — bit-identical retrieval. ``degrade`` additionally declares
-    deadline-degradation levels ``((min_budget_s, max_cells), ...)``: the
-    engine hands the hook the batch's tightest remaining latency budget
-    every step, and ``routing.degrade_max_cells`` maps it to a cap on the
-    cells probed per query (approximate retrieval, the paper's
+    ``degrade`` declares deadline-degradation levels
+    ``((min_budget_s, max_cells), ...)`` (requires a routed deployment):
+    the engine hands the hook the batch's tightest remaining latency
+    budget every step, and ``routing.degrade_max_cells`` maps it to a cap
+    on the cells probed per query (approximate retrieval, the paper's
     latency-first mode — never applied without an explicit ``degrade``).
+
+    The pre-§11 positional form ``make_knn_lm_hook(raw_index, points,
+    next_tokens, slsh_cfg, grid, ...)`` still works for one release with a
+    ``DeprecationWarning`` (it wraps the raw pytree into a grid-deployment
+    handle internally).
     """
-    from repro.core import distributed as D
+    import warnings
+
+    from repro import api
     from repro.core import routing
 
-    if degrade is not None and plan is None:
+    if not isinstance(index, api.Index):
+        # legacy call: (index, datastore_points, next_tokens, slsh_cfg, grid)
+        warnings.warn(
+            "make_knn_lm_hook(raw_index, points, next_tokens, cfg, grid)"
+            " is deprecated: pass a repro.dslsh Index"
+            " (dslsh.build(..., deploy=dslsh.grid(...))) and the"
+            " next-token labels",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        datastore_points = next_tokens
+        next_tokens, slsh_cfg, grid_ = legacy_args
+        index = api.wrap_grid(
+            index, datastore_points, slsh_cfg, grid_, plan=plan
+        )
+    else:
+        if legacy_args or plan is not None:
+            raise ValueError(
+                "with a repro.dslsh Index, routing lives on the handle —"
+                " build it with dslsh.grid(..., routed=True) instead of"
+                " passing plan/positional legacy arguments"
+            )
+        if next_tokens is None:
+            raise ValueError(
+                "make_knn_lm_hook needs the datastore's next-token labels:"
+                " make_knn_lm_hook(index, next_tokens, hidden_fn=...,"
+                " vocab=...)"
+            )
+    if degrade is not None and index.plan is None:
         raise ValueError(
-            "degrade levels require a routing plan (pass plan=routing.make_plan(...))"
+            "degrade levels require a routed deployment — build the index"
+            " with dslsh.grid(..., routed=True)"
         )
 
     def hook(logits: jax.Array, carrier, budget_s: float = float("inf")) -> jax.Array:
         hq = hidden_fn(carrier)  # (B, d)
-        if plan is None:
-            kd, ki, _, _ = D.simulate_query(
-                index, datastore_points, hq, slsh_cfg, grid
-            )
-        else:
-            max_cells = (
-                routing.degrade_max_cells(budget_s, degrade) if degrade else None
-            )
-            kd, ki, _, _ = D.simulate_query_routed(
-                index, datastore_points, hq, slsh_cfg, grid, plan,
-                max_cells=max_cells,
-            )
+        max_cells = (
+            routing.degrade_max_cells(budget_s, degrade) if degrade else None
+        )
+        res = index.query(hq, max_cells=max_cells)
         return knn_interpolate(
-            logits, ki, kd, next_tokens, vocab, lmbda, temperature
+            logits, res.knn_idx, res.knn_dist, next_tokens, vocab, lmbda,
+            temperature,
         )
 
     hook.accepts_budget = True  # opt into the engine's deadline budget

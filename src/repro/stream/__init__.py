@@ -17,3 +17,4 @@ from repro.stream.monitor import (  # noqa: F401
     StreamingMonitor,
     node_init,
 )
+from repro.stream.shard import IngestReport, ShardedStream  # noqa: F401

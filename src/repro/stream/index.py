@@ -109,9 +109,10 @@ def stream_init(
 
     >>> import jax
     >>> from repro.core import slsh
-    >>> cfg = slsh.SLSHConfig(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05,
-    ...                       k=3, val_lo=0.0, val_hi=1.0, c_max=16, c_in=8,
-    ...                       h_max=2, p_max=32, use_inner=False)
+    >>> cfg = slsh.SLSHConfig.compose(m_out=8, L_out=4, m_in=4, L_in=2,
+    ...                               alpha=0.05, k=3, val_lo=0.0, val_hi=1.0,
+    ...                               c_max=16, c_in=8, h_max=2, p_max=32,
+    ...                               use_inner=False)
     >>> data = jax.random.uniform(jax.random.PRNGKey(0), (32, 8))
     >>> sidx = stream_init(jax.random.PRNGKey(1), data, cfg,
     ...                    capacity=48, delta_cap=16)

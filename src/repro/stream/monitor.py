@@ -1,102 +1,37 @@
-"""Live ICU monitoring path: a sharded streaming DSLSH driver.
+"""Live ICU monitoring path: rolling AHE prediction over a streaming DSLSH.
 
 ``StreamingMonitor`` replays timestamped ABP lag windows (``data/abp`` +
-``data/windows``) as a stream through a ``Grid`` of streaming cells — the
-online form of the paper's deployment: the Forwarder routes each arriving
-window batch to one node (round-robin), every core of that node appends it
-to its delta segment, and AHE predictions are rolling DSLSH queries fanned
-out over base + delta on every cell with Reducer-style top-K merging.
+``data/windows``) as a stream through a sharded :class:`ShardedStream`
+core (stream/shard.py — the same label-free driver the ``repro.dslsh``
+streaming deployment wraps, DESIGN.md §11): each arriving batch of lag
+windows is first classified (rolling AHE prediction with per-event
+latency), then ingested — queryable immediately, no rebuild. Nodes compact
+automatically when their delta segments fill; under a retention horizon,
+compaction also evicts stale windows and the monitor renumbers its labels
+along the core's :class:`~repro.stream.shard.IngestReport.keep` map.
 
-Sharded state layout: one ``NodeState`` per node, holding a *single* point
-store + timestamp vector shared by the node's ``p`` cells (cells only
-carry their ``L_out/p`` tables and delta keys — the store is not
-duplicated per core), kept in a Python list so ingesting into one node
-never copies the others. All nodes share one static shape, so the fan-out
-query jits once over the whole list.
-
-Maintenance is automatic: a node whose delta segment would overflow is
-compacted in place (stable CSR merge — see stream/index.py), and when a
-retention horizon is configured, compaction also evicts windows older than
-``t - retention_s`` (the stale-window policy: ICU relevance decays, and the
-store is fixed-capacity).
-
-Unlike the batch path, per-node stores need no sentinel padding: empty
-store rows are simply absent from every table, so they can never enter a
-top-K result.
+Predictions consume the one typed ``DistributedQueryResult`` the core's
+query returns — merged top-K plus the per-cell comparisons / overflow /
+route-mask counters every other deployment reports.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distributed as D
-from repro.core import pipeline
 from repro.core import predict as predict_mod
-from repro.core import routing
-from repro.core import slsh, topk
-from repro.stream import delta as delta_mod
-from repro.stream import index as stream_index
-
-
-class CellState(NamedTuple):
-    """One core's share of a node: its tables + delta keys (no store).
-
-    ``occ`` is the cell's coarse key→cell map over its *base* tables
-    (DESIGN.md §10); the delta segment inherits the cell's placement, so
-    query-time routing ORs the delta keys' occupancy in on the fly and the
-    map stays exact between compactions.
-    """
-
-    base: pipeline.SLSHIndex  # capacity-padded CSR tables (DESIGN.md §9.1)
-    delta: delta_mod.DeltaIndex
-    occ: jax.Array  # (L_loc, 2**route_bits) bool key→cell map
-
-
-class NodeState(NamedTuple):
-    store: jax.Array  # (capacity, d) — shared by the node's p cells
-    ts: jax.Array  # (capacity,)
-    cells: CellState  # stacked (p, ...)
-
-
-def node_init(
-    root_key: jax.Array,
-    data_local: jax.Array,
-    cfg: slsh.SLSHConfig,
-    grid: D.Grid,
-    *,
-    capacity: int,
-    delta_cap: int,
-    t0: float = 0.0,
-    route_bits: int = routing.DEFAULT_BITS,
-) -> NodeState:
-    """One node: p cells over a shared store of the node's data slice."""
-    n0, d = data_local.shape
-    assert capacity >= n0, "node capacity below warmup shard size"
-
-    def per_core(core_id):
-        base = D.cell_build(root_key, data_local, core_id, cfg, grid)
-        base = base._replace(outer=stream_index.pad_tables(base.outer, capacity))
-        occ = routing.cell_occupancy(base.outer.sorted_keys, base.n, route_bits)
-        return CellState(
-            base,
-            delta_mod.make_delta(delta_cap, cfg.L_out // grid.p, cfg.L_in),
-            occ,
-        )
-
-    cells = jax.vmap(per_core)(jnp.arange(grid.p, dtype=jnp.int32))
-    store = jnp.zeros((capacity, d), jnp.float32).at[:n0].set(data_local)
-    ts = jnp.zeros((capacity,), jnp.float32).at[:n0].set(jnp.float32(t0))
-    return NodeState(store, ts, cells)
-
-
-def _cell_as_stream(cell: CellState, node: NodeState) -> stream_index.StreamIndex:
-    """View one cell as a single-shard StreamIndex (for host maintenance)."""
-    return stream_index.StreamIndex(cell.base, cell.delta, node.store, node.ts)
+from repro.core import routing, slsh
+from repro.stream.shard import (  # noqa: F401  (re-exported public API)
+    CellState,
+    NodeState,
+    ShardedStream,
+    node_init,
+)
 
 
 @dataclasses.dataclass
@@ -126,10 +61,10 @@ class StreamingMonitor:
     >>> import jax, numpy as np
     >>> from repro.core import distributed as D
     >>> from repro.core import slsh
-    >>> cfg = slsh.SLSHConfig(m_out=8, L_out=4, m_in=4, L_in=2, alpha=0.05,
-    ...                       k=3, val_lo=0.0, val_hi=1.0, c_max=16, c_in=8,
-    ...                       h_max=2, p_max=32, query_chunk=8,
-    ...                       use_inner=False)
+    >>> cfg = slsh.SLSHConfig.compose(m_out=8, L_out=4, m_in=4, L_in=2,
+    ...                               alpha=0.05, k=3, val_lo=0.0, val_hi=1.0,
+    ...                               c_max=16, c_in=8, h_max=2, p_max=32,
+    ...                               query_chunk=8, use_inner=False)
     >>> pts = np.random.default_rng(0).uniform(0, 1, (32, 8)).astype(np.float32)
     >>> mon = StreamingMonitor(jax.random.PRNGKey(0), pts,
     ...                        np.zeros(32, np.int8), cfg, D.Grid(nu=1, p=1),
@@ -171,204 +106,50 @@ class StreamingMonitor:
         init_points = np.asarray(init_points, np.float32)
         init_labels = np.asarray(init_labels)
         n0 = init_points.shape[0]
-        assert n0 > 0 and n0 % grid.nu == 0, "warmup set must divide across nodes"
-        n_loc = n0 // grid.nu
+        self.core = ShardedStream(
+            key, init_points, cfg, grid,
+            node_capacity=node_capacity, delta_cap=delta_cap,
+            retention_s=retention_s, t0=t0, route=route, route_bits=route_bits,
+        )
         self.cfg, self.grid = cfg, grid
-        self.node_capacity, self.delta_cap = node_capacity, delta_cap
-        self.retention_s = retention_s
+        self.node_capacity = node_capacity
         self.label_delay_s = label_delay_s
-        self.route, self.route_bits = route, route_bits
-        # full outer family (the root broadcast the cells slice their
-        # tables from) — the router hashes each query batch against it once
-        self._family = pipeline.make_family(key, init_points.shape[1], cfg)
-        self._rr = 0  # round-robin Forwarder cursor
         self.last_routed_frac = 1.0
         self._pending_labels: list[tuple[float, int, np.ndarray, np.ndarray]] = []
         self.events: list[StreamEvent] = []
 
+        n_loc = n0 // grid.nu
         self.labels = np.zeros((grid.nu, node_capacity), np.int8)
         for i in range(grid.nu):
             self.labels[i, :n_loc] = init_labels[i * n_loc : (i + 1) * n_loc]
 
-        data_nodes = jnp.asarray(init_points).reshape(grid.nu, n_loc, -1)
-        self.state = [
-            node_init(
-                key, data_nodes[i], cfg, grid,
-                capacity=node_capacity, delta_cap=delta_cap, t0=t0,
-                route_bits=route_bits,
-            )
-            for i in range(grid.nu)
-        ]
-        self._insert = jax.jit(self._insert_impl)
-        self._query = jax.jit(self._query_impl)
+    # ------------------------------------------------------- core plumbing
 
-    # ------------------------------------------------------------- jitted
+    @property
+    def state(self) -> list[NodeState]:
+        """The core's per-node state list (shared, not copied)."""
+        return self.core.state
 
-    def _insert_impl(self, node: NodeState, xs, t):
-        """Ingest one batch into one node: every cell hashes the batch with
-        its own table slice; the shared store is written once."""
-        n = node.cells.base.n[0]  # identical across the node's cells
-        room = stream_index.delta_room(self.node_capacity, self.delta_cap, n)
+    @property
+    def _query(self):
+        """The core's jitted query program ``(state, q) -> (kd, ki,
+        comparisons, overflow, routed)`` — exposed for equivalence tests."""
+        return self.core._query
 
-        def per_cell(cell):
-            outer_keys, inner_keys = stream_index.hash_for_insert(
-                cell.base, xs, self.cfg
-            )
-            return CellState(
-                cell.base,
-                delta_mod.append_keys(cell.delta, outer_keys, inner_keys, room),
-                cell.occ,  # base map untouched; delta keys OR in at query time
-            )
-
-        cells = jax.vmap(per_cell)(node.cells)
-        store, ts = stream_index.scatter_rows(
-            node.store, node.ts, n, node.cells.delta.count[0], room, xs, t
-        )
-        return NodeState(store, ts, cells)
-
-    def _node_query(self, node: NodeState, node_id: int, queries, pk):
-        """One node's partial results; ``pk`` is the full-family probe-key
-        tensor reshaped per cell ``(p, Q, L_loc, 1+multiprobe)``."""
-
-        def per_cell(args):
-            cell, pk_cell = args
-            res = pipeline.query_batch(
-                cell.base, node.store, queries, self.cfg,
-                delta=delta_mod.as_view(cell.delta, cell.base.n),
-            )
-            if not self.route:
-                return res, jnp.ones((queries.shape[0],), bool)
-            # delta segments inherit the cell's placement (DESIGN.md §10):
-            # OR the live delta keys' occupancy into the base map, then
-            # route — exact, so masking never changes a prediction
-            cap = cell.delta.outer_keys.shape[0]
-            d_occ = routing.delta_occupancy(
-                cell.delta.outer_keys,
-                jnp.arange(cap) < cell.delta.count,
-                self.route_bits,
-                cell.occ.shape[-1],
-            )
-            routed = routing.route_cell(cell.occ | d_occ, pk_cell)
-            res = pipeline.QueryResult(
-                knn_idx=jnp.where(routed[:, None], res.knn_idx, -1),
-                knn_dist=jnp.where(routed[:, None], res.knn_dist, jnp.inf),
-                comparisons=jnp.where(routed, res.comparisons, 0),
-                bucket_total=res.bucket_total,
-                compaction_overflow=jnp.where(routed, res.compaction_overflow, 0),
-            )
-            return res, routed
-
-        res, routed = jax.lax.map(per_cell, (node.cells, pk))  # stacked over p
-        gidx = jnp.where(
-            res.knn_idx >= 0, res.knn_idx + node_id * self.node_capacity, -1
-        )
-        return res.knn_dist, gidx, res.comparisons, res.compaction_overflow, routed
-
-    def _query_impl(self, state: list[NodeState], queries):
-        q = queries.shape[0]
-        l_loc = self.cfg.L_out // self.grid.p
-        pk = routing.probe_keys(self._family[0], queries, self.cfg)
-        pk = jnp.moveaxis(
-            pk.reshape(q, self.grid.p, l_loc, -1), 0, 1
-        )  # (p, Q, L_loc, 1+multiprobe) — cell c owns family rows [c*L_loc, ...)
-        parts = [
-            self._node_query(nd, i, queries, pk) for i, nd in enumerate(state)
-        ]
-        kd = jnp.stack([p[0] for p in parts])  # (nu, p, Q, K)
-        ki = jnp.stack([p[1] for p in parts])
-        comps = jnp.stack([p[2] for p in parts])
-        overflow = jnp.stack([p[3] for p in parts])  # (nu, p, Q)
-        routed = jnp.stack([p[4] for p in parts])  # (nu, p, Q)
-        kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
-        ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
-        # cells of a node share its points, so the same neighbour can appear
-        # in several partial top-Ks: merge unique-by-index so the weighted
-        # vote never double-counts a point
-        fd, fi = jax.vmap(
-            lambda a, b: topk.masked_unique_topk_smallest(a, b, self.cfg.k)
-        )(kd, ki)
-        return fd, fi, comps, overflow, routed
-
-    # -------------------------------------------------------- maintenance
+    def n_index(self) -> int:
+        """Points queryable right now, across all nodes."""
+        return self.core.n_index()
 
     def _maintain_node(self, node_idx: int, t: float) -> int:
-        """Compact (and, under a retention horizon, evict) one node's cells.
-
-        Returns the number of evicted windows; label slots are remapped.
-        The keep-set and the store/ts rebuild depend only on the node's
-        shared timestamps, so they are computed once; only the per-cell
-        tables are rebuilt per core."""
-        node = self.state[node_idx]
-        cells = [jax.tree.map(lambda a: a[j], node.cells) for j in range(self.grid.p)]
-        evicted = 0
-        t_min = t - self.retention_s if np.isfinite(self.retention_s) else None
-        n_tot = int(cells[0].base.n + cells[0].delta.count)
-        keep = (
-            stream_index.retention_keep(node.ts, n_tot, t_min, self.cfg.h_max)
-            if t_min is not None
-            else None
-        )
-        if keep is not None and keep.shape[0] < n_tot:
-            # evict: rebuild each cell's tables over the kept rows (this
-            # subsumes compaction); store/ts/labels renumber once
-            evicted = n_tot - int(keep.shape[0])
-            data = node.store[keep]
-
-            def rebuilt_cell(c):
-                base = pipeline.build_from_params(
-                    data, c.base.outer_params, c.base.inner_params, self.cfg
-                )
-                base = base._replace(
-                    outer=stream_index.pad_tables(base.outer, self.node_capacity)
-                )
-                return CellState(
-                    base,
-                    delta_mod.make_delta(
-                        self.delta_cap, self.cfg.L_out // self.grid.p, self.cfg.L_in
-                    ),
-                    routing.cell_occupancy(
-                        base.outer.sorted_keys, base.n, self.route_bits
-                    ),
-                )
-
-            cells = [rebuilt_cell(c) for c in cells]
-            store = jnp.zeros_like(node.store).at[: keep.shape[0]].set(data)
-            ts = jnp.zeros_like(node.ts).at[: keep.shape[0]].set(node.ts[keep])
-            keep_np = np.asarray(keep)
-            relab = np.zeros((self.node_capacity,), np.int8)
-            relab[: keep_np.shape[0]] = self.labels[node_idx, keep_np]
-            self.labels[node_idx] = relab
-            # renumber (or drop) this node's pending label slots the same way
-            remapped = []
-            for reveal_t, nd, slots, labs in self._pending_labels:
-                if nd == node_idx:
-                    pos = np.searchsorted(keep_np, slots)
-                    ok = (pos < keep_np.shape[0]) & (keep_np[np.minimum(pos, keep_np.shape[0] - 1)] == slots)
-                    if not ok.any():
-                        continue
-                    slots, labs = pos[ok], labs[ok]
-                remapped.append((reveal_t, nd, slots, labs))
-            self._pending_labels = remapped
-        else:
-            store, ts = node.store, node.ts
-            cells = [
-                CellState(
-                    s.base,
-                    s.delta,
-                    routing.cell_occupancy(
-                        s.base.outer.sorted_keys, s.base.n, self.route_bits
-                    ),
-                )
-                for s in (
-                    stream_index.compact(_cell_as_stream(c, node), self.cfg)
-                    for c in cells
-                )
-            ]
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
-        self.state[node_idx] = NodeState(store, ts, stacked)
+        """Compact/evict one node now and renumber labels along the core's
+        keep map; returns the evicted-window count (maintenance shim for
+        tests and operators forcing compaction outside ingest pressure)."""
+        evicted, keep = self.core.maintain(node_idx, t)
+        if keep is not None:
+            self._renumber_labels(node_idx, keep)
         return evicted
 
-    # ------------------------------------------------------------- stream
+    # ------------------------------------------------------------- labels
 
     def flush_labels(self, now: float) -> None:
         """Attach pending labels whose condition windows have closed."""
@@ -380,50 +161,48 @@ class StreamingMonitor:
                 still.append((reveal_t, node_idx, slots, labs))
         self._pending_labels = still
 
+    def _renumber_labels(self, node_idx: int, keep_np: np.ndarray) -> None:
+        """Apply an eviction's surviving-row map to this node's labels and
+        pending label slots (old row ``keep[i]`` became row ``i``)."""
+        relab = np.zeros((self.node_capacity,), np.int8)
+        relab[: keep_np.shape[0]] = self.labels[node_idx, keep_np]
+        self.labels[node_idx] = relab
+        remapped = []
+        for reveal_t, nd, slots, labs in self._pending_labels:
+            if nd == node_idx:
+                pos = np.searchsorted(keep_np, slots)
+                ok = (pos < keep_np.shape[0]) & (
+                    keep_np[np.minimum(pos, keep_np.shape[0] - 1)] == slots
+                )
+                if not ok.any():
+                    continue
+                slots, labs = pos[ok], labs[ok]
+            remapped.append((reveal_t, nd, slots, labs))
+        self._pending_labels = remapped
+
+    # ------------------------------------------------------------- stream
+
     def ingest(self, points, labels, t: float) -> dict:
         """Route one window batch to the next node; auto-compact on pressure."""
         self.flush_labels(t)
-        pts = np.asarray(points, np.float32)
         labels = np.asarray(labels)
-        b = pts.shape[0]
-        node_idx = self._rr % self.grid.nu
-        self._rr += 1
-
-        def node_fill():
-            cells = self.state[node_idx].cells
-            return int(cells.base.n[0]), int(cells.delta.count[0])
-
-        def room_left(base_n, count):
-            # same formula the jitted insert uses for its drop decision
-            return int(
-                stream_index.delta_room(self.node_capacity, self.delta_cap, base_n)
-            ) - count
-
-        base_n, count = node_fill()
-        room = room_left(base_n, count)
-        compacted, evicted = False, 0
-        if b > room:
-            evicted = self._maintain_node(node_idx, t)
-            compacted = True
-            base_n, count = node_fill()
-            room = room_left(base_n, count)
-
-        self.state[node_idx] = self._insert(
-            self.state[node_idx], jnp.asarray(pts), jnp.float32(t)
-        )
-        inserted = min(b, max(room, 0))
-        slots = np.arange(base_n + count, base_n + count + inserted)
+        rep = self.core.ingest(points, t)
+        if rep.keep is not None:
+            self._renumber_labels(rep.node, rep.keep)
         if self.label_delay_s > 0:
             # the condition window has not closed yet — the label is future
             # information; reveal it only once observable
             self._pending_labels.append(
-                (t + self.label_delay_s, node_idx, slots, labels[:inserted].copy())
+                (
+                    t + self.label_delay_s, rep.node, rep.slots,
+                    labels[: rep.inserted].copy(),
+                )
             )
         else:
-            self.labels[node_idx, slots] = labels[:inserted]
+            self.labels[rep.node, rep.slots] = labels[: rep.inserted]
         return dict(
-            node=node_idx, inserted=inserted, dropped=b - inserted,
-            compacted=compacted, evicted=evicted,
+            node=rep.node, inserted=rep.inserted, dropped=rep.dropped,
+            compacted=rep.compacted, evicted=rep.evicted,
         )
 
     def predict(self, queries) -> tuple[np.ndarray, float, float, int]:
@@ -434,25 +213,18 @@ class StreamingMonitor:
         budget overflowed — non-zero means c_comp is truncating live
         candidate sets, DESIGN.md §3). ``self.last_routed_frac`` holds the
         fraction of (cell, query) pairs the router visited for this batch."""
-        q = jnp.asarray(np.asarray(queries, np.float32))
         t0 = time.perf_counter()
-        kd, ki, comps, overflow, routed = self._query(self.state, q)
-        jax.block_until_ready((kd, ki, comps))
+        res = self.core.query(queries)
+        jax.block_until_ready((res.knn_dist, res.knn_idx, res.comparisons))
         latency = time.perf_counter() - t0
-        self.last_routed_frac = float(np.asarray(routed).mean())
+        self.last_routed_frac = res.routed_frac
         preds = predict_mod.predict_batch(
-            jnp.asarray(self.labels.reshape(-1)), ki, kd
+            jnp.asarray(self.labels.reshape(-1)), res.knn_idx, res.knn_dist
         )
         return (
             np.asarray(preds), latency,
-            float(np.median(np.asarray(comps))),
-            int((np.asarray(overflow) > 0).sum()),
-        )
-
-    def n_index(self) -> int:
-        """Points queryable right now, across all nodes."""
-        return sum(
-            int(nd.cells.base.n[0] + nd.cells.delta.count[0]) for nd in self.state
+            float(np.median(np.asarray(res.comparisons))),
+            res.overflow_cells,
         )
 
     def step(self, points, labels, t: float, *, predict: bool = True) -> StreamEvent:

@@ -1,0 +1,437 @@
+"""Sharded streaming DSLSH core: the label-free state machine under both
+the ``repro.dslsh`` streaming deployment and the ICU ``StreamingMonitor``.
+
+One :class:`ShardedStream` owns a ``Grid`` of streaming cells — the online
+form of the paper's deployment (DESIGN.md §9/§11): the Forwarder routes
+each arriving window batch to one node (round-robin), every core of that
+node appends it to its delta segment, and queries fan out over base + delta
+on every cell with Reducer-style top-K merging into the one typed
+``DistributedQueryResult``.
+
+Sharded state layout: one :class:`NodeState` per node, holding a *single*
+point store + timestamp vector shared by the node's ``p`` cells (cells only
+carry their ``L_out/p`` tables and delta keys — the store is not duplicated
+per core), kept in a Python list so ingesting into one node never copies
+the others. All nodes share one static shape, so the fan-out query jits
+once over the whole list.
+
+Maintenance is automatic: a node whose delta segment would overflow is
+compacted in place (stable CSR merge — see stream/index.py), and when a
+retention horizon is configured, compaction also evicts windows older than
+``t - retention_s``. Eviction renumbers store rows; the
+:class:`IngestReport` returned by :meth:`ShardedStream.ingest` carries the
+surviving-row map so callers holding per-point metadata (the monitor's
+labels) can renumber along.
+
+Unlike the batch path, per-node stores need no sentinel padding: empty
+store rows are simply absent from every table, so they can never enter a
+top-K result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as D
+from repro.core import pipeline, routing, slsh, topk
+from repro.stream import delta as delta_mod
+from repro.stream import index as stream_index
+
+
+class CellState(NamedTuple):
+    """One core's share of a node: its tables + delta keys (no store).
+
+    ``occ`` is the cell's coarse key→cell map over its *base* tables
+    (DESIGN.md §10); the delta segment inherits the cell's placement, so
+    query-time routing ORs the delta keys' occupancy in on the fly and the
+    map stays exact between compactions.
+    """
+
+    base: pipeline.SLSHIndex  # capacity-padded CSR tables (DESIGN.md §9.1)
+    delta: delta_mod.DeltaIndex
+    occ: jax.Array  # (L_loc, 2**route_bits) bool key→cell map
+
+
+class NodeState(NamedTuple):
+    """One streaming node: a shared point store + its ``p`` stacked cells."""
+
+    store: jax.Array  # (capacity, d) — shared by the node's p cells
+    ts: jax.Array  # (capacity,)
+    cells: CellState  # stacked (p, ...)
+
+
+def node_init(
+    root_key: jax.Array,
+    data_local: jax.Array,
+    cfg: slsh.SLSHConfig,
+    grid: D.Grid,
+    *,
+    capacity: int,
+    delta_cap: int,
+    t0: float = 0.0,
+    route_bits: int = routing.DEFAULT_BITS,
+) -> NodeState:
+    """One node: p cells over a shared store of the node's data slice."""
+    n0, d = data_local.shape
+    assert capacity >= n0, "node capacity below warmup shard size"
+
+    def per_core(core_id):
+        base = D.cell_build(root_key, data_local, core_id, cfg, grid)
+        base = base._replace(outer=stream_index.pad_tables(base.outer, capacity))
+        occ = routing.cell_occupancy(base.outer.sorted_keys, base.n, route_bits)
+        return CellState(
+            base,
+            delta_mod.make_delta(delta_cap, cfg.L_out // grid.p, cfg.L_in),
+            occ,
+        )
+
+    cells = jax.vmap(per_core)(jnp.arange(grid.p, dtype=jnp.int32))
+    store = jnp.zeros((capacity, d), jnp.float32).at[:n0].set(data_local)
+    ts = jnp.zeros((capacity,), jnp.float32).at[:n0].set(jnp.float32(t0))
+    return NodeState(store, ts, cells)
+
+
+def cell_as_stream(cell: CellState, node: NodeState) -> stream_index.StreamIndex:
+    """View one cell as a single-shard StreamIndex (for host maintenance)."""
+    return stream_index.StreamIndex(cell.base, cell.delta, node.store, node.ts)
+
+
+@dataclasses.dataclass
+class IngestReport:
+    """What one :meth:`ShardedStream.ingest` call did (host-side facts).
+
+    ``slots`` are the node-local store rows the batch landed in (after any
+    maintenance) and ``keep`` — set only when maintenance evicted — maps
+    old store rows to survivors (old row ``keep[i]`` became row ``i``), so
+    callers can renumber per-point metadata the same way.
+    """
+
+    node: int  # node the batch was routed to
+    inserted: int  # windows absorbed into the node's delta segment
+    dropped: int  # windows dropped (delta + store both full)
+    compacted: bool  # node compacted before this ingest
+    evicted: int  # stale windows evicted during that compaction
+    slots: np.ndarray  # (inserted,) node-local store rows written
+    keep: np.ndarray | None  # surviving old rows (ascending) when evicted
+
+
+class ShardedStream:
+    """Label-free sharded streaming DSLSH driver (DESIGN.md §9/§11).
+
+    Holds the per-node state list, the jitted insert/query programs, and
+    the round-robin Forwarder cursor. The ``repro.dslsh`` streaming
+    deployment wraps exactly one of these; ``StreamingMonitor`` adds label
+    bookkeeping and rolling AHE metrics on top.
+
+    >>> import jax, numpy as np
+    >>> from repro.core import distributed as D
+    >>> from repro.core import slsh
+    >>> cfg = slsh.SLSHConfig.compose(m_out=8, L_out=4, m_in=4, L_in=2,
+    ...                               alpha=0.05, k=3, val_lo=0.0, val_hi=1.0,
+    ...                               c_max=16, c_in=8, h_max=2, p_max=32,
+    ...                               query_chunk=8, use_inner=False)
+    >>> pts = np.random.default_rng(0).uniform(0, 1, (32, 8)).astype(np.float32)
+    >>> core = ShardedStream(jax.random.PRNGKey(0), pts, cfg, D.Grid(nu=1, p=1),
+    ...                      node_capacity=64, delta_cap=16)
+    >>> rep = core.ingest(pts[:4], t=1.0)
+    >>> (rep.inserted, rep.dropped, core.n_index())
+    (4, 0, 36)
+    >>> res = core.query(pts[:2])  # typed DistributedQueryResult
+    >>> [int(i) for i in res.knn_idx[:, 0]]  # points find themselves
+    [0, 1]
+    """
+
+    def __init__(
+        self,
+        key: jax.Array,
+        init_points,
+        cfg: slsh.SLSHConfig,
+        grid: D.Grid,
+        *,
+        node_capacity: int,
+        delta_cap: int,
+        retention_s: float = float("inf"),
+        t0: float = 0.0,
+        route: bool = True,
+        route_bits: int = routing.DEFAULT_BITS,
+    ):
+        init_points = np.asarray(init_points, np.float32)
+        n0 = init_points.shape[0]
+        assert n0 > 0 and n0 % grid.nu == 0, "warmup set must divide across nodes"
+        self.cfg, self.grid = cfg, grid
+        self.node_capacity, self.delta_cap = node_capacity, delta_cap
+        self.retention_s = retention_s
+        self.route, self.route_bits = route, route_bits
+        # full outer family (the root broadcast the cells slice their
+        # tables from) — the router hashes each query batch against it once
+        self.family = pipeline.make_family(key, init_points.shape[1], cfg)
+        self.rr = 0  # round-robin Forwarder cursor
+        n_loc = n0 // grid.nu
+        data_nodes = jnp.asarray(init_points).reshape(grid.nu, n_loc, -1)
+        self.state = [
+            node_init(
+                key, data_nodes[i], cfg, grid,
+                capacity=node_capacity, delta_cap=delta_cap, t0=t0,
+                route_bits=route_bits,
+            )
+            for i in range(grid.nu)
+        ]
+        self._jit_programs()
+
+    def _jit_programs(self) -> None:
+        self._insert = jax.jit(self._insert_impl)
+        self._query = jax.jit(self._query_impl)
+
+    @classmethod
+    def from_state(
+        cls,
+        state: list[NodeState],
+        family,
+        cfg: slsh.SLSHConfig,
+        grid: D.Grid,
+        *,
+        node_capacity: int,
+        delta_cap: int,
+        retention_s: float = float("inf"),
+        route: bool = True,
+        route_bits: int = routing.DEFAULT_BITS,
+        rr: int = 0,
+    ) -> "ShardedStream":
+        """Rehydrate a driver from restored state (``repro.dslsh.load``)."""
+        self = cls.__new__(cls)
+        self.cfg, self.grid = cfg, grid
+        self.node_capacity, self.delta_cap = node_capacity, delta_cap
+        self.retention_s = retention_s
+        self.route, self.route_bits = route, route_bits
+        self.family = family
+        self.rr = rr
+        self.state = list(state)
+        self._jit_programs()
+        return self
+
+    # ------------------------------------------------------------- jitted
+
+    def _insert_impl(self, node: NodeState, xs, t):
+        """Ingest one batch into one node: every cell hashes the batch with
+        its own table slice; the shared store is written once."""
+        n = node.cells.base.n[0]  # identical across the node's cells
+        room = stream_index.delta_room(self.node_capacity, self.delta_cap, n)
+
+        def per_cell(cell):
+            outer_keys, inner_keys = stream_index.hash_for_insert(
+                cell.base, xs, self.cfg
+            )
+            return CellState(
+                cell.base,
+                delta_mod.append_keys(cell.delta, outer_keys, inner_keys, room),
+                cell.occ,  # base map untouched; delta keys OR in at query time
+            )
+
+        cells = jax.vmap(per_cell)(node.cells)
+        store, ts = stream_index.scatter_rows(
+            node.store, node.ts, n, node.cells.delta.count[0], room, xs, t
+        )
+        return NodeState(store, ts, cells)
+
+    def _node_query(self, node: NodeState, node_id: int, queries, pk):
+        """One node's partial results; ``pk`` is the full-family probe-key
+        tensor reshaped per cell ``(p, Q, L_loc, 1+multiprobe)``."""
+
+        def per_cell(args):
+            cell, pk_cell = args
+            res = pipeline.query_batch(
+                cell.base, node.store, queries, self.cfg,
+                delta=delta_mod.as_view(cell.delta, cell.base.n),
+            )
+            if not self.route:
+                return res, jnp.ones((queries.shape[0],), bool)
+            # delta segments inherit the cell's placement (DESIGN.md §10):
+            # OR the live delta keys' occupancy into the base map, then
+            # route — exact, so masking never changes a prediction
+            cap = cell.delta.outer_keys.shape[0]
+            d_occ = routing.delta_occupancy(
+                cell.delta.outer_keys,
+                jnp.arange(cap) < cell.delta.count,
+                self.route_bits,
+                cell.occ.shape[-1],
+            )
+            routed = routing.route_cell(cell.occ | d_occ, pk_cell)
+            res = pipeline.QueryResult(
+                knn_idx=jnp.where(routed[:, None], res.knn_idx, -1),
+                knn_dist=jnp.where(routed[:, None], res.knn_dist, jnp.inf),
+                comparisons=jnp.where(routed, res.comparisons, 0),
+                bucket_total=res.bucket_total,
+                compaction_overflow=jnp.where(routed, res.compaction_overflow, 0),
+            )
+            return res, routed
+
+        res, routed = jax.lax.map(per_cell, (node.cells, pk))  # stacked over p
+        gidx = jnp.where(
+            res.knn_idx >= 0, res.knn_idx + node_id * self.node_capacity, -1
+        )
+        return res.knn_dist, gidx, res.comparisons, res.compaction_overflow, routed
+
+    def _query_impl(self, state: list[NodeState], queries):
+        q = queries.shape[0]
+        l_loc = self.cfg.L_out // self.grid.p
+        pk = routing.probe_keys(self.family[0], queries, self.cfg)
+        pk = jnp.moveaxis(
+            pk.reshape(q, self.grid.p, l_loc, -1), 0, 1
+        )  # (p, Q, L_loc, 1+multiprobe) — cell c owns family rows [c*L_loc, ...)
+        parts = [
+            self._node_query(nd, i, queries, pk) for i, nd in enumerate(state)
+        ]
+        kd = jnp.stack([p[0] for p in parts])  # (nu, p, Q, K)
+        ki = jnp.stack([p[1] for p in parts])
+        comps = jnp.stack([p[2] for p in parts])
+        overflow = jnp.stack([p[3] for p in parts])  # (nu, p, Q)
+        routed = jnp.stack([p[4] for p in parts])  # (nu, p, Q)
+        kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
+        ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
+        # cells of a node share its points, so the same neighbour can appear
+        # in several partial top-Ks: merge unique-by-index so a weighted
+        # vote never double-counts a point
+        fd, fi = jax.vmap(
+            lambda a, b: topk.masked_unique_topk_smallest(a, b, self.cfg.k)
+        )(kd, ki)
+        return fd, fi, comps, overflow, routed
+
+    # -------------------------------------------------------- maintenance
+
+    def maintain(self, node_idx: int, t: float) -> tuple[int, np.ndarray | None]:
+        """Compact (and, under a retention horizon, evict) one node's cells.
+
+        Returns ``(evicted, keep)``: the number of evicted windows and —
+        when eviction renumbered store rows — the surviving old rows
+        (ascending) so callers can renumber per-point metadata. The
+        keep-set and the store/ts rebuild depend only on the node's shared
+        timestamps, so they are computed once; only the per-cell tables are
+        rebuilt per core."""
+        node = self.state[node_idx]
+        cells = [
+            jax.tree.map(lambda a: a[j], node.cells) for j in range(self.grid.p)
+        ]
+        t_min = t - self.retention_s if np.isfinite(self.retention_s) else None
+        n_tot = int(cells[0].base.n + cells[0].delta.count)
+        keep = (
+            stream_index.retention_keep(node.ts, n_tot, t_min, self.cfg.h_max)
+            if t_min is not None
+            else None
+        )
+        evicted, keep_np = 0, None
+        if keep is not None and keep.shape[0] < n_tot:
+            # evict: rebuild each cell's tables over the kept rows (this
+            # subsumes compaction); store/ts renumber once
+            evicted = n_tot - int(keep.shape[0])
+            keep_np = np.asarray(keep)
+            data = node.store[keep]
+
+            def rebuilt_cell(c):
+                base = pipeline.build_from_params(
+                    data, c.base.outer_params, c.base.inner_params, self.cfg
+                )
+                base = base._replace(
+                    outer=stream_index.pad_tables(base.outer, self.node_capacity)
+                )
+                return CellState(
+                    base,
+                    delta_mod.make_delta(
+                        self.delta_cap, self.cfg.L_out // self.grid.p,
+                        self.cfg.L_in,
+                    ),
+                    routing.cell_occupancy(
+                        base.outer.sorted_keys, base.n, self.route_bits
+                    ),
+                )
+
+            cells = [rebuilt_cell(c) for c in cells]
+            store = jnp.zeros_like(node.store).at[: keep.shape[0]].set(data)
+            ts = jnp.zeros_like(node.ts).at[: keep.shape[0]].set(node.ts[keep])
+        else:
+            store, ts = node.store, node.ts
+            cells = [
+                CellState(
+                    s.base,
+                    s.delta,
+                    routing.cell_occupancy(
+                        s.base.outer.sorted_keys, s.base.n, self.route_bits
+                    ),
+                )
+                for s in (
+                    stream_index.compact(cell_as_stream(c, node), self.cfg)
+                    for c in cells
+                )
+            ]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
+        self.state[node_idx] = NodeState(store, ts, stacked)
+        return evicted, keep_np
+
+    def compact_all(
+        self, t: float = 0.0
+    ) -> list[tuple[int, np.ndarray | None]]:
+        """Compact every node now (folding all delta segments).
+
+        Returns one ``(evicted, keep)`` pair per node: under a retention
+        horizon eviction renumbers store rows, and ``keep`` (old surviving
+        rows, ascending; None when nothing moved) lets callers holding
+        per-point metadata renumber the same way — the same map
+        :class:`IngestReport` carries for pressure-triggered maintenance.
+        """
+        return [self.maintain(i, t) for i in range(self.grid.nu)]
+
+    # ------------------------------------------------------------- stream
+
+    def ingest(self, points, t: float) -> IngestReport:
+        """Route one batch to the next node; auto-compact on pressure."""
+        pts = np.asarray(points, np.float32)
+        b = pts.shape[0]
+        node_idx = self.rr % self.grid.nu
+        self.rr += 1
+
+        def node_fill():
+            cells = self.state[node_idx].cells
+            return int(cells.base.n[0]), int(cells.delta.count[0])
+
+        def room_left(base_n, count):
+            # same formula the jitted insert uses for its drop decision
+            return int(
+                stream_index.delta_room(
+                    self.node_capacity, self.delta_cap, base_n
+                )
+            ) - count
+
+        base_n, count = node_fill()
+        room = room_left(base_n, count)
+        compacted, evicted, keep = False, 0, None
+        if b > room:
+            evicted, keep = self.maintain(node_idx, t)
+            compacted = True
+            base_n, count = node_fill()
+            room = room_left(base_n, count)
+
+        self.state[node_idx] = self._insert(
+            self.state[node_idx], jnp.asarray(pts), jnp.float32(t)
+        )
+        inserted = min(b, max(room, 0))
+        slots = np.arange(base_n + count, base_n + count + inserted)
+        return IngestReport(
+            node=node_idx, inserted=inserted, dropped=b - inserted,
+            compacted=compacted, evicted=evicted, slots=slots, keep=keep,
+        )
+
+    def query(self, queries) -> D.DistributedQueryResult:
+        """Resolve queries against the live sharded index -> typed result."""
+        q = jnp.asarray(np.asarray(queries, np.float32))
+        kd, ki, comps, overflow, routed = self._query(self.state, q)
+        return D.DistributedQueryResult(kd, ki, comps, overflow, routed)
+
+    def n_index(self) -> int:
+        """Points queryable right now, across all nodes."""
+        return sum(
+            int(nd.cells.base.n[0] + nd.cells.delta.count[0])
+            for nd in self.state
+        )

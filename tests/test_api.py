@@ -1,0 +1,392 @@
+"""Deployment-API (repro.dslsh) acceptance suite — DESIGN.md §11.
+
+Covers the §11 contract end to end:
+
+* every deployment kind answers ``.query()`` with the one typed
+  ``DistributedQueryResult``, bit-identical to the pre-redesign execution
+  paths (both backends, replication r in {1, 2}, routed and broadcast);
+* the deprecated entry points (``simulate_query``, ``dslsh_query``, flat
+  ``SLSHConfig(...)``) fire ``DeprecationWarning`` and match the new API
+  bit-exactly;
+* the composed config validation rejects silently-broken configs with
+  actionable messages;
+* ``save``/``load`` round-trips are bit-exact across deployments.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro import dslsh  # noqa: E402
+from repro.core import distributed as D  # noqa: E402
+from repro.core import pipeline, slsh  # noqa: E402
+
+
+def _cfg(**kw):
+    base = dict(
+        m_out=10, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5, val_lo=0.0,
+        val_hi=1.0, c_max=32, c_in=8, h_max=4, p_max=64, build_chunk=128,
+        query_chunk=8,
+    )
+    base.update(kw)
+    return slsh.SLSHConfig.compose(**base)
+
+
+def _data(n=256, d=8, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (n, d))
+
+
+def _assert_result_equal(res: D.DistributedQueryResult, kd, ki, comps, ovf):
+    np.testing.assert_array_equal(np.asarray(res.knn_dist), np.asarray(kd))
+    np.testing.assert_array_equal(np.asarray(res.knn_idx), np.asarray(ki))
+    np.testing.assert_array_equal(np.asarray(res.comparisons), np.asarray(comps))
+    np.testing.assert_array_equal(
+        np.asarray(res.compaction_overflow), np.asarray(ovf)
+    )
+
+
+# ------------------------------------------------ typed-result equivalence
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_single_deployment_matches_legacy_path(backend):
+    cfg = _cfg(backend=backend)
+    data = _data()
+    q = data[:6]
+    index = dslsh.build(jax.random.PRNGKey(1), data, cfg, dslsh.single())
+    res = index.query(q)
+    legacy_idx = slsh.build_index(jax.random.PRNGKey(1), data, cfg)
+    legacy = slsh.query_batch(legacy_idx, data, q, cfg)
+    _assert_result_equal(
+        res, legacy.knn_dist, legacy.knn_idx,
+        legacy.comparisons[None, None], legacy.compaction_overflow[None, None],
+    )
+    assert res.comparisons.shape == (1, 1, 6)
+    assert res.routed_frac == 1.0
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("replication,routed", [(1, False), (1, True), (2, True)])
+def test_grid_deployment_matches_legacy_paths(backend, replication, routed):
+    """Acceptance: grid .query() == simulate_query / simulate_query_routed
+    bit-exactly, both backends, r in {1, 2}, routed and broadcast."""
+    cfg = _cfg(backend=backend)
+    data = _data()
+    q = data[:6]
+    deploy = dslsh.grid(nu=2, p=2, replication=replication, routed=routed)
+    index = dslsh.build(jax.random.PRNGKey(1), data, cfg, deploy)
+    res = index.query(q)
+
+    legacy_idx = D.simulate_build(jax.random.PRNGKey(1), data, cfg, deploy.grid)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        if routed:
+            from repro.core import routing
+
+            plan = routing.make_plan(
+                legacy_idx, cfg, deploy.grid, replication=replication
+            )
+            legacy = D.simulate_query_routed(
+                legacy_idx, data, q, cfg, deploy.grid, plan
+            )
+        else:
+            legacy = D.simulate_query(legacy_idx, data, q, cfg, deploy.grid)
+    _assert_result_equal(res, *legacy)
+    # routed and broadcast answers agree bit-exactly too (§10)
+    broadcast = dslsh.build(
+        jax.random.PRNGKey(1), data, cfg, dslsh.grid(nu=2, p=2)
+    ).query(q)
+    _assert_result_equal(
+        res, broadcast.knn_dist, broadcast.knn_idx, broadcast.comparisons,
+        broadcast.compaction_overflow,
+    )
+
+
+def test_mesh_deployment_matches_grid():
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = _cfg()
+    data = _data()
+    q = data[:4]
+    m = dslsh.build(
+        jax.random.PRNGKey(1), data, cfg, dslsh.mesh(make_local_mesh(1, 1))
+    )
+    g = dslsh.build(jax.random.PRNGKey(1), data, cfg, dslsh.grid(nu=1, p=1))
+    _assert_result_equal(m.query(q), *g.query(q)[:4])
+
+
+def test_streaming_deployment_matches_stream_index():
+    """A 1x1 streaming handle answers exactly like the single-shard
+    StreamIndex it wraps (same key -> same family -> same buckets)."""
+    from repro import stream
+
+    cfg = _cfg(use_inner=False)
+    data = _data(n=96)
+    extra = _data(n=16, seed=3)
+    q = _data(n=8, seed=4)
+    handle = dslsh.build(
+        jax.random.PRNGKey(1), data, cfg,
+        dslsh.streaming(nu=1, p=1, node_capacity=128, delta_cap=32),
+    )
+    handle.ingest(extra, ts=1.0)
+    res = handle.query(q)
+
+    sidx = stream.stream_init(
+        jax.random.PRNGKey(1), data, cfg, capacity=128, delta_cap=32
+    )
+    sidx = stream.insert_batch(sidx, extra, cfg, t=1.0)
+    ref = stream.query_batch(sidx, q, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(res.knn_idx), np.asarray(ref.knn_idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.knn_dist), np.asarray(ref.knn_dist)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.comparisons[0, 0]), np.asarray(ref.comparisons)
+    )
+
+
+def test_grid_drop_mask_matches_legacy():
+    cfg = _cfg()
+    data = _data()
+    q = data[:5]
+    index = dslsh.build(jax.random.PRNGKey(1), data, cfg, dslsh.grid(nu=2, p=2))
+    drop = jnp.asarray([True, False])
+    res = index.query(q, drop_mask=drop)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = D.simulate_query(
+            index._state["index"], data, q, cfg, index.grid, drop_mask=drop
+        )
+    _assert_result_equal(res, *legacy)
+
+
+def test_budget_degrade_caps_cells():
+    cfg = _cfg()
+    data = _data()
+    q = data[:6]
+    index = dslsh.build(
+        jax.random.PRNGKey(1), data, cfg,
+        dslsh.grid(nu=2, p=2, routed=True, degrade=((0.05, None), (0.0, 1))),
+    )
+    full = index.query(q, budget=1.0)
+    capped = index.query(q, budget=0.001)
+    routed_full = np.asarray(full.routed).sum(axis=(0, 1))
+    routed_capped = np.asarray(capped.routed).sum(axis=(0, 1))
+    assert (routed_capped <= np.minimum(routed_full, 1)).all()
+
+
+# --------------------------------------------------------------- shims
+
+
+def test_simulate_query_warns_and_matches_new_api():
+    cfg = _cfg()
+    data = _data()
+    q = data[:4]
+    index = dslsh.build(jax.random.PRNGKey(1), data, cfg, dslsh.grid(nu=2, p=2))
+    res = index.query(q)
+    with pytest.warns(DeprecationWarning, match="simulate_query is deprecated"):
+        legacy = D.simulate_query(index._state["index"], data, q, cfg, index.grid)
+    _assert_result_equal(res, *legacy)
+
+
+def test_dslsh_query_warns_and_matches_new_api():
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = _cfg()
+    data = _data()
+    q = data[:4]
+    mesh = make_local_mesh(1, 1)
+    index = dslsh.build(jax.random.PRNGKey(1), data, cfg, dslsh.mesh(mesh))
+    res = index.query(q)
+    with pytest.warns(DeprecationWarning, match="dslsh_query is deprecated"):
+        legacy = D.dslsh_query(
+            mesh, index._state["index"], data, q, cfg, index.grid
+        )
+    _assert_result_equal(res, *legacy)
+
+
+def test_flat_config_warns_and_matches_composed():
+    kw = dict(m_out=10, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5, val_lo=0.0,
+              val_hi=1.0, c_max=32, c_in=8, h_max=4, p_max=64)
+    with pytest.warns(DeprecationWarning, match="flat keywords is deprecated"):
+        flat = slsh.SLSHConfig(**kw)
+    composed = slsh.SLSHConfig.compose(**kw)
+    assert flat == composed
+    # and the flat config still drives a bit-identical query
+    data = _data(n=64)
+    i1 = slsh.build_index(jax.random.PRNGKey(0), data, flat)
+    i2 = slsh.build_index(jax.random.PRNGKey(0), data, composed)
+    r1 = slsh.query_batch(i1, data, data[:3], flat)
+    r2 = slsh.query_batch(i2, data, data[:3], composed)
+    np.testing.assert_array_equal(np.asarray(r1.knn_idx), np.asarray(r2.knn_idx))
+
+
+def test_composed_paths_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = slsh.SLSHConfig.compose(
+            slsh.FamilyConfig(m_out=8, L_out=4), slsh.BudgetConfig(k=3)
+        )
+        cfg.replace(backend="pallas")
+        dslsh.make_config(m_out=8, L_out=4, k=3)
+
+
+# ----------------------------------------------------- config validation
+
+
+@pytest.mark.parametrize(
+    "kw,match",
+    [
+        (dict(c_comp=3, k=5), "compacted distance buffer cannot hold k"),
+        (dict(h_max=0, use_inner=True), "silently never fire"),
+        (dict(alpha=0.0), "must lie in \\(0, 1\\]"),
+        (dict(alpha=1.5), "must lie in \\(0, 1\\]"),
+        (dict(val_lo=2.0, val_hi=1.0), "non-empty range"),
+        (dict(multiprobe=64, m_out=16), "flips one distinct signature bit"),
+        (dict(m_out=0), "at least one bit and one table"),
+        (dict(L_out=0), "at least one bit and one table"),
+        (dict(m_in=0, use_inner=True), "set use_inner=False"),
+        (dict(c_in=0), "inner-layer budgets"),
+        (dict(k=0), "at least one neighbour"),
+        (dict(c_max=0), "at least one candidate"),
+        (dict(backend="tpu9"), "unknown SLSH backend"),
+        (dict(query_chunk=0), "chunk sizes must be >= 1"),
+        (dict(nonsense=1), "unknown SLSH config field"),
+    ],
+)
+def test_config_validation_messages(kw, match):
+    with pytest.raises(pipeline.ConfigError, match=match):
+        slsh.SLSHConfig.compose(**kw)
+
+
+def test_m_out_non_word_multiple_is_valid_and_exact():
+    """The pack word is 32 bits, but ``hashing.pack_bits`` zero-pads the
+    last signature word, so ``m_out`` need *not* be a word multiple (the
+    paper defaults 125/65 depend on that) — validation must accept it and
+    both backends must stay bit-identical on such widths."""
+    cfg_r = _cfg(m_out=13, use_inner=False)  # deliberately not 32-aligned
+    cfg_p = cfg_r.replace(backend="pallas")
+    data = _data(n=64)
+    idx = slsh.build_index(jax.random.PRNGKey(0), data, cfg_r)
+    r_ref = slsh.query_batch(idx, data, data[:4], cfg_r)
+    r_pal = slsh.query_batch(idx, data, data[:4], cfg_p)
+    np.testing.assert_array_equal(
+        np.asarray(r_ref.knn_idx), np.asarray(r_pal.knn_idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_ref.comparisons), np.asarray(r_pal.comparisons)
+    )
+
+
+def test_deployment_validation_messages():
+    with pytest.raises(pipeline.ConfigError, match="node_capacity"):
+        dslsh.streaming(nu=1, p=1, node_capacity=0)
+    with pytest.raises(pipeline.ConfigError, match="routed=True"):
+        dslsh.Deployment(kind="grid", replication=2)
+    with pytest.raises(pipeline.ConfigError, match="unknown deployment kind"):
+        dslsh.Deployment(kind="cloud")
+    with pytest.raises(pipeline.ConfigError, match="jax device mesh"):
+        dslsh.Deployment(kind="mesh")
+    cfg = _cfg()
+    with pytest.raises(pipeline.ConfigError, match="does not divide across"):
+        dslsh.build(jax.random.PRNGKey(0), _data(n=250), cfg, dslsh.grid(nu=4))
+    with pytest.raises(pipeline.ConfigError, match="L_out=8 does not divide"):
+        dslsh.build(jax.random.PRNGKey(0), _data(), cfg, dslsh.grid(nu=1, p=3))
+    index = dslsh.build(jax.random.PRNGKey(0), _data(), cfg, dslsh.grid(nu=2))
+    with pytest.raises(pipeline.ConfigError, match="ingest"):
+        index.ingest(_data(n=4))
+    with pytest.raises(pipeline.ConfigError, match="max_cells requires a routed"):
+        index.query(_data(n=4), max_cells=1)
+
+
+# ----------------------------------------------------------- persistence
+
+
+def _roundtrip(index, q, tmp_path, name):
+    path = str(tmp_path / name)
+    index.save(path)
+    back = dslsh.load(path)
+    a, b = index.query(q), back.query(q)
+    _assert_result_equal(a, b.knn_dist, b.knn_idx, b.comparisons,
+                         b.compaction_overflow)
+    np.testing.assert_array_equal(np.asarray(a.routed), np.asarray(b.routed))
+    return back
+
+
+def test_save_load_single(tmp_path):
+    cfg = _cfg()
+    data = _data()
+    index = dslsh.build(jax.random.PRNGKey(1), data, cfg, dslsh.single())
+    _roundtrip(index, data[:5], tmp_path, "single")
+
+
+def test_save_load_grid_replicated(tmp_path):
+    cfg = _cfg()
+    data = _data()
+    index = dslsh.build(
+        jax.random.PRNGKey(1), data, cfg, dslsh.grid(nu=2, p=2, replication=2)
+    )
+    back = _roundtrip(index, data[:5], tmp_path, "grid_r2")
+    assert back.plan is not None and back.plan.r_max == 2
+    assert back.deploy == index.deploy
+
+
+def test_save_load_streaming_pre_and_post_compact(tmp_path):
+    cfg = _cfg(use_inner=False)
+    data = _data(n=96)
+    extra = _data(n=24, seed=7)
+    q = _data(n=8, seed=8)
+    index = dslsh.build(
+        jax.random.PRNGKey(1), data, cfg,
+        dslsh.streaming(nu=2, p=2, node_capacity=128, delta_cap=32),
+    )
+    index.ingest(extra, ts=1.0)
+    back = _roundtrip(index, q, tmp_path, "stream_pre")  # pre-compact
+    # the restored handle keeps streaming: same Forwarder cursor, so the
+    # next ingest lands on the same node in both
+    r1 = index.ingest(extra, ts=2.0)
+    r2 = back.ingest(extra, ts=2.0)
+    assert (r1.node, r1.inserted) == (r2.node, r2.inserted)
+    _assert_result_equal(index.query(q), *back.query(q)[:4])
+    index.compact(3.0)
+    _roundtrip(index, q, tmp_path, "stream_post")  # post-compact
+
+
+# ------------------------------------------------------------- layering
+
+
+def test_no_internal_callers_of_deprecated_entry_points():
+    """Acceptance: no non-test module outside repro.api calls
+    simulate_query / dslsh_query directly (the shims exist only for
+    external callers)."""
+    import os
+    import re
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    offenders = []
+    pat = re.compile(r"\b(simulate_query|dslsh_query)\s*\(")
+    for base in ("src/repro", "examples", "benchmarks"):
+        for dirpath, _, files in os.walk(os.path.join(root, base)):
+            for fname in files:
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, root)
+                if rel.replace(os.sep, "/").startswith(
+                    "src/repro/core/distributed"
+                ):
+                    continue  # definitions + shims live here
+                text = open(path).read()
+                for m in pat.finditer(text):
+                    line = text[: m.start()].count("\n") + 1
+                    offenders.append(f"{rel}:{line}")
+    assert not offenders, (
+        "deprecated entry points called outside repro.core.distributed: "
+        + ", ".join(offenders)
+    )

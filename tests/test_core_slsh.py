@@ -145,7 +145,7 @@ def _small_cfg(**kw):
         build_chunk=256, query_chunk=16,
     )
     base.update(kw)
-    return slsh.SLSHConfig(**base)
+    return slsh.SLSHConfig.compose(**base)
 
 
 def test_slsh_recall_on_clustered_data():
@@ -201,15 +201,13 @@ def test_empty_bucket_query_well_formed(backend):
     """A query whose probed buckets hold zero points must return sentinel
     top-K (-1 idx, inf dist) and zero candidate stats on every path —
     single-shard, distributed cell, and streaming — not incidental padding."""
-    import dataclasses
-
     from repro.core import distributed as D
     from repro import stream
 
     # data lives in [0, 0.4]; a far-outside query hashes to the all-ones
     # signature, which no data point can reach => every probed bucket empty
     data = 0.4 * jax.random.uniform(jax.random.PRNGKey(0), (256, 8))
-    cfg = dataclasses.replace(_small_cfg(L_out=8, L_in=4), backend=backend)
+    cfg = _small_cfg(L_out=8, L_in=4).replace(backend=backend)
     q = jnp.full((3, 8), 5000.0)
 
     index = slsh.build_index(jax.random.PRNGKey(1), data, cfg)

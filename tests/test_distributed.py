@@ -27,7 +27,7 @@ def _cfg(**kw):
         build_chunk=128, query_chunk=8,
     )
     base.update(kw)
-    return slsh.SLSHConfig(**base)
+    return slsh.SLSHConfig.compose(**base)
 
 
 def _data(n=512, d=12, seed=1):
@@ -137,7 +137,7 @@ def test_shard_map_matches_simulation_8dev():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import distributed as D, slsh
-        cfg = slsh.SLSHConfig(m_out=10, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5,
+        cfg = slsh.SLSHConfig.compose(m_out=10, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5,
                               val_lo=0., val_hi=1., c_max=32, c_in=8, h_max=4,
                               p_max=64, build_chunk=128, query_chunk=8)
         grid = D.Grid(nu=2, p=4)

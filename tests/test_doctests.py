@@ -14,6 +14,7 @@ import pytest
 
 jax.config.update("jax_platform_name", "cpu")
 
+import repro.api  # noqa: E402
 import repro.core.distributed  # noqa: E402
 import repro.core.pipeline  # noqa: E402
 import repro.core.routing  # noqa: E402
@@ -22,13 +23,16 @@ import repro.launch.mesh  # noqa: E402
 import repro.serve.engine  # noqa: E402
 import repro.stream.index  # noqa: E402
 import repro.stream.monitor  # noqa: E402
+import repro.stream.shard  # noqa: E402
 
 MODULES = (
+    repro.api,
     repro.core.slsh,
     repro.core.pipeline,
     repro.core.routing,
     repro.core.distributed,
     repro.stream.index,
+    repro.stream.shard,
     repro.stream.monitor,
     repro.serve.engine,
     repro.launch.mesh,
@@ -55,11 +59,13 @@ def test_documented_modules_have_doctests():
         and any(t.examples for t in doctest.DocTestFinder().find(m))
     ]
     for required in (
+        "repro.api",
         "repro.core.slsh",
         "repro.core.pipeline",
         "repro.core.routing",
         "repro.core.distributed",
         "repro.stream.index",
+        "repro.stream.shard",
         "repro.stream.monitor",
     ):
         assert required in with_examples, f"{required} lost its doctests"

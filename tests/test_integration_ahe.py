@@ -36,7 +36,7 @@ def test_dataset_has_paper_like_imbalance(ahe_setup):
 
 def test_dslsh_speedup_with_bounded_mcc_loss(ahe_setup):
     s = ahe_setup
-    cfg = slsh.SLSHConfig(
+    cfg = slsh.SLSHConfig.compose(
         m_out=30, L_out=24, m_in=12, L_in=4, alpha=0.01, k=10,
         val_lo=20.0, val_hi=180.0, c_max=128, c_in=32, h_max=8, p_max=256,
         build_chunk=2048, query_chunk=32,
@@ -65,17 +65,15 @@ def test_dslsh_speedup_with_bounded_mcc_loss(ahe_setup):
 def test_backend_pallas_identical_on_ahe_data(ahe_setup):
     """backend="pallas" (interpret) must reproduce the reference pipeline's
     knn_idx/knn_dist exactly on the AHE windows (hash_pack + l1_topk route)."""
-    import dataclasses
-
     s = ahe_setup
     pts = s["points"][:2048]
     qx = s["qx"][:16]
-    cfg = slsh.SLSHConfig(
+    cfg = slsh.SLSHConfig.compose(
         m_out=24, L_out=8, m_in=12, L_in=4, alpha=0.01, k=10,
         val_lo=20.0, val_hi=180.0, c_max=128, c_in=32, h_max=4, p_max=128,
         build_chunk=1024, query_chunk=16,
     )
-    cfg_p = dataclasses.replace(cfg, backend="pallas")
+    cfg_p = cfg.replace(backend="pallas")
     idx_r = slsh.build_index(jax.random.PRNGKey(1), pts, cfg)
     idx_p = slsh.build_index(jax.random.PRNGKey(1), pts, cfg_p)
     np.testing.assert_array_equal(
@@ -90,7 +88,7 @@ def test_backend_pallas_identical_on_ahe_data(ahe_setup):
 def test_parallelism_does_not_change_predictions(ahe_setup):
     """Paper §4: 'parallelism does not influence the prediction output'."""
     s = ahe_setup
-    cfg = slsh.SLSHConfig(
+    cfg = slsh.SLSHConfig.compose(
         m_out=24, L_out=8, m_in=12, L_in=4, alpha=0.01, k=10,
         val_lo=20.0, val_hi=180.0, c_max=128, c_in=32, h_max=4, p_max=128,
         build_chunk=2048, query_chunk=32,

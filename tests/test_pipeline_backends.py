@@ -6,7 +6,6 @@
 including multiprobe and ``use_inner=False`` configs. Also pins the shared
 builder: ``cell_build`` on a 1x1 grid must equal ``build_index`` exactly.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,7 @@ def _cfg(**kw):
         build_chunk=200, query_chunk=16,
     )
     base.update(kw)
-    return slsh.SLSHConfig(**base)
+    return slsh.SLSHConfig.compose(**base)
 
 
 def _data(n=512, d=12, seed=0):
@@ -53,7 +52,7 @@ def test_build_index_backends_identical(kw):
     """Pallas and reference builds must produce identical indices."""
     data = _data()
     cfg_r = _cfg(**kw)
-    cfg_p = dataclasses.replace(cfg_r, backend="pallas")
+    cfg_p = cfg_r.replace(backend="pallas")
     idx_r = slsh.build_index(jax.random.PRNGKey(1), data, cfg_r)
     idx_p = slsh.build_index(jax.random.PRNGKey(1), data, cfg_p)
     _assert_trees_equal(idx_r, idx_p)
@@ -64,7 +63,7 @@ def test_query_batch_backends_identical(kw):
     """Same index, both query backends: identical top-k and metrics."""
     data = _data()
     cfg_r = _cfg(**kw)
-    cfg_p = dataclasses.replace(cfg_r, backend="pallas")
+    cfg_p = cfg_r.replace(backend="pallas")
     idx = slsh.build_index(jax.random.PRNGKey(1), data, cfg_r)
     q = data[:24] + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (24, 12))
     res_r = slsh.query_batch(idx, data, q, cfg_r)
@@ -125,7 +124,7 @@ def test_simulate_query_backend_identical():
     """The distributed (simulated) path honours cfg.backend end-to-end."""
     data = _data()
     cfg_r = _cfg()
-    cfg_p = dataclasses.replace(cfg_r, backend="pallas")
+    cfg_p = cfg_r.replace(backend="pallas")
     grid = D.Grid(nu=2, p=2)
     idx = D.simulate_build(jax.random.PRNGKey(0), data, cfg_r, grid)
     q = data[:8]
@@ -146,7 +145,7 @@ def test_compaction_budget_is_exact_and_counts_overflow(backend):
     cfg = _cfg(backend=backend)
     idx = slsh.build_index(jax.random.PRNGKey(1), data, cfg)
     q = data[:24] + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (24, 12))
-    res_full = slsh.query_batch(idx, data, q, dataclasses.replace(cfg, c_comp=0))
+    res_full = slsh.query_batch(idx, data, q, cfg.replace(c_comp=0))
     assert (np.asarray(res_full.compaction_overflow) == 0).all()
 
     # ample budget (the default covers min(n, gather width)): identical
@@ -155,7 +154,7 @@ def test_compaction_budget_is_exact_and_counts_overflow(backend):
 
     # binding budget: comparisons untouched, overflow counted, k-NN results
     # restricted to the c_comp smallest-index survivors (deterministic)
-    tiny = dataclasses.replace(cfg, c_comp=16)
+    tiny = cfg.replace(c_comp=16)
     res_t = slsh.query_batch(idx, data, q, tiny)
     np.testing.assert_array_equal(
         np.asarray(res_t.comparisons), np.asarray(res_full.comparisons)
@@ -168,9 +167,12 @@ def test_compaction_budget_is_exact_and_counts_overflow(backend):
 
 
 def test_unknown_backend_raises():
-    cfg = _cfg(backend="tpu-v9")
+    # rejected at config construction now (§11.2), not at first build
     with pytest.raises(ValueError, match="unknown SLSH backend"):
-        slsh.build_index(jax.random.PRNGKey(0), _data(n=64), cfg)
+        _cfg(backend="tpu-v9")
+    # the build-time guard still covers configs that bypass validation
+    with pytest.raises(ValueError, match="unknown SLSH backend"):
+        pipeline.get_backend("tpu-v9")
 
 
 def test_backend_registry_contract():

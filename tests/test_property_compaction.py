@@ -8,7 +8,6 @@ metric is computed before compaction, so the budget never changes it.
 Checked at the stage level on adversarial candidate rows and end-to-end on
 both compute backends, with and without a streaming ``DeltaView``.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -74,12 +73,12 @@ def test_query_compaction_is_exact_and_counts_overflow(setup):
     seed, n, n_stream, backend, use_inner, c_comp = setup
     d = 8
     data = jax.random.uniform(jax.random.PRNGKey(seed), (n + n_stream, d))
-    cfg = slsh.SLSHConfig(
+    cfg = slsh.SLSHConfig.compose(
         m_out=8, L_out=4, m_in=6, L_in=2, alpha=0.05, k=4, use_inner=use_inner,
         val_lo=0.0, val_hi=1.0, c_max=32, c_in=8, h_max=2, p_max=64,
         build_chunk=64, query_chunk=8, backend=backend, c_comp=c_comp,
     )
-    cfg_full = dataclasses.replace(cfg, c_comp=0)
+    cfg_full = cfg.replace(c_comp=0)
     q = data[:6]
 
     if n_stream:

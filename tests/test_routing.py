@@ -31,7 +31,7 @@ def _cfg(**kw):
         build_chunk=128, query_chunk=8,
     )
     base.update(kw)
-    return slsh.SLSHConfig(**base)
+    return slsh.SLSHConfig.compose(**base)
 
 
 def _clustered(n=512, d=12, seed=1):
@@ -330,13 +330,13 @@ def test_dslsh_routed_matches_simulation_multidevice():
 
         # 8 cells, r=1
         check(make_local_mesh(4, 2), D.Grid(nu=4, p=2),
-              slsh.SLSHConfig(L_out=8, **base), data[:10], 1)
+              slsh.SLSHConfig.compose(L_out=8, **base), data[:10], 1)
         # non-power-of-two: 6 cells
         check(make_local_mesh(2, 3), D.Grid(nu=2, p=3),
-              slsh.SLSHConfig(L_out=6, **base), data[:9], 1)
+              slsh.SLSHConfig.compose(L_out=6, **base), data[:9], 1)
         # replicated mesh: rep=2 over a 2x2 grid
         check(make_replicated_mesh(2, 2, 2), D.Grid(nu=2, p=2),
-              slsh.SLSHConfig(L_out=8, **base), data[:8], 2)
+              slsh.SLSHConfig.compose(L_out=8, **base), data[:8], 2)
         print("OK")
         """
     )

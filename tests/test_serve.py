@@ -60,13 +60,11 @@ def test_multiprobe_recovers_neighbors_with_fewer_tables():
     """Probing must increase (or keep) candidate counts vs no probing."""
     key = jax.random.PRNGKey(2)
     data = jax.random.uniform(key, (512, 8))
-    cfg0 = slsh.SLSHConfig(
+    cfg0 = slsh.SLSHConfig.compose(
         m_out=14, L_out=4, m_in=6, L_in=2, alpha=0.05, k=5, val_lo=0.0,
         val_hi=1.0, c_max=32, c_in=8, h_max=2, p_max=64, use_inner=False,
     )
-    import dataclasses
-
-    cfg2 = dataclasses.replace(cfg0, multiprobe=2)
+    cfg2 = cfg0.replace(multiprobe=2)
     idx0 = slsh.build_index(jax.random.PRNGKey(3), data, cfg0)
     idx2 = slsh.build_index(jax.random.PRNGKey(3), data, cfg2)
     q = data[:16] + 0.02 * jax.random.normal(jax.random.PRNGKey(4), (16, 8))
@@ -82,26 +80,59 @@ def test_multiprobe_recovers_neighbors_with_fewer_tables():
 def test_make_knn_lm_hook_wires_retrieval():
     """The hook must pull neighbours from the SLSH datastore and shift the
     LM distribution toward their next-token labels."""
-    from repro.core import distributed as D
+    from repro import dslsh
 
     d, vocab = 8, 16
     key = jax.random.PRNGKey(0)
     pts = jax.random.uniform(key, (256, d))
     labels = jnp.full((256,), 11, jnp.int32)  # every neighbour votes token 11
-    grid = D.Grid(nu=2, p=2)
-    cfg = slsh.SLSHConfig(
+    cfg = slsh.SLSHConfig.compose(
         m_out=10, L_out=4, m_in=6, L_in=2, alpha=0.05, k=4, val_lo=0.0,
         val_hi=1.0, c_max=32, c_in=8, h_max=2, p_max=64, query_chunk=4,
     )
-    index = D.simulate_build(jax.random.PRNGKey(1), pts, cfg, grid)
+    index = dslsh.build(jax.random.PRNGKey(1), pts, cfg, dslsh.grid(nu=2, p=2))
     hook = engine.make_knn_lm_hook(
-        index, pts, labels, cfg, grid,
+        index, labels,
         hidden_fn=lambda carrier: carrier["h"],  # explicit hidden-state closure
         vocab=vocab, lmbda=0.5,
     )
     logits = jnp.zeros((3, vocab))
     out = hook(logits, {"h": pts[:3]})  # datastore points query themselves
     assert (np.asarray(jnp.argmax(out, -1)) == 11).all()
+
+
+def test_make_knn_lm_hook_legacy_signature_warns_and_matches():
+    """The pre-§11 positional hook form keeps working one release with a
+    DeprecationWarning and identical retrieval."""
+    import warnings
+
+    from repro import dslsh
+    from repro.core import distributed as D
+
+    d, vocab = 8, 16
+    pts = jax.random.uniform(jax.random.PRNGKey(0), (128, d))
+    labels = jnp.arange(128, dtype=jnp.int32) % vocab
+    cfg = slsh.SLSHConfig.compose(
+        m_out=10, L_out=4, m_in=6, L_in=2, alpha=0.05, k=4, val_lo=0.0,
+        val_hi=1.0, c_max=32, c_in=8, h_max=2, p_max=64, query_chunk=4,
+    )
+    grid = D.Grid(nu=2, p=2)
+    handle = dslsh.build(jax.random.PRNGKey(1), pts, cfg, dslsh.grid(nu=2, p=2))
+    new_hook = engine.make_knn_lm_hook(
+        handle, labels, hidden_fn=lambda c: c, vocab=vocab, lmbda=0.5
+    )
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy_hook = engine.make_knn_lm_hook(
+            handle._state["index"], pts, labels, cfg, grid,
+            hidden_fn=lambda c: c, vocab=vocab, lmbda=0.5,
+        )
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    logits = jnp.zeros((3, vocab))
+    np.testing.assert_array_equal(
+        np.asarray(new_hook(logits, pts[:3])),
+        np.asarray(legacy_hook(logits, pts[:3])),
+    )
 
 
 def test_serve_engine_deadline_mid_decode():

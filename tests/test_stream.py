@@ -28,7 +28,7 @@ def _cfg(**kw):
         build_chunk=200, query_chunk=16,
     )
     base.update(kw)
-    return slsh.SLSHConfig(**base)
+    return slsh.SLSHConfig.compose(**base)
 
 
 def _uniform(n=512, d=12, seed=0):

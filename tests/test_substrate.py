@@ -174,7 +174,7 @@ def test_elastic_reshard_preserves_retrieval():
     key = jax.random.PRNGKey(0)
     pts = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (512, 8)))
     labs = np.zeros(512, np.int8)
-    cfg = slsh.SLSHConfig(
+    cfg = slsh.SLSHConfig.compose(
         m_out=10, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5, val_lo=0.0, val_hi=1.0,
         c_max=64, c_in=8, h_max=4, p_max=64, build_chunk=128, query_chunk=8,
     )
