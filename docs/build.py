@@ -46,6 +46,7 @@ MODULES: tuple[str, ...] = (
     "repro.kernels.blocking",
     "repro.kernels.hash_pack.ops",
     "repro.kernels.l1_topk.ops",
+    "repro.kernels.query_fused.ops",
     "repro.kernels.flash_attention.ops",
 )
 

@@ -111,23 +111,25 @@ def hash_points(params: HashParams, x: jax.Array) -> jax.Array:
     return keys.T
 
 
-def probe_keys_from_words(
-    params: BitSampleParams, x: jax.Array, words: jax.Array, n_probes: int
+def probe_keys_from_margins(
+    params: BitSampleParams,
+    words: jax.Array,
+    margins: jax.Array,
+    n_probes: int,
 ) -> jax.Array:
-    """Batched multiprobe keys from precomputed signature words.
+    """Batched multiprobe keys from signature words + quantizer margins.
 
-    ``x`` (n, d) and its packed signatures ``words`` (n, L, W) — computed by
-    either compute backend (DESIGN.md §6) — yield (n, L, 1 + n_probes)
-    uint32 keys: the base bucket key first, then the keys obtained by
-    flipping the ``n_probes`` lowest-margin bits (margin = |x[dim] - thr|,
-    the distance to the quantizer boundary) — the classic multiprobe-LSH
-    heuristic adapted to the bit-sampling family.
+    ``words`` (n, L, W) and ``margins`` (n, L, m) — both emitted by one
+    fused hash launch on the pallas backend (``hash_pack`` margins kernels,
+    DESIGN.md §4) — yield (n, L, 1 + n_probes) uint32 keys: the base bucket
+    key first, then the keys obtained by flipping the ``n_probes``
+    lowest-margin bits (margin = |x[dim] - thr|, the distance to the
+    quantizer boundary) — the classic multiprobe-LSH heuristic adapted to
+    the bit-sampling family.
     """
     base = mix32(words, params.salts[None, :])  # (n, L)
     if n_probes == 0:
         return base[..., None]
-    gathered = x[:, params.dims]  # (n, L, m)
-    margins = jnp.abs(gathered - params.thrs[None])  # (n, L, m)
     _, flip_idx = jax.lax.top_k(-margins, n_probes)  # (n, L, n_probes)
     w_idx = flip_idx // 32
     b_idx = (flip_idx % 32).astype(jnp.uint32)
@@ -139,6 +141,23 @@ def probe_keys_from_words(
     probed = words[:, :, None, :] ^ onehot
     keys = mix32(probed, params.salts[None, :, None])  # (n, L, n_probes)
     return jnp.concatenate([base[..., None], keys], axis=-1)
+
+
+def probe_keys_from_words(
+    params: BitSampleParams, x: jax.Array, words: jax.Array, n_probes: int
+) -> jax.Array:
+    """Batched multiprobe keys from precomputed signature words.
+
+    The reference formulation: recompute the quantizer margins from ``x``
+    (n, d) and delegate to :func:`probe_keys_from_margins`. The pallas
+    backend skips the recomputation — its fused hash launch emits the
+    margins alongside the words (``kernels/hash_pack``).
+    """
+    if n_probes == 0:
+        return probe_keys_from_margins(params, words, words[..., :0], 0)
+    gathered = x[:, params.dims]  # (n, L, m)
+    margins = jnp.abs(gathered - params.thrs[None])  # (n, L, m)
+    return probe_keys_from_margins(params, words, margins, n_probes)
 
 
 def probe_keys_bitsample(

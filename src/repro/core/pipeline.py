@@ -19,18 +19,27 @@ query chunk (DESIGN.md §3):
                ``QueryResult.compaction_overflow``, never silently dropped
   5. top-k   — one masked L1 top-k over the compacted (Q, c_comp, d) block
 
-Stages 1 and 5 dispatch on ``SLSHConfig.backend`` (DESIGN.md §6):
-``"reference"`` is pure jnp; ``"pallas"`` routes signatures through the
-``kernels/hash_pack`` fused sign-pack kernel and distances through the
-``kernels/l1_topk`` single-pass top-k kernel (``SLSHConfig.interpret``
-overrides the platform interpret policy for both). Backends are numerically
-equivalent — enforced by tests/test_pipeline_backends.py.
+Execution dispatches on ``SLSHConfig.backend`` (DESIGN.md §6):
+``"reference"`` runs the five stages as pure jnp — the bit-exactness
+oracle. ``"pallas"`` routes signatures (and multiprobe margins) through
+the ``kernels/hash_pack`` fused all-tables launch and runs stages 3-5 as
+the ``kernels/query_fused`` VMEM-resident megakernel behind a query-major
+gather, so candidate vectors touch HBM exactly once and the compacted
+(Q, c_comp, d) block never materializes (DESIGN.md §4);
+``kernels/l1_topk`` still serves the staged form wherever a backend
+provides no fused tail. ``query_batch`` owns its jit schedule: eager
+calls hit cached whole-batch (reference) or per-stage fused (pallas)
+programs, while traced calls fall back to the one-program chunked
+pipeline (DESIGN.md §8.6). Backends are numerically equivalent —
+enforced by tests/test_pipeline_backends.py and
+tests/test_property_kernels.py.
 """
 from __future__ import annotations
 
 import contextvars
 import dataclasses
 import functools
+import math
 import warnings
 from typing import Callable, NamedTuple
 
@@ -415,10 +424,25 @@ class BackendOps(NamedTuple):
         ``(q (Q, d), cands (Q, C, d), mask (Q, C), k) -> (dist, pos)`` with
         ``dist (Q, k)`` ascending (inf-padded) and ``pos (Q, k)`` positions
         into C (-1 where fewer than k valid candidates).
+    probe_words (optional, default ``None``)
+        ``(params, x (n, d)) -> (words (n, L, W), margins (n, L, m))`` —
+        signature words *and* multiprobe quantizer margins from one fused
+        launch, consumed by ``hashing.probe_keys_from_margins``. ``None``
+        makes the hash stage recompute margins from ``x`` (the reference
+        formulation); margins must equal ``|x[:, dims] - thrs|`` exactly.
+    query_tail (optional, default ``None``)
+        ``(data, queries, cand (Q, C), run=, c_comp=, k=) ->
+        (kd, ki, comparisons, overflow)`` — pipeline stages 3-5 fused over
+        the run-sorted candidate tensor (``kernels/query_fused``). ``None``
+        keeps the staged dedup/compact/top-k path. A fused tail must be
+        bit-exact with the staged stages, including the §6 lowest-position
+        tie rule and ``compaction_overflow`` counts.
     """
 
     signature_words: Callable[..., jax.Array]
     l1_topk: Callable[..., tuple[jax.Array, jax.Array]]
+    probe_words: Callable[..., tuple[jax.Array, jax.Array]] | None = None
+    query_tail: Callable[..., tuple[jax.Array, ...]] | None = None
 
 
 _BACKENDS: dict[str, BackendOps | Callable[["SLSHConfig | None"], BackendOps]] = {}
@@ -463,11 +487,29 @@ def _pallas_l1_topk(q, cands, mask, k, *, interpret: bool | None = None):
     return l1_ops.l1_topk(q, cands, mask, k=k, interpret=interpret)
 
 
+def _pallas_probe_words(params, x, *, interpret: bool | None = None):
+    from repro.kernels.hash_pack import ops as hp_ops
+
+    return hp_ops.probe_words_kernel(params, x, interpret=interpret)
+
+
+def _pallas_query_tail(
+    data, queries, cand, *, run, c_comp, k, interpret: bool | None = None
+):
+    from repro.kernels.query_fused import ops as qf_ops
+
+    return qf_ops.query_tail(
+        data, queries, cand, run=run, c_comp=c_comp, k=k, interpret=interpret
+    )
+
+
 def _pallas_ops(cfg: "SLSHConfig | None") -> BackendOps:
     interp = None if cfg is None else cfg.interpret
     return BackendOps(
         functools.partial(_pallas_signature_words, interpret=interp),
         functools.partial(_pallas_l1_topk, interpret=interp),
+        probe_words=functools.partial(_pallas_probe_words, interpret=interp),
+        query_tail=functools.partial(_pallas_query_tail, interpret=interp),
     )
 
 
@@ -612,12 +654,25 @@ def _stage_hash(
     """Stage 1 — signatures for the whole chunk.
 
     Returns outer probe keys (Q, L, 1 + multiprobe) and inner-layer keys
-    (Q, L_in) (zeros when the inner layer is disabled).
+    (Q, L_in) (zeros when the inner layer is disabled). Backends providing
+    ``probe_words`` (pallas) emit the multiprobe quantizer margins from the
+    same fused launch as the words, so the hash stage stays one kernel; the
+    reference formulation recomputes margins from ``queries``.
     """
-    words = backend.signature_words(index.outer_params, queries)  # (Q, L, W)
-    probe_keys = hashing.probe_keys_from_words(
-        index.outer_params, queries, words, cfg.multiprobe
-    )
+    if (
+        cfg.multiprobe
+        and backend.probe_words is not None
+        and isinstance(index.outer_params, hashing.BitSampleParams)
+    ):
+        words, margins = backend.probe_words(index.outer_params, queries)
+        probe_keys = hashing.probe_keys_from_margins(
+            index.outer_params, words, margins, cfg.multiprobe
+        )
+    else:
+        words = backend.signature_words(index.outer_params, queries)
+        probe_keys = hashing.probe_keys_from_words(
+            index.outer_params, queries, words, cfg.multiprobe
+        )
     if cfg.use_inner:
         inner_keys = hash_keys(index.inner_params, queries, backend)  # (Q, L_in)
     else:
@@ -761,6 +816,165 @@ def _stage_gather(
     return cand, jnp.sum(bucket_sz, axis=0)
 
 
+def _segmented_searchsorted(
+    pool: jax.Array,  # (S,) flat concatenation of sorted segments
+    base: jax.Array,  # (...,) int32 segment start offsets into pool
+    key: jax.Array,  # (...,) search keys, same shape as base
+    width: int,  # segment length (static)
+    side_right: bool,
+) -> jax.Array:
+    """Vectorized binary search inside fixed-width sorted segments.
+
+    Returns the first offset in ``[0, width)`` of ``pool[base:base+width]``
+    whose value is ``>= key`` (left) / ``> key`` (right) — one fused
+    log-width loop over the whole batch, replacing a vmap swarm of
+    per-segment ``searchsorted`` calls in the fast gather.
+    """
+    lo = jnp.zeros_like(base)
+    hi = jnp.full_like(base, width)
+    steps = max(1, width.bit_length())  # == ceil(log2(width + 1))
+    for _ in range(steps):
+        mid = (lo + hi) >> 1
+        v = pool[base + jnp.minimum(mid, width - 1)]
+        go = (v <= key) if side_right else (v < key)
+        go = go & (mid < width)
+        lo = jnp.where(go, mid + 1, lo)
+        hi = jnp.where(go, hi, mid)
+    return lo
+
+
+def _gather_fast_parts(
+    index: SLSHIndex,
+    cfg: SLSHConfig,
+    probe_keys: jax.Array,  # (Q, L, 1 + multiprobe)
+    inner_keys: jax.Array,  # (Q, L_in)
+) -> tuple[jax.Array, jax.Array | None, jax.Array | None, jax.Array]:
+    """Fast-gather stage, both branch tensors: the work half of stage 2.
+
+    Returns ``(outer_cand (Q, L, slot), inner_cand | None,
+    found (Q, L) | None, bucket_total (Q,))``; ``_gather_fast_select``
+    blends the branches. Split so the eager schedule can dispatch the two
+    halves as separate programs — one program makes XLA CPU fold both
+    gather chains into the final select's loop (DESIGN.md §8.6).
+    """
+    l_out, n = index.outer.sorted_keys.shape
+    q_n, _, p_n = probe_keys.shape
+    slot, c_max, c_in, l_in = cfg.slot, cfg.c_max, cfg.c_in, cfg.L_in
+    pk = jnp.moveaxis(probe_keys, 1, 0)  # (L, Q, P) — small transpose
+    lo = jax.vmap(lambda sk, ks: jnp.searchsorted(sk, ks, side="left"))(
+        index.outer.sorted_keys, pk.reshape(l_out, -1)
+    ).astype(jnp.int32).reshape(l_out, q_n, p_n)
+    hi = jax.vmap(lambda sk, ks: jnp.searchsorted(sk, ks, side="right"))(
+        index.outer.sorted_keys, pk.reshape(l_out, -1)
+    ).astype(jnp.int32).reshape(l_out, q_n, p_n)
+    bucket_sz = jnp.sum(hi[:, :, 0] - lo[:, :, 0], axis=0)  # (Q,)
+    loq = jnp.moveaxis(lo, 0, 1)  # (Q, L, P)
+    hiq = jnp.moveaxis(hi, 0, 1)
+    offs = loq[..., None] + jnp.arange(c_max, dtype=jnp.int32)  # (Q,L,P,c_max)
+    ok = offs < hiq[..., None]
+    flat = (
+        jnp.arange(l_out, dtype=jnp.int32)[None, :, None, None] * n
+        + jnp.clip(offs, 0, n - 1)
+    )
+    outer_cand = jnp.where(
+        ok,
+        index.outer.sorted_idx.reshape(-1)[flat.reshape(-1)].reshape(
+            q_n, l_out, p_n, c_max
+        ),
+        -1,
+    ).reshape(q_n, l_out, p_n * c_max)
+    outer_cand = jnp.pad(
+        outer_cand, ((0, 0), (0, 0), (0, slot - p_n * c_max)), constant_values=-1
+    )  # (Q, L, slot)
+
+    if not cfg.use_inner:
+        return outer_cand, None, None, bucket_sz
+
+    h_max = index.heavy.keys.shape[1]
+    base_keys = jnp.moveaxis(pk, 0, 1)[:, :, 0]  # (Q, L)
+    match = (
+        index.heavy.keys[None, :, :] == base_keys[:, :, None]
+    ) & index.heavy.valid[None, :, :]  # (Q, L, H)
+    found = jnp.any(match, axis=-1)  # (Q, L)
+    h = jnp.argmax(match, axis=-1).astype(jnp.int32)
+
+    p_in = index.inner_keys.shape[-1]
+    ik_pool = index.inner_keys.reshape(-1)
+    seg = (
+        (jnp.arange(l_out, dtype=jnp.int32)[None, :, None] * h_max + h[:, :, None])
+        * l_in
+        + jnp.arange(l_in, dtype=jnp.int32)[None, None, :]
+    ) * p_in  # (Q, L, L_in) segment bases into the pooled inner tables
+    keyq = jnp.broadcast_to(inner_keys[:, None, :], (q_n, l_out, l_in))
+    lo2 = _segmented_searchsorted(ik_pool, seg, keyq, p_in, False)
+    hi2 = _segmented_searchsorted(ik_pool, seg, keyq, p_in, True)
+    offs2 = lo2[..., None] + jnp.arange(c_in, dtype=jnp.int32)  # (Q,L,L_in,c_in)
+    ok2 = offs2 < hi2[..., None]
+    flat2 = seg[..., None] + jnp.clip(offs2, 0, p_in - 1)
+    inner_cand = jnp.where(
+        ok2,
+        index.inner_idx.reshape(-1)[flat2.reshape(-1)].reshape(
+            q_n, l_out, l_in, c_in
+        ),
+        -1,
+    ).reshape(q_n, l_out, l_in * c_in)
+    inner_cand = jnp.pad(
+        inner_cand, ((0, 0), (0, 0), (0, slot - l_in * c_in)), constant_values=-1
+    )
+    return outer_cand, inner_cand, found, bucket_sz
+
+
+def _gather_fast_select(
+    cfg: SLSHConfig,
+    outer_cand: jax.Array,  # (Q, L, slot)
+    inner_cand: jax.Array | None,
+    found: jax.Array | None,  # (Q, L)
+) -> jax.Array:
+    """Blend the fast-gather branches into the (Q, L*slot) candidate rows.
+
+    Selects on the flattened layout: XLA CPU schedules the 2D select
+    without folding both gather chains into its loop, which the
+    (Q, L, slot) broadcast-select form provokes (~0.6ms/chunk at the
+    BENCH_pipeline shape).
+    """
+    q_n = outer_cand.shape[0]
+    if inner_cand is None:
+        return outer_cand.reshape(q_n, -1)
+    return jnp.where(
+        jnp.repeat(found, cfg.slot, axis=1),
+        inner_cand.reshape(q_n, -1),
+        outer_cand.reshape(q_n, -1),
+    )
+
+
+def _stage_gather_fast(
+    index: SLSHIndex,
+    cfg: SLSHConfig,
+    probe_keys: jax.Array,  # (Q, L, 1 + multiprobe)
+    inner_keys: jax.Array,  # (Q, L_in)
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 2, fused-path formulation: query-major flat gather.
+
+    Produces the same candidate *sets* per (query, table, probe) as
+    ``_stage_gather`` — identical results after dedup (pinned by the
+    backend-equivalence suite) — but emits the (Q, L*slot) tensor directly
+    from flat takes over the CSR arrays: batched searchsorted per table,
+    one flat gather for every outer probe window, a segmented binary
+    search (``_segmented_searchsorted``) over the pooled inner tables, and
+    a single heavy-registry match — no per-query vmap bodies. Rows keep the
+    run structure the fused tail's merge network consumes: every
+    ``gcd(c_max, c_in, slot)``-aligned slice ascends with -1 only as
+    trailing padding. Base (no-delta) path only; delta queries reuse
+    ``_stage_gather``'s exact merge and feed the same fused tail. The
+    eager schedule dispatches the two halves as separate cached programs
+    (``_fused_gather_parts_fn`` / ``_fused_gather_select_fn``).
+    """
+    outer_cand, inner_cand, found, bucket_sz = _gather_fast_parts(
+        index, cfg, probe_keys, inner_keys
+    )
+    return _gather_fast_select(cfg, outer_cand, inner_cand, found), bucket_sz
+
+
 def _stage_dedup(cand: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Stage 3 — static dedup: sort each row; first occurrence survives."""
     cand_sorted = jnp.sort(cand, axis=-1)
@@ -824,6 +1038,39 @@ def _stage_topk(
     return kd, ki
 
 
+def _fused_run(cfg: SLSHConfig) -> int:
+    """The fused tail's merge-run length for a config's gather layout.
+
+    Every probe window the gather emits is an ascending slice of length
+    ``c_max`` (outer) or ``c_in`` (inner), padded to ``slot`` — so every
+    ``gcd``-aligned slice of a candidate row ascends, which is the run
+    structure ``kernels/query_fused`` merges (DESIGN.md §4).
+    """
+    run = math.gcd(cfg.c_max, cfg.slot)
+    if cfg.use_inner:
+        run = math.gcd(run, cfg.c_in)
+    return run
+
+
+def _head_chunk(
+    index: SLSHIndex,
+    queries: jax.Array,
+    cfg: SLSHConfig,
+    backend: BackendOps,
+    delta: DeltaView | None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused-path head (stages 1+2) -> (cand (Q, L*slot), bucket_total (Q,)).
+
+    The base path uses the flat query-major gather; delta queries keep
+    ``_stage_gather``'s exact streaming merge (same run structure, so both
+    feed the same fused tail — DESIGN.md §9).
+    """
+    probe_keys, inner_keys = _stage_hash(index, queries, cfg, backend)
+    if delta is None:
+        return _stage_gather_fast(index, cfg, probe_keys, inner_keys)
+    return _stage_gather(index, cfg, probe_keys, inner_keys, delta)
+
+
 def query_chunk(
     index: SLSHIndex,
     data: jax.Array,
@@ -831,14 +1078,24 @@ def query_chunk(
     cfg: SLSHConfig,
     delta: DeltaView | None = None,
 ) -> QueryResult:
-    """Run the five stages for one (Q, d) chunk of queries.
+    """Run the pipeline for one (Q, d) chunk of queries.
 
     ``delta`` fans the gather stage out over base + delta segments (the
     streaming path, DESIGN.md §9); the merged candidates flow through the
-    same dedup, compaction, and L1 top-k stages, so ``cfg.backend``
-    dispatch covers streaming queries too.
+    same dedup, compaction, and L1 top-k work, so ``cfg.backend`` dispatch
+    covers streaming queries too. Backends providing ``query_tail``
+    (pallas) run stages 3-5 as one fused megakernel launch
+    (``kernels/query_fused``, DESIGN.md §4); the staged form below is the
+    reference path and the bit-exactness oracle.
     """
     backend = get_backend(cfg.backend, cfg)
+    if backend.query_tail is not None:
+        cand, bucket_total = _head_chunk(index, queries, cfg, backend, delta)
+        cc = _compact_width(cfg, cand.shape[1], data.shape[0])
+        kd, ki, comparisons, overflow = backend.query_tail(
+            data, queries, cand, run=_fused_run(cfg), c_comp=cc, k=cfg.k
+        )
+        return QueryResult(ki, kd, comparisons, bucket_total, overflow)
     probe_keys, inner_keys = _stage_hash(index, queries, cfg, backend)
     cand, bucket_total = _stage_gather(index, cfg, probe_keys, inner_keys, delta)
     cand_sorted, uniq, comparisons = _stage_dedup(cand)
@@ -850,6 +1107,122 @@ def query_chunk(
     return QueryResult(ki, kd, comparisons, bucket_total, overflow)
 
 
+def _contains_tracer(*trees) -> bool:
+    """True when any leaf is a tracer (we are inside someone else's jit)."""
+    return any(
+        isinstance(leaf, jax.core.Tracer)
+        for tree in trees
+        for leaf in jax.tree.leaves(tree)
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _staged_batch_fn(cfg: SLSHConfig, has_delta: bool):
+    """Cached whole-batch jit of the staged pipeline (eager entry points)."""
+    if has_delta:
+        return jax.jit(
+            lambda index, data, queries, delta: _chunked_map(
+                lambda qs: query_chunk(index, data, qs, cfg, delta),
+                queries,
+                cfg.query_chunk,
+            )
+        )
+    return jax.jit(
+        lambda index, data, queries: _chunked_map(
+            lambda qs: query_chunk(index, data, qs, cfg), queries, cfg.query_chunk
+        )
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_hash_fn(cfg: SLSHConfig):
+    """Cached jit of stage 1 (hash + probe keys) for one config."""
+    backend = get_backend(cfg.backend, cfg)
+    return jax.jit(lambda index, queries: _stage_hash(index, queries, cfg, backend))
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_gather_parts_fn(cfg: SLSHConfig):
+    """Cached jit of the fast gather's work half (base path, stage 2).
+
+    Kept as its *own* dispatch rather than fused with the hash: letting
+    XLA schedule the searchsorted/gather stream into the hash program's
+    fusions costs ~20% of the head on CPU, the same composition penalty
+    that motivates keeping the megakernel tail out of the head program
+    (DESIGN.md §8.6).
+    """
+    return jax.jit(lambda index, pk, ik: _gather_fast_parts(index, cfg, pk, ik))
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_gather_select_fn(cfg: SLSHConfig):
+    """Cached jit of the fast gather's branch select (base path, stage 2)."""
+    return jax.jit(lambda oc, ic, f: _gather_fast_select(cfg, oc, ic, f))
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_gather_delta_fn(cfg: SLSHConfig):
+    """Cached jit of the exact streaming gather (delta path, stage 2)."""
+    return jax.jit(
+        lambda index, pk, ik, delta: _stage_gather(index, cfg, pk, ik, delta)
+    )
+
+
+def _query_batch_fused_eager(
+    index: SLSHIndex,
+    data: jax.Array,
+    queries: jax.Array,
+    cfg: SLSHConfig,
+    delta: DeltaView | None,
+    backend: BackendOps,
+) -> QueryResult:
+    """Eager fused execution: hash, gather, and tail as cached jit dispatches.
+
+    Composing pipeline stages into *one* jit makes XLA schedule each
+    stage's ops into the previous stage's fusions (each stage output is a
+    data dependency), which measurably regresses the chunk — both for the
+    megakernel tail behind the head and for the gather stream behind the
+    hash. So when the caller is not tracing, the fused path runs a Python
+    chunk loop issuing a short schedule of cached dispatches per chunk:
+    the hash jit, the gather jits (work + branch select on the base path,
+    one exact-merge program on the delta path), and the kernel wrapper.
+    Inside an outer jit (tracers
+    present) ``query_batch`` falls back to the traceable one-jit
+    composition: bit-identical, just not dispatch-optimal (DESIGN.md §4).
+    """
+    q_n = queries.shape[0]
+    chunk = min(cfg.query_chunk, q_n)
+    n_chunks = -(-q_n // chunk)
+    pad = n_chunks * chunk - q_n
+    qp = jnp.pad(queries, ((0, pad), (0, 0))) if pad else queries
+    hash_fn = _fused_hash_fn(cfg)
+    if delta is None:
+        parts_fn = _fused_gather_parts_fn(cfg)
+        select_fn = _fused_gather_select_fn(cfg)
+    else:
+        gather_fn = _fused_gather_delta_fn(cfg)
+    run = _fused_run(cfg)
+    cc = _compact_width(cfg, index.outer.sorted_keys.shape[0] * cfg.slot, data.shape[0])
+    outs = []
+    for i in range(n_chunks):
+        qs = qp[i * chunk : (i + 1) * chunk]
+        pk, ik = hash_fn(index, qs)
+        if delta is None:
+            oc, ic, fnd, bucket_total = parts_fn(index, pk, ik)
+            cand = select_fn(oc, ic, fnd)
+        else:
+            cand, bucket_total = gather_fn(index, pk, ik, delta)
+        kd, ki, comparisons, overflow = backend.query_tail(
+            data, qs, cand, run=run, c_comp=cc, k=cfg.k
+        )
+        outs.append(QueryResult(ki, kd, comparisons, bucket_total, overflow))
+    if len(outs) == 1:
+        res = outs[0]
+    else:
+        res = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+    return jax.tree.map(lambda a: a[:q_n], res) if pad else res
+
+
 def query_batch(
     index: SLSHIndex,
     data: jax.Array,
@@ -857,7 +1230,25 @@ def query_batch(
     cfg: SLSHConfig,
     delta: DeltaView | None = None,
 ) -> QueryResult:
-    """Chunked pipeline over queries -> stacked QueryResult (Q, ...)."""
-    return _chunked_map(
-        lambda qs: query_chunk(index, data, qs, cfg, delta), queries, cfg.query_chunk
-    )
+    """Chunked pipeline over queries -> stacked QueryResult (Q, ...).
+
+    This is each backend's production query path, jit-managed internally:
+    called eagerly, the reference backend runs one cached whole-batch jit
+    and the pallas backend runs the per-stage fused schedule
+    (``_query_batch_fused_eager``). Called under an outer jit (tracer
+    inputs), both trace through the chunked pipeline unchanged — results
+    are bit-identical either way.
+    """
+    if _contains_tracer(index, data, queries, delta):
+        return _chunked_map(
+            lambda qs: query_chunk(index, data, qs, cfg, delta),
+            queries,
+            cfg.query_chunk,
+        )
+    backend = get_backend(cfg.backend, cfg)
+    if backend.query_tail is not None:
+        return _query_batch_fused_eager(index, data, queries, cfg, delta, backend)
+    fn = _staged_batch_fn(cfg, delta is not None)
+    if delta is None:
+        return fn(index, data, queries)
+    return fn(index, data, queries, delta)

@@ -54,7 +54,7 @@ def query_index(
     index: SLSHIndex, data: jax.Array, q: jax.Array, cfg: SLSHConfig
 ) -> QueryResult:
     """Resolve one query against a single-shard index (paper Fig. 2 path)."""
-    res = pipeline.query_chunk(index, data, q[None, :], cfg)
+    res = pipeline.query_batch(index, data, q[None, :], cfg)
     return jax.tree.map(lambda a: a[0], res)
 
 

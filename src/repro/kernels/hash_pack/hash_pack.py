@@ -26,6 +26,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _pack_words(bits):
+    """Pack a (T_BLK, M_TOTAL) bit matrix into (T_BLK, M_TOTAL//32) words."""
+    t_blk, m_total = bits.shape
+    w = m_total // 32
+    b32 = bits.reshape(t_blk, w, 32).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (t_blk, w, 32), 2)
+    return jnp.sum(b32 << shifts, axis=-1, dtype=jnp.uint32)
+
+
 def _hash_pack_kernel(x_ref, p_ref, b_ref, o_ref, *, m: int, m_stride: int):
     x = x_ref[...]  # (T_BLK, D_PAD)
     p = p_ref[...]  # (D_PAD, M_TOTAL)
@@ -34,10 +43,30 @@ def _hash_pack_kernel(x_ref, p_ref, b_ref, o_ref, *, m: int, m_stride: int):
     t_blk, m_total = s.shape
     col = jax.lax.broadcasted_iota(jnp.int32, (t_blk, m_total), 1)
     bits = (s > 0.0) & (col % m_stride < m)  # zero out padded bit positions
-    w = m_total // 32
-    b32 = bits.reshape(t_blk, w, 32).astype(jnp.uint32)
-    shifts = jax.lax.broadcasted_iota(jnp.uint32, (t_blk, w, 32), 2)
-    o_ref[...] = jnp.sum(b32 << shifts, axis=-1, dtype=jnp.uint32)
+    o_ref[...] = _pack_words(bits)
+
+
+def _hash_pack_margins_kernel(
+    x_ref, p_ref, b_ref, o_ref, g_ref, *, m: int, m_stride: int
+):
+    """``_hash_pack_kernel`` + per-bit quantizer margins in the same launch.
+
+    For the one-hot bit-sampling formulation ``s = x[dim] - thr`` exactly
+    (a one-hot dot reproduces the gathered coordinate bit-for-bit), so
+    ``|s|`` is the multiprobe margin — emitting it here folds multiprobe
+    key generation into the fused all-tables hash launch instead of
+    re-gathering ``x`` afterwards (DESIGN.md §4). Padded columns carry
+    ``bias = -inf`` so their margins are ``+inf`` (never flip candidates).
+    """
+    x = x_ref[...]
+    p = p_ref[...]
+    bias = b_ref[...]
+    s = jnp.dot(x, p, preferred_element_type=jnp.float32) + bias  # MXU
+    t_blk, m_total = s.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (t_blk, m_total), 1)
+    bits = (s > 0.0) & (col % m_stride < m)
+    o_ref[...] = _pack_words(bits)
+    g_ref[...] = jnp.abs(s)
 
 
 def _bitsample_gather_kernel(x_ref, dims_ref, thr_ref, o_ref):
@@ -51,12 +80,21 @@ def _bitsample_gather_kernel(x_ref, dims_ref, thr_ref, o_ref):
     """
     x = x_ref[...]  # (T_BLK, D_PAD)
     g = x[:, dims_ref[...][0]]  # (T_BLK, M_TOTAL) coordinate gather
-    bits = g > thr_ref[...]
-    t_blk, m_total = bits.shape
-    w = m_total // 32
-    b32 = bits.reshape(t_blk, w, 32).astype(jnp.uint32)
-    shifts = jax.lax.broadcasted_iota(jnp.uint32, (t_blk, w, 32), 2)
-    o_ref[...] = jnp.sum(b32 << shifts, axis=-1, dtype=jnp.uint32)
+    o_ref[...] = _pack_words(g > thr_ref[...])
+
+
+def _bitsample_gather_margins_kernel(x_ref, dims_ref, thr_ref, o_ref, g_ref):
+    """Interpret-mode bit-sampling words + multiprobe margins, one launch.
+
+    The gathered coordinates are already resident, so the margin
+    ``|x[dim] - thr|`` is one extra VPU op; padded columns carry
+    ``thr = +inf`` and so emit ``+inf`` margins (never flip candidates).
+    """
+    x = x_ref[...]
+    thr = thr_ref[...]
+    g = x[:, dims_ref[...][0]]
+    o_ref[...] = _pack_words(g > thr)
+    g_ref[...] = jnp.abs(g - thr)
 
 
 @functools.partial(jax.jit, static_argnames=("t_blk",))
@@ -83,6 +121,75 @@ def bitsample_gather_pallas(
         out_shape=jax.ShapeDtypeStruct((t, w), jnp.uint32),
         interpret=True,
     )(x, dims, thrs)
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk",))
+def bitsample_gather_margins_pallas(
+    x: jax.Array,  # (T, D_PAD) f32, T % t_blk == 0
+    dims: jax.Array,  # (1, M_TOTAL) int32 sampled coordinate per column
+    thrs: jax.Array,  # (1, M_TOTAL) f32, +inf on padded columns
+    *,
+    t_blk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """``bitsample_gather_pallas`` + margins: -> ((T, W) words, (T, M_TOTAL))."""
+    t = x.shape[0]
+    m_total = dims.shape[1]
+    assert t % t_blk == 0 and m_total % 32 == 0
+    w = m_total // 32
+    return pl.pallas_call(
+        _bitsample_gather_margins_kernel,
+        grid=(t // t_blk,),
+        in_specs=[
+            pl.BlockSpec((t_blk, x.shape[1]), lambda ti: (ti, 0)),
+            pl.BlockSpec((1, m_total), lambda ti: (0, 0)),
+            pl.BlockSpec((1, m_total), lambda ti: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_blk, w), lambda ti: (ti, 0)),
+            pl.BlockSpec((t_blk, m_total), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, w), jnp.uint32),
+            jax.ShapeDtypeStruct((t, m_total), jnp.float32),
+        ],
+        interpret=True,
+    )(x, dims, thrs)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "m_stride", "t_blk", "interpret"))
+def hash_pack_margins_pallas(
+    x: jax.Array,  # (T, D_PAD) f32, T % t_blk == 0
+    proj: jax.Array,  # (D_PAD, M_TOTAL) f32, M_TOTAL % m_stride == 0
+    bias: jax.Array,  # (1, M_TOTAL) f32, -inf on padded columns
+    m: int,
+    *,
+    m_stride: int,
+    t_blk: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """``hash_pack_pallas`` + margins: -> ((T, W) words, (T, M_TOTAL) |s|)."""
+    t, d_pad = x.shape
+    m_total = proj.shape[1]
+    assert t % t_blk == 0 and m_stride % 32 == 0 and m_total % m_stride == 0
+    w = m_total // 32
+    return pl.pallas_call(
+        functools.partial(_hash_pack_margins_kernel, m=m, m_stride=m_stride),
+        grid=(t // t_blk,),
+        in_specs=[
+            pl.BlockSpec((t_blk, d_pad), lambda ti: (ti, 0)),
+            pl.BlockSpec((d_pad, m_total), lambda ti: (0, 0)),
+            pl.BlockSpec((1, m_total), lambda ti: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_blk, w), lambda ti: (ti, 0)),
+            pl.BlockSpec((t_blk, m_total), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, w), jnp.uint32),
+            jax.ShapeDtypeStruct((t, m_total), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, proj, bias)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "m_stride", "t_blk", "interpret"))

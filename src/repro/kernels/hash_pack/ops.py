@@ -15,7 +15,9 @@ import jax.numpy as jnp
 from repro.core import hashing
 from repro.kernels import blocking
 from repro.kernels.hash_pack.hash_pack import (
+    bitsample_gather_margins_pallas,
     bitsample_gather_pallas,
+    hash_pack_margins_pallas,
     hash_pack_pallas,
 )
 
@@ -110,6 +112,117 @@ def _bitsample_gather_pack(
     ).reshape(1, l * m_pad)
     out = bitsample_gather_pallas(xp, dd, tt, t_blk=t_blk)
     return out[:t].reshape(t, l, m_pad // 32)[:, :, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk",))
+def _bitsample_gather_margins(
+    x: jax.Array,  # (T, d)
+    dims: jax.Array,  # (L, m) int32
+    thrs: jax.Array,  # (L, m) f32
+    *,
+    t_blk: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Interpret-mode words + margins: -> ((T, L, W), (T, L, m) f32).
+
+    Same launch shape as ``_bitsample_gather_pack``; margins are the extra
+    ``|x[dim] - thr|`` output of the fused kernel (padded columns +inf)."""
+    t = x.shape[0]
+    l, m = dims.shape
+    m_pad = blocking.round_up(m, 32)
+    w = (m + 31) // 32
+    if t_blk is None:
+        t_blk = blocking.round_up(t, blocking.SUBLANE)
+    t_blk = blocking.clamp_sublane(t, t_blk)
+    xp = blocking.pad_axis(
+        blocking.pad_axis(x.astype(jnp.float32), 1, blocking.SUBLANE), 0, t_blk
+    )
+    dd = blocking.pad_axis(dims.astype(jnp.int32), 1, m_pad).reshape(1, l * m_pad)
+    tt = blocking.pad_axis(
+        thrs.astype(jnp.float32), 1, m_pad, value=jnp.inf
+    ).reshape(1, l * m_pad)
+    words, margins = bitsample_gather_margins_pallas(xp, dd, tt, t_blk=t_blk)
+    return (
+        words[:t].reshape(t, l, m_pad // 32)[:, :, :w],
+        margins[:t].reshape(t, l, m_pad)[:, :, :m],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk", "interpret"))
+def _onehot_pack_margins(
+    x: jax.Array,  # (T, d)
+    dims: jax.Array,  # (L, m) int32
+    thrs: jax.Array,  # (L, m) f32
+    *,
+    t_blk: int | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Compiled-mode words + margins via the one-hot MXU formulation.
+
+    ``s = x @ onehot(dims) - thr`` reproduces the gathered coordinate
+    exactly, so ``|s|`` equals the gather path's margin bit-for-bit.
+    Padded columns carry ``bias = -inf`` (margins +inf). Chunks the table
+    axis under the same VMEM weight budget as ``_family_pack``.
+    """
+    t, d = x.shape
+    l, m = dims.shape
+    m_mult = blocking.LANE
+    m_pad = blocking.round_up(m, m_mult)
+    w = (m + 31) // 32
+    if t_blk is None:
+        t_blk = 256
+    t_blk = blocking.clamp_sublane(t, t_blk)
+    xp = blocking.pad_axis(
+        blocking.pad_axis(x.astype(jnp.float32), 1, blocking.LANE), 0, t_blk
+    )
+    proj = jnp.moveaxis(
+        jax.nn.one_hot(dims, d, dtype=jnp.float32), 2, 1
+    )  # (L, d, m)
+    pp = blocking.pad_axis(
+        blocking.pad_axis(proj, 1, blocking.LANE), 2, m_mult
+    )
+    bb = blocking.pad_axis(
+        -thrs.astype(jnp.float32), 1, m_mult, value=-jnp.inf
+    )
+    d_pad = xp.shape[1]
+    l_chunk = max(1, min(l, _MAX_PROJ_ELEMS // (d_pad * m_pad)))
+    words, margins = [], []
+    for l0 in range(0, l, l_chunk):
+        pc = pp[l0 : l0 + l_chunk]
+        lc = pc.shape[0]
+        cols = jnp.moveaxis(pc, 0, 1).reshape(d_pad, lc * m_pad)
+        bias_c = bb[l0 : l0 + l_chunk].reshape(1, lc * m_pad)
+        wd, mg = hash_pack_margins_pallas(
+            xp, cols, bias_c, m, m_stride=m_pad, t_blk=t_blk,
+            interpret=interpret,
+        )
+        words.append(wd[:t].reshape(t, lc, m_pad // 32)[:, :, :w])
+        margins.append(mg[:t].reshape(t, lc, m_pad)[:, :, :m])
+    if len(words) == 1:
+        return words[0], margins[0]
+    return jnp.concatenate(words, axis=1), jnp.concatenate(margins, axis=1)
+
+
+def probe_words_kernel(
+    params, x: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Signature words + multiprobe margins for a bit-sampling family.
+
+    x: (n, d) -> ((n, L, W) uint32 words, (n, L, m) f32 margins), both from
+    *one* fused all-tables launch — the hash stage's multiprobe inputs
+    without a second pass over ``x`` (DESIGN.md §4). Words equal
+    ``signature_words_kernel``; margins equal ``|x[:, dims] - thrs|``
+    bit-for-bit, so ``hashing.probe_keys_from_margins`` built on them
+    matches the reference ``hashing.probe_keys_from_words`` exactly.
+    Only ``BitSampleParams`` carry multiprobe semantics (outer layer).
+    """
+    if not isinstance(params, hashing.BitSampleParams):
+        raise TypeError(
+            "probe_words_kernel needs BitSampleParams (the outer multiprobe"
+            f" family); got {type(params).__name__}"
+        )
+    if blocking.resolve_interpret(interpret):
+        return _bitsample_gather_margins(x, params.dims, params.thrs)
+    return _onehot_pack_margins(x, params.dims, params.thrs)
 
 
 def signrp_pack(

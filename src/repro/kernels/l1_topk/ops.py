@@ -1,4 +1,10 @@
-"""jit'd public wrapper for the l1_topk kernel (padding + interpret policy)."""
+"""jit'd public wrapper for the l1_topk kernel (padding + interpret policy).
+
+Serves the *staged* pipeline's top-k stage (backends without a fused tail)
+and standalone distance work; on the pallas backend the query hot path
+runs stages 3-5 as the ``kernels/query_fused`` megakernel instead, whose
+single-pass tile loop descends from this kernel's schedule (DESIGN.md §4).
+"""
 from __future__ import annotations
 
 import functools

@@ -1,0 +1,1 @@
+"""Fused query-tail megakernel: dedup + compact + gather + L1 + top-k."""

@@ -1,0 +1,80 @@
+"""jit'd wrapper for the fused query-tail megakernel.
+
+:func:`query_tail` is the ``BackendOps.query_tail`` implementation the
+pallas pipeline backend registers (``core/pipeline.py``, DESIGN.md §6): it
+replaces staged pipeline stages 3-5 (dedup -> compact -> gather + L1 +
+top-k) with one launch of ``query_fused.query_tail_pallas``, bit-exact
+with the staged reference path (``ref.query_tail_ref`` is the oracle).
+
+The wrapper owns the launch-shape policy so the kernel bodies stay pure:
+
+* pad the candidate width to a multiple of ``run`` and then to a
+  power-of-two run count (the merge network's only shape requirement),
+  with ``-1`` columns that dedup discards;
+* resolve the interpret policy (``blocking.resolve_interpret``) and size
+  the compiled path's gather ring buffer from the shared VMEM budget
+  (``blocking.ring_chunk``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import blocking
+from repro.kernels.query_fused.query_fused import query_tail_pallas
+
+# Trace-count instrumentation: bumped once per (re)trace of ``query_tail``
+# (the body runs only on jit cache misses). The compile-cache regression
+# test (tests/test_compile_cache.py) pins the static-shape contract with it:
+# runtime query knobs must never re-trace the fused kernel.
+TRACE_COUNTS = {"query_tail": 0}
+
+
+def _run_padded_width(c: int, run: int) -> int:
+    """Candidate width padded so the merge network accepts it: the next
+    multiple of ``run`` holding a power-of-two number of runs."""
+    c_runs = blocking.round_up(max(c, 1), run)
+    r = c_runs // run
+    r_pow2 = 1 << max(0, r - 1).bit_length()
+    return run * r_pow2
+
+
+@functools.partial(
+    jax.jit, static_argnames=("run", "c_comp", "k", "interpret")
+)
+def query_tail(
+    data: jax.Array,  # (n, d) dataset rows
+    queries: jax.Array,  # (Q, d) query chunk
+    cand: jax.Array,  # (Q, C) int32 candidate indices, -1 where masked
+    *,
+    run: int,
+    c_comp: int,
+    k: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused tail over a candidate tensor -> ``(kd, ki, comparisons, overflow)``.
+
+    ``cand`` rows must be run-sorted: every ``run``-aligned slice ascends,
+    with ``-1`` only as a trailing pad inside its slice — exactly what the
+    pipeline gather stage emits for ``run = gcd(c_max, c_in, slot)``
+    (duplicates *across* runs are fine; the fused dedup removes them).
+    Output contract matches the staged stages 3-5 bit-for-bit: ``kd (Q, k)``
+    ascending L1 distances (inf-padded), ``ki (Q, k)`` global indices (-1
+    padded, §6 lowest-position tie rule), ``comparisons (Q,)`` unique
+    candidates, ``overflow (Q,)`` unique survivors beyond ``c_comp``.
+    """
+    TRACE_COUNTS["query_tail"] += 1
+    interp = blocking.resolve_interpret(interpret)
+    c = cand.shape[1]
+    c_pad = _run_padded_width(c, run)
+    if c_pad != c:
+        cand = blocking.pad_axis(cand, 1, c_pad, value=-1)
+    kwargs = {}
+    if not interp:
+        kwargs["c_blk"] = blocking.ring_chunk(c_comp, data.shape[1])
+    return query_tail_pallas(
+        data, queries.astype(jnp.float32), cand,
+        run=run, c_comp=c_comp, k=k, interpret=interp, **kwargs,
+    )

@@ -1,0 +1,351 @@
+"""Pallas megakernel: the query-pipeline tail fused into one launch.
+
+One ``pallas_call`` consumes a query chunk's raw candidate tensor and
+produces the finished k-NN answer: merge the gather stage's sorted runs
+into one ascending row (a bitonic concat-merge network — no general sort),
+mask duplicate / padded slots, prefix-sum the survivor mask and compact the
+first ``c_comp`` unique indices, gather their data rows, and reduce L1
+distances to the top-k — so candidate vectors touch HBM exactly once and
+the ``(Q, c_comp, d)`` gathered block never materializes as an HBM
+intermediate between stages (DESIGN.md §4).
+
+Two formulations share the algorithm (DESIGN.md §4/§6):
+
+* **interpret** (the off-TPU production + CI path): ``grid=(1,)`` with the
+  whole chunk resident; ``data`` is handed over in ``pltpu.ANY`` memory
+  space and candidate rows are gathered by vectorized indexing straight
+  from the ref — the interpreter's analogue of the DMA schedule below, with
+  no per-step block copies.
+* **compiled** (Mosaic, real TPU): ``grid=(Q,)`` — one query row per step;
+  the compacted indices stay VMEM-resident while candidate vectors stream
+  HBM->VMEM through a two-slot ``(C_BLK, D_PAD)`` ring buffer of per-row
+  async copies (``pltpu.make_async_copy`` + DMA semaphores), chunk ``t+1``
+  in flight while chunk ``t``'s distances merge into the running top-k.
+  Written to the TPU guide's double-buffering pattern; this container has
+  no TPU, so the schedule is exercised only through the shared-body
+  interpret tests.
+
+Both reproduce the §6 lowest-position tie rule: compacted rows ascend by
+global index and ``lax.top_k`` prefers earlier positions on equal
+distances, exactly like the staged reference tail.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Kernel-internal sentinel: a plain int (kernels cannot capture array
+# constants), equal to pipeline._IDX_SENTINEL — sorts after any real index.
+_SENT = jnp.iinfo(jnp.int32).max
+
+_CUMSUM_BLK = 16  # prefix-sum block: one triangular-matmul tile
+
+
+def merge_sorted_runs(x: jax.Array, run: int, q_major: bool = False) -> jax.Array:
+    """Merge each row's ascending length-``run`` runs into one sorted row.
+
+    ``x (Q, C)`` with ``C = R * run`` and R a power of two; every
+    ``run``-aligned slice is already ascending (the gather stage emits
+    bucket slices in index order, sentinel-padded at the tail). Pairs of
+    runs merge as bitonic sequences (ascending ++ reversed-descending), a
+    log-depth network of element-wise min/max — O(C log R log C) compares
+    but fully vectorized, versus a general sort's larger constant. This is
+    the megakernel's stage-3 replacement and is exact: the output is a
+    permutation of ``x`` per row, sorted ascending.
+
+    ``q_major`` runs the identical network on the transposed ``(C, Q)``
+    layout, keeping the query axis innermost: the network's late substages
+    compare stride-``2^j`` element pairs, which degenerates to scalar code
+    row-major but stays a dense vector op over the whole chunk when each
+    compare spans ``Q`` contiguous lanes. The interpret (whole-chunk) body
+    uses it; the compiled body's grid step sees one query row (Q=1), where
+    the transpose buys nothing and lane-major stays right.
+    """
+    q_n, c = x.shape
+    r, width = c // run, run
+    if q_major:
+        y = x.T.reshape(r, width, q_n)
+        while r > 1:
+            a = y[0::2]
+            b = y[1::2][:, ::-1, :]  # descending half -> bitonic pair
+            z = jnp.concatenate([a, b], axis=1)  # (r//2, 2*width, Q)
+            width *= 2
+            dd = width // 2
+            while dd >= 1:  # bitonic merge network, Q innermost
+                w = z.reshape(-1, 2, dd, q_n)
+                lo = jnp.minimum(w[:, 0], w[:, 1])
+                hi = jnp.maximum(w[:, 0], w[:, 1])
+                z = jnp.stack([lo, hi], axis=1).reshape(-1, width, q_n)
+                dd //= 2
+            y = z
+            r //= 2
+        return y.reshape(c, q_n).T
+    x = x.reshape(q_n, r, width)
+    while r > 1:
+        a = x[:, 0::2, :]
+        b = x[:, 1::2, :][:, :, ::-1]  # descending half -> bitonic pair
+        y = jnp.concatenate([a, b], axis=-1)
+        width *= 2
+        dd = width // 2
+        while dd >= 1:  # bitonic merge network on (r//2) sequences
+            z = y.reshape(q_n, -1, 2, dd)
+            lo = jnp.minimum(z[:, :, 0, :], z[:, :, 1, :])
+            hi = jnp.maximum(z[:, :, 0, :], z[:, :, 1, :])
+            y = jnp.concatenate(
+                [lo[:, :, None, :], hi[:, :, None, :]], axis=2
+            ).reshape(q_n, r // 2, width)
+            dd //= 2
+        x = y
+        r //= 2
+    return x[:, 0]
+
+
+def _prefix_sum(u: jax.Array) -> jax.Array:
+    """Inclusive prefix sum of a 0/1 mask (Q, C) -> int32 (Q, C).
+
+    Where ``C`` tiles by :data:`_CUMSUM_BLK`, runs as two triangular
+    matmuls (in-block prefix + block-offset prefix) — MXU/VPU-friendly and
+    far cheaper than the serial ``cumsum`` lowering at C ~ thousands; f32
+    accumulation is exact for any realistic candidate width (< 2^24).
+    """
+    q_n, c = u.shape
+    if c % _CUMSUM_BLK:
+        return jnp.cumsum(u.astype(jnp.int32), axis=-1)
+    blk = _CUMSUM_BLK
+    nb = c // blk
+    u3 = u.reshape(q_n, nb, blk).astype(jnp.float32)
+    row = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    tri = (row <= col).astype(jnp.float32)
+    part = jax.lax.dot_general(
+        u3, tri, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, nb, blk) in-block inclusive prefix
+    sums = part[:, :, -1]
+    row2 = jax.lax.broadcasted_iota(jnp.int32, (nb, nb), 0)
+    col2 = jax.lax.broadcasted_iota(jnp.int32, (nb, nb), 1)
+    tri2 = (row2 < col2).astype(jnp.float32)  # strict: exclusive offsets
+    offs = jnp.dot(sums, tri2, preferred_element_type=jnp.float32)
+    return (offs[:, :, None] + part).reshape(q_n, c).astype(jnp.int32)
+
+
+def _dedup_compact(
+    cand: jax.Array, run: int, c_comp: int, q_major: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Fused stages 3+4 on raw candidate rows (shared by both kernel bodies).
+
+    Returns ``comp (Q, c_comp)`` — each row's unique candidate indices
+    ascending, :data:`_SENT` beyond the survivor count — and
+    ``comparisons (Q,)``. Rank-compaction is a searchsorted over the
+    survivor prefix sum (rank r's position is the first index where the
+    running unique count reaches r), replacing the staged path's second
+    full-width sort.
+    """
+    x = jnp.where(cand < 0, _SENT, cand)
+    srt = merge_sorted_runs(x, run, q_major=q_major)
+    uniq = jnp.concatenate(
+        [srt[:, :1] < _SENT, srt[:, 1:] != srt[:, :-1]], axis=-1
+    ) & (srt < _SENT)
+    comparisons = jnp.sum(uniq.astype(jnp.int32), axis=-1)
+    cum = _prefix_sum(uniq)
+    tgt = jax.lax.broadcasted_iota(jnp.int32, (c_comp,), 0) + 1
+    pos = jax.vmap(lambda row: jnp.searchsorted(row, tgt, side="left"))(cum)
+    inb = pos < srt.shape[1]
+    comp = jnp.take_along_axis(srt, jnp.minimum(pos, srt.shape[1] - 1), axis=-1)
+    return jnp.where(inb, comp, _SENT), comparisons
+
+
+def _finish_topk(dist, comp, valid, k):
+    """Top-k over compacted distances -> (kd, ki); inf/-1 padded."""
+    if dist.shape[1] < k:  # fewer compacted slots than k: pad with inf
+        pad = k - dist.shape[1]
+        dist = jnp.pad(dist, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        comp = jnp.pad(comp, ((0, 0), (0, pad)), constant_values=_SENT)
+        valid = jnp.pad(valid, ((0, 0), (0, pad)), constant_values=False)
+    neg, p = jax.lax.top_k(-dist, k)
+    ki = jnp.where(
+        jnp.isfinite(neg),
+        jnp.take_along_axis(
+            jnp.where(valid, comp, -1), jnp.maximum(p, 0), axis=-1
+        ),
+        -1,
+    )
+    return -neg, ki
+
+
+def _tail_kernel_interpret(
+    data_ref, q_ref, cand_ref, kd_ref, ki_ref, cmp_ref, ovf_ref,
+    *, run: int, c_comp: int, k: int, n: int,
+):
+    """Whole-chunk megakernel body (interpret formulation).
+
+    ``data_ref`` lives in ``pltpu.ANY`` space: the candidate gather indexes
+    it directly, so no block copy of the dataset ever happens — the
+    interpreter's stand-in for the compiled path's DMA ring.
+    """
+    cand = cand_ref[...]
+    qs = q_ref[...]
+    comp, comparisons = _dedup_compact(cand, run, c_comp, q_major=True)
+    valid = comp != _SENT
+    safe = jnp.clip(jnp.where(valid, comp, 0), 0, n - 1)
+    pts = data_ref[safe]  # (Q, c_comp, d) — the one HBM touch per candidate
+    dist = jnp.sum(jnp.abs(pts - qs[:, None, :]), axis=-1)
+    dist = jnp.where(valid, dist, jnp.inf)
+    kd_ref[...], ki_ref[...] = _finish_topk(dist, comp, valid, k)
+    cmp_ref[...] = comparisons
+    ovf_ref[...] = jnp.maximum(comparisons - jnp.int32(c_comp), 0)
+
+
+def _tail_kernel_dma(
+    q_ref, cand_ref, data_ref, kd_ref, ki_ref, cmp_ref, ovf_ref,
+    buf_ref, sem_ref,
+    *, run: int, c_comp: int, k: int, n: int, c_blk: int,
+):
+    """Per-query megakernel body (compiled Mosaic formulation).
+
+    Grid step = one query row. The compacted indices stay VMEM-resident;
+    candidate vectors stream through ``buf_ref`` — a two-slot
+    ``(C_BLK, D_PAD)`` ring (scratch VMEM) filled by per-row async copies
+    from HBM with one DMA semaphore per (slot, row). Chunk ``t+1``'s copies
+    start before chunk ``t``'s distances are reduced, hiding gather latency
+    behind the L1/top-k compute (the guide's double-buffering pattern).
+    """
+    comp, comparisons = _dedup_compact(cand_ref[...], run, c_comp)
+    valid = comp != _SENT
+    safe = jnp.clip(jnp.where(valid, comp, 0), 0, n - 1)
+    qrow = q_ref[...]  # (1, D_PAD)
+    n_chunks = c_comp // c_blk
+
+    def copy_row(slot, t, j):
+        return pltpu.make_async_copy(
+            data_ref.at[pl.ds(safe[0, t * c_blk + j], 1), :],
+            buf_ref.at[slot, pl.ds(j, 1), :],
+            sem_ref.at[slot, j],
+        )
+
+    def start_chunk(slot, t):
+        def issue(j, carry):
+            copy_row(slot, t, j).start()
+            return carry
+
+        jax.lax.fori_loop(0, c_blk, issue, 0)
+
+    start_chunk(0, 0)
+
+    def step(t, carry):
+        best_d, best_i = carry  # running (1, k) top-k
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < n_chunks)
+        def _():
+            start_chunk(1 - slot, t + 1)
+
+        def wait(j, carry2):
+            copy_row(slot, t, j).wait()
+            return carry2
+
+        jax.lax.fori_loop(0, c_blk, wait, 0)
+        tile = buf_ref[slot]  # (C_BLK, D_PAD)
+        dist = jnp.sum(jnp.abs(tile - qrow), axis=-1)[None, :]  # (1, C_BLK)
+        sl = jax.lax.dynamic_slice_in_dim(comp, t * c_blk, c_blk, axis=1)
+        ok = jax.lax.dynamic_slice_in_dim(valid, t * c_blk, c_blk, axis=1)
+        dist = jnp.where(ok, dist, jnp.inf)
+        # merge into the running top-k; earlier (lower-position) candidates
+        # come first in the concat, so ties keep the §6 lowest-position rule
+        cat_d = jnp.concatenate([best_d, dist], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.where(ok, sl, -1)], axis=1)
+        neg, p = jax.lax.top_k(-cat_d, k)
+        return -neg, jnp.take_along_axis(cat_i, p, axis=1)
+
+    init = (jnp.full((1, k), jnp.inf), jnp.full((1, k), -1, jnp.int32))
+    best_d, best_i = jax.lax.fori_loop(0, n_chunks, step, init)
+    kd_ref[...] = best_d
+    ki_ref[...] = jnp.where(jnp.isfinite(best_d), best_i, -1)
+    cmp_ref[...] = comparisons
+    ovf_ref[...] = jnp.maximum(comparisons - jnp.int32(c_comp), 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("run", "c_comp", "k", "interpret", "c_blk")
+)
+def query_tail_pallas(
+    data: jax.Array,  # (n, d)
+    queries: jax.Array,  # (Q, d)
+    cand: jax.Array,  # (Q, C) int32, run-sorted, C = run * 2^e
+    *,
+    run: int,
+    c_comp: int,
+    k: int,
+    interpret: bool = True,
+    c_blk: int = 128,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Launch the fused tail -> ``(kd, ki, comparisons, overflow)``.
+
+    Callers go through :func:`repro.kernels.query_fused.ops.query_tail`,
+    which pads ``cand`` to the power-of-two run count this launch requires
+    and resolves the interpret policy.
+    """
+    q_n, c = cand.shape
+    n, d = data.shape
+    if interpret:
+        kern = functools.partial(
+            _tail_kernel_interpret, run=run, c_comp=c_comp, k=k, n=n
+        )
+        return pl.pallas_call(
+            kern,
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),  # data stays HBM-side
+                pl.BlockSpec((q_n, d), lambda i: (0, 0)),
+                pl.BlockSpec((q_n, c), lambda i: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((q_n, k), lambda i: (0, 0)),
+                pl.BlockSpec((q_n, k), lambda i: (0, 0)),
+                pl.BlockSpec((q_n,), lambda i: (0,)),
+                pl.BlockSpec((q_n,), lambda i: (0,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((q_n, k), jnp.float32),
+                jax.ShapeDtypeStruct((q_n, k), jnp.int32),
+                jax.ShapeDtypeStruct((q_n,), jnp.int32),
+                jax.ShapeDtypeStruct((q_n,), jnp.int32),
+            ],
+            interpret=True,
+        )(data, queries, cand)
+
+    c_blk = max(1, min(c_blk, c_comp))
+    while c_comp % c_blk:  # ring chunks must tile the compacted width
+        c_blk //= 2
+    kern = functools.partial(
+        _tail_kernel_dma, run=run, c_comp=c_comp, k=k, n=n, c_blk=c_blk
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(q_n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # data: DMA'd row by row
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, k), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, k), jnp.int32),
+            jax.ShapeDtypeStruct((q_n,), jnp.int32),
+            jax.ShapeDtypeStruct((q_n,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, c_blk, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((2, c_blk)),
+        ],
+        interpret=False,
+    )(queries, cand, data)

@@ -1,0 +1,52 @@
+"""Reference (pure jnp) oracle for the fused query tail.
+
+Replays pipeline stages 3-5 (DESIGN.md §3) in their staged reference
+formulation — full-width sort dedup, sentinel sort-compact, masked L1
+top-k — over the same ``(Q, C)`` candidate tensor the megakernel consumes.
+The property suite (tests/test_property_kernels.py) holds the kernel to
+bit-exact agreement with this oracle on every output, including the §6
+lowest-position tie rule and the ``compaction_overflow`` count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.l1_topk import ref as l1_ref
+
+_SENT = jnp.int32(jnp.iinfo(jnp.int32).max)  # sorts after any real index
+
+
+def query_tail_ref(
+    data: jax.Array,  # (n, d)
+    queries: jax.Array,  # (Q, d)
+    cand: jax.Array,  # (Q, C) int32 candidate indices, -1 where masked
+    *,
+    c_comp: int,
+    k: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Staged tail over raw candidate rows -> ``(kd, ki, comparisons, overflow)``.
+
+    ``kd (Q, k)`` ascending L1 distances (inf-padded), ``ki (Q, k)`` global
+    indices (-1 padded), ``comparisons (Q,)`` unique candidates per row, and
+    ``overflow (Q,)`` unique survivors beyond the ``c_comp`` budget (counted,
+    never silently dropped). Unlike the kernel, ``cand`` rows need no run
+    structure here — the oracle sorts the full width.
+    """
+    n = data.shape[0]
+    cand_sorted = jnp.sort(cand, axis=-1)
+    uniq = jnp.concatenate(
+        [cand_sorted[:, :1] >= 0, cand_sorted[:, 1:] != cand_sorted[:, :-1]],
+        axis=-1,
+    ) & (cand_sorted >= 0)
+    comparisons = jnp.sum(uniq.astype(jnp.int32), axis=-1)
+    comp = jnp.sort(jnp.where(uniq, cand_sorted, _SENT), axis=-1)[:, :c_comp]
+    valid = comp != _SENT
+    overflow = jnp.maximum(comparisons - jnp.int32(c_comp), 0)
+    comp = jnp.where(valid, comp, -1)
+    pts = data[jnp.clip(comp, 0, n - 1)]  # (Q, c_comp, d)
+    kd, pos = l1_ref.l1_topk_ref(queries, pts, valid, k)
+    ki = jnp.where(
+        pos >= 0, jnp.take_along_axis(comp, jnp.maximum(pos, 0), axis=-1), -1
+    )
+    return kd, ki, comparisons, overflow

@@ -1,0 +1,92 @@
+"""Compile-cache regression tests for the fused query-tail megakernel.
+
+The fused kernel's jit cache is keyed on array shapes plus its static
+launch parameters (``run``, ``c_comp``, ``k``, ``interpret``) — nothing
+else. Runtime query knobs (``budget=`` / ``max_cells=`` / ``drop_mask``
+on :meth:`dslsh.Index.query`) and repeat eager dispatch must therefore
+never re-trace it; a retrace here means a Python value leaked into the
+kernel's trace key and every degradation decision would recompile the
+hot path (DESIGN.md §4). ``query_fused.ops.TRACE_COUNTS`` increments
+once per (re)trace, which is the counter these tests pin.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api as dslsh
+from repro.core import slsh
+from repro.kernels.query_fused import ops as qf_ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(**kw):
+    base = dict(
+        m_out=12, L_out=8, m_in=8, L_in=4, alpha=0.02, k=5,
+        val_lo=0.0, val_hi=1.0, c_max=32, c_in=8, h_max=4, p_max=64,
+        build_chunk=128, query_chunk=16, backend="pallas",
+    )
+    base.update(kw)
+    return slsh.SLSHConfig.compose(**base)
+
+
+def test_query_knobs_do_not_retrace_fused_kernel():
+    """Every budget / max_cells / drop_mask combination reuses the fused
+    kernel trace made at warmup — the per-cell candidate shapes and the
+    static launch params are knob-independent."""
+    cfg = _cfg()
+    data = jax.random.uniform(jax.random.PRNGKey(0), (256, 16))
+    q = jax.random.uniform(jax.random.PRNGKey(1), (32, 16))
+    deploy = dslsh.grid(
+        nu=2, p=2, routed=True, degrade=((0.05, None), (0.01, 2), (0.0, 1))
+    )
+    idx = dslsh.build(jax.random.PRNGKey(2), data, cfg, deploy)
+    jax.block_until_ready(idx.query(q).knn_idx)  # warmup: traces once
+    assert qf_ops.TRACE_COUNTS["query_tail"] >= 1
+    before = qf_ops.TRACE_COUNTS["query_tail"]
+    drop = np.zeros(2, bool)
+    drop[1] = True
+    variations = [
+        dict(budget=1.0),  # degrades to no cap — the warmup program
+        dict(budget=0.02),  # degrades to max_cells=2
+        dict(budget=-1.0),  # below every level -> most degraded
+        dict(max_cells=3),  # new outer program, same inner kernel
+        dict(max_cells=1),
+        dict(drop_mask=drop),
+        dict(budget=0.02, drop_mask=drop),
+    ]
+    for kw in variations:
+        jax.block_until_ready(idx.query(q, **kw).knn_idx)
+    assert qf_ops.TRACE_COUNTS["query_tail"] == before, (
+        f"fused kernel re-traced by runtime query knobs: "
+        f"{qf_ops.TRACE_COUNTS['query_tail'] - before} extra trace(s)"
+    )
+
+
+def test_eager_dispatch_steady_state_no_retrace():
+    """The eager per-stage fused schedule reuses its traces across
+    calls, including batch sizes that pad to the same chunk shape."""
+    cfg = _cfg()
+    data = jax.random.uniform(jax.random.PRNGKey(3), (256, 16))
+    idx = slsh.build_index(jax.random.PRNGKey(4), data, cfg)
+    q32 = jax.random.uniform(jax.random.PRNGKey(5), (32, 16))
+    jax.block_until_ready(slsh.query_batch(idx, data, q32, cfg).knn_idx)
+    before = qf_ops.TRACE_COUNTS["query_tail"]
+    jax.block_until_ready(slsh.query_batch(idx, data, q32, cfg).knn_idx)
+    # 24 queries pad to the same 16-row chunks the warmup traced
+    q24 = q32[:24]
+    jax.block_until_ready(slsh.query_batch(idx, data, q24, cfg).knn_idx)
+    assert qf_ops.TRACE_COUNTS["query_tail"] == before
+
+
+def test_reference_backend_never_touches_fused_kernel():
+    """The reference backend stays staged: no fused-kernel traces at all."""
+    cfg = _cfg(backend="reference")
+    data = jax.random.uniform(jax.random.PRNGKey(6), (128, 16))
+    idx = slsh.build_index(jax.random.PRNGKey(7), data, cfg)
+    q = jax.random.uniform(jax.random.PRNGKey(8), (8, 16))
+    before = qf_ops.TRACE_COUNTS["query_tail"]
+    res = slsh.query_batch(idx, data, q, cfg)
+    jax.block_until_ready(res.knn_idx)
+    assert jnp.all(res.comparisons >= 0)
+    assert qf_ops.TRACE_COUNTS["query_tail"] == before
