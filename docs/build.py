@@ -37,6 +37,10 @@ MODULES: tuple[str, ...] = (
     "repro.core.topk",
     "repro.core.pknn",
     "repro.core.predict",
+    "repro.obs",
+    "repro.obs.trace",
+    "repro.obs.metrics",
+    "repro.obs.clock",
     "repro.stream.index",
     "repro.stream.delta",
     "repro.stream.shard",

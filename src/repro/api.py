@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.checkpoint import store as ckpt_store
 from repro.core import distributed as D
 from repro.core import hashing, pipeline, routing, slsh, tables
@@ -309,13 +310,26 @@ class Index:
     The handle layers strictly: handle -> deployment dispatch -> the staged
     pipeline (``core/pipeline.py``). It adds no math of its own, so every
     result is bit-identical to the underlying execution path.
+
+    ``obs`` binds a :class:`repro.obs.Obs` bundle: lifecycle calls then
+    record spans and the query path feeds the metrics registry
+    (latency, comparisons, overflow, routed_frac — DESIGN.md §12).
+    Observability is handle state, never config state: ``SLSHConfig``
+    stays a hashable jit-cache key and serializes unchanged.
     """
 
-    def __init__(self, deploy: Deployment, cfg: SLSHConfig, state: dict):
+    def __init__(
+        self,
+        deploy: Deployment,
+        cfg: SLSHConfig,
+        state: dict,
+        obs: obs_mod.Obs | None = None,
+    ):
         self.deploy = deploy
         self.cfg = cfg
         self._state = state
         self._compiled: dict = {}
+        self._obs = obs
 
     # ------------------------------------------------------------- facts
 
@@ -362,6 +376,12 @@ class Index:
         approximate by design — the paper's latency-first mode).
         ``drop_mask`` (nu,) excludes straggler nodes from the Reducer
         (grid/mesh deployments).
+
+        With an obs bundle bound (``build(..., obs=...)``) or ambiently
+        activated, the call records an ``index.query`` span, syncs the
+        result, and feeds the query metrics (latency, comparisons,
+        overflow, routed_frac, per-cell routed load — DESIGN.md §12);
+        unbound handles take the bare fast path after one check.
         """
         queries = jnp.asarray(queries)
         if budget is not None:
@@ -380,6 +400,24 @@ class Index:
                 " routed=True) or dslsh.mesh(..., routed=True)) — the cap"
                 " rides the §10 routing plan",
             )
+        ob = self._obs if self._obs is not None else obs_mod.get_active()
+        if ob is None or not ob.enabled:
+            return self._query_impl(queries, max_cells, drop_mask)
+        with ob.activate():
+            with ob.span(
+                "index.query", deployment=self.deploy.kind,
+                queries=int(queries.shape[0]),
+            ) as sp:
+                res = self._query_impl(queries, max_cells, drop_mask)
+                jax.block_until_ready(res)
+        if ob.metrics is not None:
+            self._record_query_metrics(ob, res, sp.dur_s)
+        return res
+
+    def _query_impl(
+        self, queries, max_cells: int | None, drop_mask
+    ) -> DistributedQueryResult:
+        """Deployment dispatch behind :meth:`query` (validation done)."""
         kind = self.deploy.kind
         if kind == "single":
             pipeline._require(
@@ -387,6 +425,22 @@ class Index:
                 "drop_mask only applies to grid/mesh deployments (a single"
                 " shard has no straggler nodes to drop)",
             )
+            ob = obs_mod.get_active()
+            if ob is not None and ob.tracing:
+                # per-stage spans need the eager per-stage schedule —
+                # run the pipeline outside the handle's one-jit wrapper
+                # (bit-identical; §12 sync-point policy)
+                res = pipeline.query_batch(
+                    self._state["index"], self._state["data"], queries,
+                    self.cfg,
+                )
+                return DistributedQueryResult(
+                    res.knn_dist,
+                    res.knn_idx,
+                    res.comparisons[None, None],
+                    res.compaction_overflow[None, None],
+                    jnp.ones((1, 1, queries.shape[0]), bool),
+                )
             return self._single_fn()(queries)
         if kind == "grid":
             dm = (
@@ -409,6 +463,72 @@ class Index:
             " / max_cells degradation applies to grid/mesh deployments",
         )
         return self._state["core"].query(queries)
+
+    def _record_query_metrics(
+        self, ob: obs_mod.Obs, res: DistributedQueryResult, dur_s: float
+    ) -> None:
+        """Feed the §12 query metrics from one already-computed result."""
+        m = ob.metrics
+        kind = self.deploy.kind
+        m.histogram(
+            "dslsh_query_latency_seconds",
+            "end-to-end Index.query wall time (synced)",
+        ).labels(deployment=kind).observe(dur_s)
+        m.counter(
+            "dslsh_queries_total", "Index.query batches answered"
+        ).labels(deployment=kind).inc()
+        comps = np.asarray(res.comparisons)  # (nu, p, Q)
+        m.counter(
+            "dslsh_comparisons_total",
+            "unique candidates scanned across all cells (paper's cost"
+            " measure)",
+        ).inc(float(comps.sum()))
+        comp_hist = m.histogram(
+            "dslsh_query_comparisons",
+            "per-query max unique candidates scanned in any one cell",
+            buckets=obs_mod.metrics.COUNT_BUCKETS,
+        )
+        for v in comps.max(axis=(0, 1)):
+            comp_hist.observe(float(v))
+        overflow = np.asarray(res.compaction_overflow)
+        m.counter(
+            "dslsh_compaction_overflow_total",
+            "unique survivors beyond c_comp — non-zero means results are"
+            " budget-truncated (DESIGN.md §3)",
+        ).inc(float(overflow.sum()))
+        m.histogram(
+            "dslsh_routed_frac",
+            "fraction of (cell, query) pairs the §10 router visited",
+            buckets=obs_mod.log_buckets(0.01, 1.0, per_decade=8),
+        ).observe(float(res.routed_frac))
+        routed = np.asarray(res.routed)  # (nu, p, Q)
+        per_cell = routed.sum(axis=2)
+        cell_counter = m.counter(
+            "dslsh_routed_queries_per_cell_total",
+            "queries routed to each (node, core) cell — the load signal"
+            " the routing plan's replicas balance",
+        )
+        for j in range(per_cell.shape[0]):
+            for c in range(per_cell.shape[1]):
+                cell_counter.labels(cell=f"{j}/{c}").inc(float(per_cell[j, c]))
+        plan = self.plan
+        if plan is not None and plan.r_max > 1:
+            load = routing.device_load(plan, routed.transpose(2, 0, 1))
+            dev_counter = m.counter(
+                "dslsh_replica_routed_queries_total",
+                "queries each replica device answered (replication load"
+                " balance, §10)",
+            )
+            for d, v in enumerate(np.asarray(load)):
+                dev_counter.labels(device=str(d)).inc(float(v))
+
+    def with_obs(self, obs: obs_mod.Obs | None) -> "Index":
+        """The same handle state bound to a (different) obs bundle —
+        compiled query programs are shared, so instrumenting an existing
+        index costs no recompile."""
+        out = Index(self.deploy, self.cfg, self._state, obs)
+        out._compiled = self._compiled
+        return out
 
     def with_routing(
         self,
@@ -436,7 +556,7 @@ class Index:
             self.deploy, routed=True, replication=replication,
             route_bits=route_bits, degrade=degrade,
         )
-        return Index(deploy, self.cfg, {**self._state, "plan": plan})
+        return Index(deploy, self.cfg, {**self._state, "plan": plan}, self._obs)
 
     def query_with_stats(
         self, queries
@@ -503,7 +623,11 @@ class Index:
         retention horizon, evicts) first. Returns the
         :class:`~repro.stream.shard.IngestReport` of what happened.
         """
-        return self._core().ingest(xs, float(ts))
+        ob = self._obs if self._obs is not None else obs_mod.get_active()
+        if ob is None or not ob.enabled:
+            return self._core().ingest(xs, float(ts))
+        with ob.activate(), ob.span("index.ingest", ts=float(ts)):
+            return self._core().ingest(xs, float(ts))
 
     def compact(self, ts: float = 0.0) -> list:
         """Fold every node's delta segment into its base now (streaming
@@ -511,7 +635,11 @@ class Index:
         (surviving old store rows, ascending; None when nothing was
         evicted) is the renumbering map for any per-point metadata the
         caller holds, exactly like ``IngestReport.keep``."""
-        return self._core().compact_all(float(ts))
+        ob = self._obs if self._obs is not None else obs_mod.get_active()
+        if ob is None or not ob.enabled:
+            return self._core().compact_all(float(ts))
+        with ob.activate(), ob.span("index.compact", ts=float(ts)):
+            return self._core().compact_all(float(ts))
 
     # ------------------------------------------------------- persistence
 
@@ -523,31 +651,58 @@ class Index:
         cursors land in ``dslsh.json``. :func:`load` restores the handle;
         round-trips are bit-exact (tests/test_api.py).
         """
-        state, extra = _state_arrays(self)
-        os.makedirs(path, exist_ok=True)
-        ckpt_store.save({"state": state}, 0, path)
-        meta = {
-            "format": 1,
-            "cfg": _cfg_dict(self.cfg),
-            "deploy": _deploy_dict(self.deploy),
-            "extra": extra,
-        }
-        with open(os.path.join(path, "dslsh.json"), "w") as f:
-            json.dump(meta, f, indent=2)
-        return path
+        with self._span("index.save", path=path):
+            state, extra = _state_arrays(self)
+            os.makedirs(path, exist_ok=True)
+            ckpt_store.save({"state": state}, 0, path)
+            meta = {
+                "format": 1,
+                "cfg": _cfg_dict(self.cfg),
+                "deploy": _deploy_dict(self.deploy),
+                "extra": extra,
+            }
+            with open(os.path.join(path, "dslsh.json"), "w") as f:
+                json.dump(meta, f, indent=2)
+            return path
+
+    def _span(self, name: str, **args):
+        """A span on the bound/ambient obs bundle (no-op when none)."""
+        ob = self._obs if self._obs is not None else obs_mod.get_active()
+        if ob is None:
+            return obs_mod.NULL_SPAN
+        return ob.span(name, **args)
 
 
 # ------------------------------------------------------------- build / load
 
 
-def build(key, data, cfg: SLSHConfig, deploy: Deployment, *, t0: float = 0.0) -> Index:
+def build(
+    key, data, cfg: SLSHConfig, deploy: Deployment, *, t0: float = 0.0,
+    obs: obs_mod.Obs | None = None,
+) -> Index:
     """Build a DSLSH index over ``data`` (n, d) for ``deploy`` -> :class:`Index`.
 
     ``key`` seeds the one root hash family every cell slices its tables
     from (the paper Root's broadcast). For grid/mesh deployments ``n`` must
     divide the cell grid — pad with :func:`pad_to_multiple` first. ``t0``
-    stamps the warmup windows of a streaming deployment.
+    stamps the warmup windows of a streaming deployment. ``obs`` binds an
+    observability bundle: the build records an ``index.build`` span and
+    the returned handle is instrumented (DESIGN.md §12).
     """
+    if obs is not None and obs.enabled:
+        with obs.activate(), obs.span(
+            "index.build", deployment=deploy.kind, n=int(jnp.asarray(data).shape[0])
+        ):
+            out = _build_impl(key, data, cfg, deploy, t0=t0, obs=obs)
+            jax.block_until_ready(out._state.get("index"))
+            return out
+    return _build_impl(key, data, cfg, deploy, t0=t0, obs=obs)
+
+
+def _build_impl(
+    key, data, cfg: SLSHConfig, deploy: Deployment, *, t0: float,
+    obs: obs_mod.Obs | None,
+) -> Index:
     data = jnp.asarray(data)
     n = data.shape[0]
     g = deploy.grid
@@ -565,7 +720,7 @@ def build(key, data, cfg: SLSHConfig, deploy: Deployment, *, t0: float = 0.0) ->
         )
     if deploy.kind == "single":
         index = slsh.build_index(key, data, cfg)
-        return Index(deploy, cfg, {"index": index, "data": data})
+        return Index(deploy, cfg, {"index": index, "data": data}, obs)
     if deploy.kind == "grid":
         index = D.simulate_build(key, data, cfg, g)
         state = {"index": index, "data": data}
@@ -574,7 +729,7 @@ def build(key, data, cfg: SLSHConfig, deploy: Deployment, *, t0: float = 0.0) ->
                 index, cfg, g, replication=deploy.replication,
                 bits=deploy.route_bits,
             )
-        return Index(deploy, cfg, state)
+        return Index(deploy, cfg, state, obs)
     if deploy.kind == "mesh":
         index = D.dslsh_build(deploy.mesh, key, data, cfg, g)
         state = {"index": index, "data": data}
@@ -582,7 +737,7 @@ def build(key, data, cfg: SLSHConfig, deploy: Deployment, *, t0: float = 0.0) ->
             state["plan"] = routing.make_plan(
                 index, cfg, g, replication=1, bits=deploy.route_bits
             )
-        return Index(deploy, cfg, state)
+        return Index(deploy, cfg, state, obs)
     # streaming
     core = shard_mod.ShardedStream(
         key, data, cfg, g,
@@ -590,10 +745,13 @@ def build(key, data, cfg: SLSHConfig, deploy: Deployment, *, t0: float = 0.0) ->
         retention_s=deploy.retention_s, t0=t0, route=deploy.routed,
         route_bits=deploy.route_bits,
     )
-    return Index(deploy, cfg, {"core": core})
+    return Index(deploy, cfg, {"core": core}, obs)
 
 
-def wrap_grid(index, data, cfg: SLSHConfig, grid_: Grid, plan=None) -> Index:
+def wrap_grid(
+    index, data, cfg: SLSHConfig, grid_: Grid, plan=None,
+    obs: obs_mod.Obs | None = None,
+) -> Index:
     """Wrap a prebuilt ``simulate_build`` index into a grid-deployment
     handle (the bridge legacy call sites migrate through)."""
     deploy = Deployment(
@@ -602,20 +760,24 @@ def wrap_grid(index, data, cfg: SLSHConfig, grid_: Grid, plan=None) -> Index:
     state = {"index": index, "data": jnp.asarray(data)}
     if plan is not None:
         state["plan"] = plan
-    return Index(deploy, cfg, state)
+    return Index(deploy, cfg, state, obs)
 
 
-def wrap_single(index, data, cfg: SLSHConfig) -> Index:
+def wrap_single(
+    index, data, cfg: SLSHConfig, obs: obs_mod.Obs | None = None
+) -> Index:
     """Wrap a prebuilt ``slsh.build_index`` index into a single-shard
     handle (bridge for legacy call sites and the perf-gate benchmark)."""
-    return Index(single(), cfg, {"index": index, "data": jnp.asarray(data)})
+    return Index(single(), cfg, {"index": index, "data": jnp.asarray(data)}, obs)
 
 
-def load(path: str, *, device_mesh=None) -> Index:
+def load(path: str, *, device_mesh=None, obs: obs_mod.Obs | None = None) -> Index:
     """Restore an :class:`Index` saved by :meth:`Index.save`.
 
     Mesh deployments need the (unserializable) device mesh handed back in
-    via ``device_mesh``; everything else restores from the directory alone.
+    via ``device_mesh``; everything else restores from the directory
+    alone. ``obs`` instruments the restored handle and records an
+    ``index.load`` span around the restore.
     """
     with open(os.path.join(path, "dslsh.json")) as f:
         meta = json.load(f)
@@ -636,8 +798,12 @@ def load(path: str, *, device_mesh=None) -> Index:
         dep["mesh"] = device_mesh
     deploy = Deployment(**dep)
     skeleton = _state_skeleton(deploy)
+    if obs is not None and obs.enabled:
+        with obs.activate(), obs.span("index.load", path=path):
+            state = ckpt_store.restore({"state": skeleton}, 0, path)["state"]
+            return _rehydrate(deploy, cfg, state, meta["extra"], obs)
     state = ckpt_store.restore({"state": skeleton}, 0, path)["state"]
-    return _rehydrate(deploy, cfg, state, meta["extra"])
+    return _rehydrate(deploy, cfg, state, meta["extra"], obs)
 
 
 # ----------------------------------------------------- persistence helpers
@@ -708,7 +874,10 @@ def _state_skeleton(deploy: Deployment):
     return tree
 
 
-def _rehydrate(deploy: Deployment, cfg: SLSHConfig, state, extra: dict) -> Index:
+def _rehydrate(
+    deploy: Deployment, cfg: SLSHConfig, state, extra: dict,
+    obs: obs_mod.Obs | None = None,
+) -> Index:
     if deploy.kind == "streaming":
         nodes = [jax.tree.map(jnp.asarray, nd) for nd in state["nodes"]]
         family = (
@@ -721,7 +890,7 @@ def _rehydrate(deploy: Deployment, cfg: SLSHConfig, state, extra: dict) -> Index
             retention_s=deploy.retention_s, route=deploy.routed,
             route_bits=deploy.route_bits, rr=int(extra.get("rr", 0)),
         )
-        return Index(deploy, cfg, {"core": core})
+        return Index(deploy, cfg, {"core": core}, obs)
     index = jax.tree.map(jnp.asarray, state["index"])
     data = jnp.asarray(state["data"])
     if deploy.kind == "mesh":
@@ -745,4 +914,4 @@ def _rehydrate(deploy: Deployment, cfg: SLSHConfig, state, extra: dict) -> Index
             heat=np.asarray(p["heat"]),
             cell_device=np.asarray(p["cell_device"]),
         )
-    return Index(deploy, cfg, new_state)
+    return Index(deploy, cfg, new_state, obs)

@@ -46,7 +46,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.core import hashing, tables, topk
+from repro.obs.metrics import count_retrace
 
 # ------------------------------------------------------------ configuration
 
@@ -1118,27 +1120,42 @@ def _contains_tracer(*trees) -> bool:
 
 @functools.lru_cache(maxsize=64)
 def _staged_batch_fn(cfg: SLSHConfig, has_delta: bool):
-    """Cached whole-batch jit of the staged pipeline (eager entry points)."""
+    """Cached whole-batch jit of the staged pipeline (eager entry points).
+
+    Each jitted body bumps the public ``dslsh_jit_retraces_total``
+    counter (``repro.obs``): the body runs only on a compile-cache miss,
+    so steady-state dispatch records nothing (DESIGN.md §12).
+    """
     if has_delta:
-        return jax.jit(
-            lambda index, data, queries, delta: _chunked_map(
+        def run_delta(index, data, queries, delta):
+            count_retrace("staged_batch")
+            return _chunked_map(
                 lambda qs: query_chunk(index, data, qs, cfg, delta),
                 queries,
                 cfg.query_chunk,
             )
-        )
-    return jax.jit(
-        lambda index, data, queries: _chunked_map(
+
+        return jax.jit(run_delta)
+
+    def run(index, data, queries):
+        count_retrace("staged_batch")
+        return _chunked_map(
             lambda qs: query_chunk(index, data, qs, cfg), queries, cfg.query_chunk
         )
-    )
+
+    return jax.jit(run)
 
 
 @functools.lru_cache(maxsize=64)
 def _fused_hash_fn(cfg: SLSHConfig):
     """Cached jit of stage 1 (hash + probe keys) for one config."""
     backend = get_backend(cfg.backend, cfg)
-    return jax.jit(lambda index, queries: _stage_hash(index, queries, cfg, backend))
+
+    def run(index, queries):
+        count_retrace("hash")
+        return _stage_hash(index, queries, cfg, backend)
+
+    return jax.jit(run)
 
 
 @functools.lru_cache(maxsize=64)
@@ -1151,21 +1168,51 @@ def _fused_gather_parts_fn(cfg: SLSHConfig):
     that motivates keeping the megakernel tail out of the head program
     (DESIGN.md §8.6).
     """
-    return jax.jit(lambda index, pk, ik: _gather_fast_parts(index, cfg, pk, ik))
+
+    def run(index, pk, ik):
+        count_retrace("gather_work")
+        return _gather_fast_parts(index, cfg, pk, ik)
+
+    return jax.jit(run)
 
 
 @functools.lru_cache(maxsize=64)
 def _fused_gather_select_fn(cfg: SLSHConfig):
     """Cached jit of the fast gather's branch select (base path, stage 2)."""
-    return jax.jit(lambda oc, ic, f: _gather_fast_select(cfg, oc, ic, f))
+
+    def run(oc, ic, f):
+        count_retrace("gather_select")
+        return _gather_fast_select(cfg, oc, ic, f)
+
+    return jax.jit(run)
 
 
 @functools.lru_cache(maxsize=64)
 def _fused_gather_delta_fn(cfg: SLSHConfig):
     """Cached jit of the exact streaming gather (delta path, stage 2)."""
-    return jax.jit(
-        lambda index, pk, ik, delta: _stage_gather(index, cfg, pk, ik, delta)
-    )
+
+    def run(index, pk, ik, delta):
+        count_retrace("gather_delta")
+        return _stage_gather(index, cfg, pk, ik, delta)
+
+    return jax.jit(run)
+
+
+def _traced_stage(ob, name: str, fn, *args):
+    """One traced stage dispatch: span + ``block_until_ready`` sync so
+    the span covers real device time, and the duration observed into the
+    per-stage latency histogram. Called only when tracing is enabled —
+    the sync point is the §12 sync-point policy, not the fast path."""
+    with ob.span(name) as sp:
+        out = fn(*args)
+        jax.block_until_ready(out)
+    if ob.metrics is not None:
+        ob.metrics.histogram(
+            "dslsh_stage_latency_seconds",
+            "device time per eager query-pipeline stage dispatch"
+            " (recorded only under tracing — the sync-point policy)",
+        ).labels(stage=name).observe(sp.dur_s)
+    return out
 
 
 def _query_batch_fused_eager(
@@ -1189,6 +1236,13 @@ def _query_batch_fused_eager(
     Inside an outer jit (tracers
     present) ``query_batch`` falls back to the traceable one-jit
     composition: bit-identical, just not dispatch-optimal (DESIGN.md §4).
+
+    When an ambient obs bundle has tracing enabled, every stage dispatch
+    is wrapped in a span with an explicit ``block_until_ready`` sync
+    point so per-stage durations are real device time, and each span's
+    duration feeds the ``dslsh_stage_latency_seconds`` histogram. The
+    sync points exist *only* under tracing — the steady-state fast path
+    checks one ContextVar and branches away (DESIGN.md §12).
     """
     q_n = queries.shape[0]
     chunk = min(cfg.query_chunk, q_n)
@@ -1203,18 +1257,42 @@ def _query_batch_fused_eager(
         gather_fn = _fused_gather_delta_fn(cfg)
     run = _fused_run(cfg)
     cc = _compact_width(cfg, index.outer.sorted_keys.shape[0] * cfg.slot, data.shape[0])
+    ob = obs_mod.get_active()
+    if ob is not None and not ob.tracing:
+        ob = None  # sync-point policy: per-stage timing only under tracing
     outs = []
     for i in range(n_chunks):
         qs = qp[i * chunk : (i + 1) * chunk]
-        pk, ik = hash_fn(index, qs)
-        if delta is None:
-            oc, ic, fnd, bucket_total = parts_fn(index, pk, ik)
-            cand = select_fn(oc, ic, fnd)
+        if ob is None:
+            pk, ik = hash_fn(index, qs)
+            if delta is None:
+                oc, ic, fnd, bucket_total = parts_fn(index, pk, ik)
+                cand = select_fn(oc, ic, fnd)
+            else:
+                cand, bucket_total = gather_fn(index, pk, ik, delta)
+            kd, ki, comparisons, overflow = backend.query_tail(
+                data, qs, cand, run=run, c_comp=cc, k=cfg.k
+            )
         else:
-            cand, bucket_total = gather_fn(index, pk, ik, delta)
-        kd, ki, comparisons, overflow = backend.query_tail(
-            data, qs, cand, run=run, c_comp=cc, k=cfg.k
-        )
+            pk, ik = _traced_stage(ob, "query.hash", hash_fn, index, qs)
+            if delta is None:
+                oc, ic, fnd, bucket_total = _traced_stage(
+                    ob, "query.gather_work", parts_fn, index, pk, ik
+                )
+                cand = _traced_stage(
+                    ob, "query.gather_select", select_fn, oc, ic, fnd
+                )
+            else:
+                cand, bucket_total = _traced_stage(
+                    ob, "query.gather_delta", gather_fn, index, pk, ik, delta
+                )
+            kd, ki, comparisons, overflow = _traced_stage(
+                ob, "query.tail",
+                lambda d, q, c: backend.query_tail(
+                    d, q, c, run=run, c_comp=cc, k=cfg.k
+                ),
+                data, qs, cand,
+            )
         outs.append(QueryResult(ki, kd, comparisons, bucket_total, overflow))
     if len(outs) == 1:
         res = outs[0]
@@ -1249,6 +1327,13 @@ def query_batch(
     if backend.query_tail is not None:
         return _query_batch_fused_eager(index, data, queries, cfg, delta, backend)
     fn = _staged_batch_fn(cfg, delta is not None)
+    ob = obs_mod.get_active()
+    if ob is not None and ob.tracing:
+        # the staged path is one whole-batch program — per-stage spans
+        # are a fused-path feature; record the one dispatch that exists
+        if delta is None:
+            return _traced_stage(ob, "query.batch", fn, index, data, queries)
+        return _traced_stage(ob, "query.batch", fn, index, data, queries, delta)
     if delta is None:
         return fn(index, data, queries)
     return fn(index, data, queries, delta)

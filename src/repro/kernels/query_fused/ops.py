@@ -24,12 +24,7 @@ import jax.numpy as jnp
 
 from repro.kernels import blocking
 from repro.kernels.query_fused.query_fused import query_tail_pallas
-
-# Trace-count instrumentation: bumped once per (re)trace of ``query_tail``
-# (the body runs only on jit cache misses). The compile-cache regression
-# test (tests/test_compile_cache.py) pins the static-shape contract with it:
-# runtime query knobs must never re-trace the fused kernel.
-TRACE_COUNTS = {"query_tail": 0}
+from repro.obs.metrics import count_retrace
 
 
 def _run_padded_width(c: int, run: int) -> int:
@@ -65,7 +60,11 @@ def query_tail(
     padded, §6 lowest-position tie rule), ``comparisons (Q,)`` unique
     candidates, ``overflow (Q,)`` unique survivors beyond ``c_comp``.
     """
-    TRACE_COUNTS["query_tail"] += 1
+    # bumped once per (re)trace — the body runs only on jit cache misses.
+    # ``repro.obs.retraces("query_tail")`` is the public counter the
+    # compile-cache regression tests pin: runtime query knobs must never
+    # re-trace the fused kernel (DESIGN.md §4/§12).
+    count_retrace("query_tail")
     interp = blocking.resolve_interpret(interpret)
     c = cand.shape[1]
     c_pad = _run_padded_width(c, run)

@@ -17,13 +17,12 @@ Usage:
 import argparse
 import json
 import re
-import time
 import traceback
 
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.launch.mesh import make_production_mesh
 from repro.models import api
 from repro.runtime.compat import cost_analysis_dict
@@ -121,21 +120,20 @@ def run_cell(arch_id: str, cell: str, multi_pod: bool, out_dir: str) -> dict:
         print(f"[SKIP] {arch_id} {cell} {mesh_name}: {skip}")
         return rec
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
     try:
         with ctx.use_mesh(mesh):
-            lowered, aux = lower_cell(arch_id, cell, mesh)
-            t1 = time.time()
-            compiled = lowered.compile()
-            t2 = time.time()
+            with obs.timed_section("dryrun.lower") as lower_sec:
+                lowered, aux = lower_cell(arch_id, cell, mesh)
+            with obs.timed_section("dryrun.compile") as compile_sec:
+                compiled = lowered.compile()
             mem = compiled.memory_analysis()
             cost = cost_analysis_dict(compiled)
             hlo = compiled.as_text()
             coll = collective_bytes(hlo)
         rec.update(
             status="ok",
-            lower_s=round(t1 - t0, 2),
-            compile_s=round(t2 - t1, 2),
+            lower_s=round(lower_sec.dur_s, 2),
+            compile_s=round(compile_sec.dur_s, 2),
             devices=mesh.devices.size,
             flops=float(cost.get("flops", 0.0)),
             bytes_accessed=float(cost.get("bytes accessed", 0.0)),

@@ -6,13 +6,12 @@ SLSH-kNN-LM augmentation over a hidden-state datastore.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.data.lm_data import TokenStream
 from repro.models import api
 from repro.serve import engine
@@ -47,12 +46,12 @@ def main():
         model, params, max_batch=args.requests,
         max_len=args.prompt_len + args.max_new + 8,
     )
-    t0 = time.time()
-    done = eng.serve(reqs)
+    with obs.timed_section("serve.requests") as sec:
+        done = eng.serve(reqs)
     for r in done:
         print(f"req {r.rid}: {list(r.tokens[-4:])} -> {r.result}  "
               f"({r.latency_s*1e3:.0f} ms)")
-    print(f"served {len(done)} requests in {time.time()-t0:.2f}s "
+    print(f"served {len(done)} requests in {sec.dur_s:.2f}s "
           f"(arch={cfg.name}, params={model.n_params/1e6:.1f}M)")
 
 

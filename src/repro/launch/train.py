@@ -9,12 +9,11 @@ runs the microbatched train step with periodic (async) checkpointing.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.checkpoint import store
 from repro.data.lm_data import TokenStream
 from repro.models import api
@@ -66,30 +65,30 @@ def main():
                 print(f"resumed at step {at}")
         step_fn = jax.jit(tl.make_train_step(model, opt_cfg), donate_argnums=(0, 1))
         stream = TokenStream(cfg.vocab, seed=0)
-        t0 = time.time()
         m = {}
-        for i, b in enumerate(
-            stream.batches(args.steps - start, args.batch, args.seq), start=start
-        ):
-            batch = {"tokens": jnp.asarray(b["tokens"])}
-            if cfg.frontend == "vision":
-                batch["patch_embeds"] = jnp.zeros(
-                    (args.batch, cfg.frontend_len, cfg.frontend_dim)
-                )
-            elif cfg.frontend == "audio":
-                key = jax.random.PRNGKey(i)
-                batch = {
-                    "frames": jax.random.normal(key, (args.batch, args.seq, cfg.frontend_dim)),
-                    "frame_mask": jax.random.bernoulli(key, 0.3, (args.batch, args.seq)),
-                    "targets": jax.random.randint(key, (args.batch, args.seq), 0, cfg.vocab),
-                }
-            params, state, m = step_fn(params, state, batch)
-            if i % 10 == 0 or i == args.steps - 1:
-                print(f"step {i:4d} loss={float(m['loss']):.4f} "
-                      f"gnorm={float(m['grad_norm']):.3f} ({time.time()-t0:.1f}s)")
-            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
-                store.save({"params": params, "opt": state}, i + 1, args.ckpt_dir,
-                           blocking=False)
+        with obs.timed_section("train.steps") as sec:
+            for i, b in enumerate(
+                stream.batches(args.steps - start, args.batch, args.seq), start=start
+            ):
+                batch = {"tokens": jnp.asarray(b["tokens"])}
+                if cfg.frontend == "vision":
+                    batch["patch_embeds"] = jnp.zeros(
+                        (args.batch, cfg.frontend_len, cfg.frontend_dim)
+                    )
+                elif cfg.frontend == "audio":
+                    key = jax.random.PRNGKey(i)
+                    batch = {
+                        "frames": jax.random.normal(key, (args.batch, args.seq, cfg.frontend_dim)),
+                        "frame_mask": jax.random.bernoulli(key, 0.3, (args.batch, args.seq)),
+                        "targets": jax.random.randint(key, (args.batch, args.seq), 0, cfg.vocab),
+                    }
+                params, state, m = step_fn(params, state, batch)
+                if i % 10 == 0 or i == args.steps - 1:
+                    print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                          f"gnorm={float(m['grad_norm']):.3f} ({sec.elapsed_s:.1f}s)")
+                if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                    store.save({"params": params, "opt": state}, i + 1, args.ckpt_dir,
+                               blocking=False)
         print("final loss:", float(m["loss"]))
 
 

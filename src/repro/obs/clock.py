@@ -1,0 +1,29 @@
+"""Clock helpers: the one place the repo reads time from.
+
+Two clocks, two jobs (DESIGN.md §12):
+
+* :func:`monotonic` — ``time.perf_counter``: high-resolution and immune
+  to wall-clock jumps (NTP slew, manual resets). Every duration, span,
+  deadline, and heartbeat in the repo measures against this clock —
+  a wall-clock jump must never expire a straggler deadline or mark a
+  live node down (the PR-7 bugfix for ``serve/engine.py`` and
+  ``runtime/ft.py``).
+* :func:`wall` — ``time.time``: epoch seconds, for human-readable
+  timestamps only (log lines, trace metadata). Never used to compute a
+  duration.
+"""
+from __future__ import annotations
+
+import time
+
+
+def monotonic() -> float:
+    """Monotonic seconds (``time.perf_counter``) — use for every
+    duration, deadline, and heartbeat; immune to wall-clock jumps."""
+    return time.perf_counter()
+
+
+def wall() -> float:
+    """Wall-clock epoch seconds (``time.time``) — timestamps for humans
+    only, never durations."""
+    return time.time()

@@ -27,6 +27,8 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.obs import clock
+
 
 @dataclasses.dataclass
 class HeartbeatMonitor:
@@ -35,10 +37,13 @@ class HeartbeatMonitor:
     last_beat: dict = dataclasses.field(default_factory=dict)
 
     def beat(self, node: int, t: float | None = None):
-        self.last_beat[node] = time.time() if t is None else t
+        """Record liveness for ``node`` — on the monotonic clock (a
+        wall-clock jump must never mark a live node down); pass ``t``
+        only with a consistent simulated clock."""
+        self.last_beat[node] = clock.monotonic() if t is None else t
 
     def down_nodes(self, now: float | None = None) -> list[int]:
-        now = time.time() if now is None else now
+        now = clock.monotonic() if now is None else now
         return [
             n
             for n in range(self.n_nodes)

@@ -9,13 +9,16 @@ retrieval at decode time is a DSLSH query.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs as obs_mod
+from repro.obs import clock
 
 
 @dataclasses.dataclass
@@ -42,9 +45,11 @@ class ServeEngine:
         max_batch: int = 8,
         max_len: int = 512,
         logits_hook: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+        obs: obs_mod.Obs | None = None,
     ):
         self.model = model
         self.params = params
+        self.obs = obs
         self.max_batch = max_batch
         self.max_len = max_len + model.cfg.meta_tokens
         self.logits_hook = logits_hook  # e.g. SLSH-kNN-LM interpolation
@@ -74,55 +79,89 @@ class ServeEngine:
         ``deadline_s`` expires mid-decode is finalized immediately with the
         tokens produced so far — ``timed_out`` set, ``latency_s`` populated
         at expiry, no further tokens appended. The batch keeps decoding for
-        the surviving requests (and stops early once all are finalized)."""
-        for batch_start in range(0, len(requests), self.max_batch):
-            group = requests[batch_start : batch_start + self.max_batch]
-            t0 = time.time()
-            caches, logits_list = [], []
-            for r in group:
-                lg, ch = self._prefill_one(r)
-                caches.append(ch)
-                logits_list.append(lg)
-            # stack caches along batch dim (each was B=1)
-            cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=self._batch_axis_guess(xs[0])), *caches)
-            logits = jnp.concatenate(logits_list, axis=0)
-            steps = max(r.max_new for r in group)
-            for step in range(steps):
-                elapsed = time.time() - t0
-                for r in group:
-                    # completion is checked first: a request that produced all
-                    # its tokens can no longer time out (its deadline expiring
-                    # while batchmates keep decoding is not an SLA miss)
-                    if not r.done and len(r.result) >= r.max_new:
-                        r.done = True
-                        r.latency_s = elapsed
-                    if not r.done and elapsed > r.deadline_s:
-                        r.done = True
-                        r.timed_out = True
-                        r.latency_s = elapsed
-                if all(r.done for r in group):
-                    break
-                if self.logits_hook is not None:
-                    if self._hook_takes_budget:
-                        # tightest remaining latency budget in the batch —
-                        # the router degrades retrieval when it runs short
-                        budget = min(
-                            (r.deadline_s - elapsed for r in group if not r.done),
-                            default=float("inf"),
-                        )
-                        logits = self.logits_hook(logits, cache, budget)
-                    else:
-                        logits = self.logits_hook(logits, cache)
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                for i, r in enumerate(group):
-                    if not r.done and len(r.result) < r.max_new:
-                        r.result.append(int(tok[i]))
-                logits, cache = self._decode(self.params, cache, tok[:, None])
-            for r in group:
-                if not r.done:
-                    r.done = True
-                    r.latency_s = time.time() - t0
+        the surviving requests (and stops early once all are finalized).
+
+        Deadlines measure on the monotonic clock (``repro.obs.clock``):
+        a wall-clock jump mid-decode must never expire (or revive) a
+        straggler deadline. With an obs bundle bound, each micro-batch
+        records a ``serve.batch`` span and every finalized request feeds
+        the per-request latency histogram and the timeout counter."""
+        ob = self.obs
+        ctx = ob.activate() if ob is not None else contextlib.nullcontext()
+        with ctx:
+            for batch_start in range(0, len(requests), self.max_batch):
+                group = requests[batch_start : batch_start + self.max_batch]
+                with self._span("serve.batch", requests=len(group)):
+                    self._serve_group(group)
         return requests
+
+    def _span(self, name: str, **args):
+        if self.obs is None:
+            return obs_mod.NULL_SPAN
+        return self.obs.span(name, **args)
+
+    def _finalize(self, r: Request, elapsed: float, timed_out: bool = False):
+        r.done = True
+        r.timed_out = timed_out
+        r.latency_s = elapsed
+        ob = self.obs
+        if ob is not None and ob.metrics is not None:
+            m = ob.metrics
+            m.histogram(
+                "dslsh_serve_request_latency_seconds",
+                "per-request serve latency (prefill start -> finalize)",
+            ).observe(elapsed)
+            m.counter(
+                "dslsh_serve_requests_total", "requests finalized"
+            ).inc()
+            if timed_out:
+                m.counter(
+                    "dslsh_serve_timeouts_total",
+                    "requests finalized early by their straggler deadline",
+                ).inc()
+
+    def _serve_group(self, group: list[Request]) -> None:
+        t0 = clock.monotonic()
+        caches, logits_list = [], []
+        for r in group:
+            lg, ch = self._prefill_one(r)
+            caches.append(ch)
+            logits_list.append(lg)
+        # stack caches along batch dim (each was B=1)
+        cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=self._batch_axis_guess(xs[0])), *caches)
+        logits = jnp.concatenate(logits_list, axis=0)
+        steps = max(r.max_new for r in group)
+        for step in range(steps):
+            elapsed = clock.monotonic() - t0
+            for r in group:
+                # completion is checked first: a request that produced all
+                # its tokens can no longer time out (its deadline expiring
+                # while batchmates keep decoding is not an SLA miss)
+                if not r.done and len(r.result) >= r.max_new:
+                    self._finalize(r, elapsed)
+                if not r.done and elapsed > r.deadline_s:
+                    self._finalize(r, elapsed, timed_out=True)
+            if all(r.done for r in group):
+                break
+            if self.logits_hook is not None:
+                if self._hook_takes_budget:
+                    # tightest remaining latency budget in the batch —
+                    # the router degrades retrieval when it runs short
+                    budget = min(
+                        (r.deadline_s - elapsed for r in group if not r.done),
+                        default=float("inf"),
+                    )
+                    logits = self.logits_hook(logits, cache, budget)
+                else:
+                    logits = self.logits_hook(logits, cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for i, r in enumerate(group):
+                if not r.done and len(r.result) < r.max_new:
+                    r.result.append(int(tok[i]))
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+        for r in group:
+            if not r.done:
+                self._finalize(r, clock.monotonic() - t0)
 
     @staticmethod
     def _batch_axis_guess(leaf):
@@ -216,6 +255,14 @@ def make_knn_lm_hook(
         max_cells = (
             routing.degrade_max_cells(budget_s, degrade) if degrade else None
         )
+        if max_cells is not None:
+            ob = obs_mod.get_active()
+            if ob is not None and ob.metrics is not None:
+                ob.metrics.counter(
+                    "dslsh_serve_degraded_total",
+                    "retrieval steps the deadline budget degraded to a"
+                    " max_cells cap (§10 latency-first mode)",
+                ).labels(max_cells=str(max_cells)).inc()
         res = index.query(hq, max_cells=max_cells)
         return knn_interpolate(
             logits, res.knn_idx, res.knn_dist, next_tokens, vocab, lmbda,

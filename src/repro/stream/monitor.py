@@ -16,13 +16,14 @@ route-mask counters every other deployment reports.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import distributed as D
 from repro.core import predict as predict_mod
 from repro.core import routing, slsh
@@ -91,6 +92,7 @@ class StreamingMonitor:
         t0: float = 0.0,
         route: bool = True,
         route_bits: int = routing.DEFAULT_BITS,
+        obs: obs_mod.Obs | None = None,
     ):
         """``label_delay_s``: how long after ingestion a window's AHE label
         becomes observable (the condition window must close first —
@@ -102,7 +104,12 @@ class StreamingMonitor:
         ``route``: apply the §10 key→cell router to every prediction query
         (delta segments inherit their cell's placement, so routing is exact
         — bit-identical predictions, fewer cells visited; StreamEvent
-        reports the visited fraction). ``route_bits`` sizes the coarse map."""
+        reports the visited fraction). ``route_bits`` sizes the coarse map.
+
+        ``obs`` instruments the monitor: every :meth:`step` activates the
+        bundle, so predictions feed the predict-latency histogram /
+        routed_frac and the core's ingest feeds the stream counters
+        (DESIGN.md §12)."""
         init_points = np.asarray(init_points, np.float32)
         init_labels = np.asarray(init_labels)
         n0 = init_points.shape[0]
@@ -112,6 +119,7 @@ class StreamingMonitor:
             retention_s=retention_s, t0=t0, route=route, route_bits=route_bits,
         )
         self.cfg, self.grid = cfg, grid
+        self.obs = obs
         self.node_capacity = node_capacity
         self.label_delay_s = label_delay_s
         self.last_routed_frac = 1.0
@@ -213,11 +221,23 @@ class StreamingMonitor:
         budget overflowed — non-zero means c_comp is truncating live
         candidate sets, DESIGN.md §3). ``self.last_routed_frac`` holds the
         fraction of (cell, query) pairs the router visited for this batch."""
-        t0 = time.perf_counter()
-        res = self.core.query(queries)
-        jax.block_until_ready((res.knn_dist, res.knn_idx, res.comparisons))
-        latency = time.perf_counter() - t0
+        with obs_mod.timed_section("stream.predict") as sec:
+            res = self.core.query(queries)
+            jax.block_until_ready((res.knn_dist, res.knn_idx, res.comparisons))
+        latency = sec.dur_s
         self.last_routed_frac = res.routed_frac
+        ob = self.obs if self.obs is not None else obs_mod.get_active()
+        if ob is not None and ob.metrics is not None:
+            m = ob.metrics
+            m.histogram(
+                "dslsh_stream_predict_latency_seconds",
+                "wall time of one rolling AHE prediction query (synced)",
+            ).observe(latency)
+            m.histogram(
+                "dslsh_routed_frac",
+                "fraction of (cell, query) pairs the §10 router visited",
+                buckets=obs_mod.log_buckets(0.01, 1.0, per_decade=8),
+            ).observe(float(res.routed_frac))
         preds = predict_mod.predict_batch(
             jnp.asarray(self.labels.reshape(-1)), res.knn_idx, res.knn_dist
         )
@@ -229,6 +249,11 @@ class StreamingMonitor:
 
     def step(self, points, labels, t: float, *, predict: bool = True) -> StreamEvent:
         """One monitoring step: predict on the arriving windows, then ingest."""
+        ctx = self.obs.activate() if self.obs is not None else contextlib.nullcontext()
+        with ctx:
+            return self._step_impl(points, labels, t, predict=predict)
+
+    def _step_impl(self, points, labels, t: float, *, predict: bool) -> StreamEvent:
         preds, latency, comps, overflow = (np.zeros((0,), np.int32), 0.0, 0.0, 0)
         routed_frac = 1.0
         if predict:

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import distributed as D
 from repro.core import pipeline, routing, slsh, topk
 from repro.stream import delta as delta_mod
@@ -386,7 +387,44 @@ class ShardedStream:
     # ------------------------------------------------------------- stream
 
     def ingest(self, points, t: float) -> IngestReport:
-        """Route one batch to the next node; auto-compact on pressure."""
+        """Route one batch to the next node; auto-compact on pressure.
+
+        Under an ambient obs bundle the call records a ``stream.ingest``
+        span plus the §12 stream metrics (ingest latency, inserted /
+        dropped / evicted counts, compactions); the uninstrumented path
+        does one ContextVar check and records nothing."""
+        ob = obs_mod.get_active()
+        if ob is None or not ob.enabled:
+            return self._ingest_impl(points, t)
+        with ob.span("stream.ingest", t=float(t)) as sp:
+            rep = self._ingest_impl(points, t)
+            jax.block_until_ready(self.state[rep.node].store)
+        if ob.metrics is not None:
+            m = ob.metrics
+            m.histogram(
+                "dslsh_stream_ingest_latency_seconds",
+                "wall time of one ShardedStream.ingest (synced)",
+            ).observe(sp.dur_s)
+            m.counter(
+                "dslsh_stream_inserted_total",
+                "windows absorbed into delta segments",
+            ).inc(rep.inserted)
+            m.counter(
+                "dslsh_stream_dropped_total",
+                "windows dropped with delta + store both full",
+            ).inc(rep.dropped)
+            if rep.compacted:
+                m.counter(
+                    "dslsh_stream_compactions_total",
+                    "pressure-triggered node compactions",
+                ).inc()
+            m.counter(
+                "dslsh_stream_evicted_total",
+                "stale windows evicted by retention during compaction",
+            ).inc(rep.evicted)
+        return rep
+
+    def _ingest_impl(self, points, t: float) -> IngestReport:
         pts = np.asarray(points, np.float32)
         b = pts.shape[0]
         node_idx = self.rr % self.grid.nu

@@ -6,16 +6,18 @@ else. Runtime query knobs (``budget=`` / ``max_cells=`` / ``drop_mask``
 on :meth:`dslsh.Index.query`) and repeat eager dispatch must therefore
 never re-trace it; a retrace here means a Python value leaked into the
 kernel's trace key and every degradation decision would recompile the
-hot path (DESIGN.md §4). ``query_fused.ops.TRACE_COUNTS`` increments
-once per (re)trace, which is the counter these tests pin.
+hot path (DESIGN.md §4). The counter these tests pin is the *public*
+observability surface — ``repro.obs.retraces("query_tail")``, the
+``dslsh_jit_retraces_total`` counter bumped once per (re)trace — so the
+same contract is watchable in production (DESIGN.md §12).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import api as dslsh
+from repro import obs
 from repro.core import slsh
-from repro.kernels.query_fused import ops as qf_ops
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -42,8 +44,8 @@ def test_query_knobs_do_not_retrace_fused_kernel():
     )
     idx = dslsh.build(jax.random.PRNGKey(2), data, cfg, deploy)
     jax.block_until_ready(idx.query(q).knn_idx)  # warmup: traces once
-    assert qf_ops.TRACE_COUNTS["query_tail"] >= 1
-    before = qf_ops.TRACE_COUNTS["query_tail"]
+    assert obs.retraces("query_tail") >= 1
+    before = obs.retraces("query_tail")
     drop = np.zeros(2, bool)
     drop[1] = True
     variations = [
@@ -57,36 +59,39 @@ def test_query_knobs_do_not_retrace_fused_kernel():
     ]
     for kw in variations:
         jax.block_until_ready(idx.query(q, **kw).knn_idx)
-    assert qf_ops.TRACE_COUNTS["query_tail"] == before, (
+    assert obs.retraces("query_tail") == before, (
         f"fused kernel re-traced by runtime query knobs: "
-        f"{qf_ops.TRACE_COUNTS['query_tail'] - before} extra trace(s)"
+        f"{obs.retraces('query_tail') - before} extra trace(s)"
     )
 
 
 def test_eager_dispatch_steady_state_no_retrace():
-    """The eager per-stage fused schedule reuses its traces across
-    calls, including batch sizes that pad to the same chunk shape."""
+    """The eager per-stage fused schedule reuses every stage's trace
+    across calls, including batch sizes that pad to the same chunk shape
+    — pinned via the public per-stage retrace counters."""
     cfg = _cfg()
     data = jax.random.uniform(jax.random.PRNGKey(3), (256, 16))
-    idx = slsh.build_index(jax.random.PRNGKey(4), data, cfg)
+    idx = slsh.build_index(jax.random.PRNGKey(4), cfg=cfg, data=data)
     q32 = jax.random.uniform(jax.random.PRNGKey(5), (32, 16))
     jax.block_until_ready(slsh.query_batch(idx, data, q32, cfg).knn_idx)
-    before = qf_ops.TRACE_COUNTS["query_tail"]
+    stages = ("query_tail", "hash", "gather_work", "gather_select")
+    before = {s: obs.retraces(s) for s in stages}
     jax.block_until_ready(slsh.query_batch(idx, data, q32, cfg).knn_idx)
     # 24 queries pad to the same 16-row chunks the warmup traced
     q24 = q32[:24]
     jax.block_until_ready(slsh.query_batch(idx, data, q24, cfg).knn_idx)
-    assert qf_ops.TRACE_COUNTS["query_tail"] == before
+    after = {s: obs.retraces(s) for s in stages}
+    assert after == before, f"eager schedule re-traced: {before} -> {after}"
 
 
 def test_reference_backend_never_touches_fused_kernel():
     """The reference backend stays staged: no fused-kernel traces at all."""
     cfg = _cfg(backend="reference")
     data = jax.random.uniform(jax.random.PRNGKey(6), (128, 16))
-    idx = slsh.build_index(jax.random.PRNGKey(7), data, cfg)
+    idx = slsh.build_index(jax.random.PRNGKey(7), cfg=cfg, data=data)
     q = jax.random.uniform(jax.random.PRNGKey(8), (8, 16))
-    before = qf_ops.TRACE_COUNTS["query_tail"]
+    before = obs.retraces("query_tail")
     res = slsh.query_batch(idx, data, q, cfg)
     jax.block_until_ready(res.knn_idx)
     assert jnp.all(res.comparisons >= 0)
-    assert qf_ops.TRACE_COUNTS["query_tail"] == before
+    assert obs.retraces("query_tail") == before

@@ -1,0 +1,393 @@
+"""Observability-layer tests (DESIGN.md §12): exporter golden formats,
+near-zero-cost disabled path, monotonic-clock deadlines, per-stage spans.
+
+The contract under test: one instrumented ``dslsh.Index.query`` yields a
+Perfetto-loadable Chrome trace with per-stage spans plus a metrics
+snapshot with latency histograms and the paper's accounting signals —
+while an instrumented-but-*disabled* handle stays within 5% of a bare
+one, and every deadline/heartbeat measures on the monotonic clock (a
+wall-clock jump must never expire a straggler deadline).
+"""
+import json
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api as dslsh
+from repro import obs
+from repro.core import slsh
+from repro.obs import clock, metrics, trace
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(**kw):
+    base = dict(
+        m_out=12, L_out=8, m_in=8, L_in=4, alpha=0.02, k=5,
+        val_lo=0.0, val_hi=1.0, c_max=32, c_in=8, h_max=4, p_max=64,
+        build_chunk=128, query_chunk=16, backend="pallas",
+    )
+    base.update(kw)
+    return slsh.SLSHConfig.compose(**base)
+
+
+# --------------------------------------------------------------- exporters
+
+
+def test_chrome_trace_golden_schema():
+    """Every event is a complete event with the trace-format fields, the
+    document is Perfetto's {traceEvents, displayTimeUnit} shape, and
+    nesting shows up as time containment on one track."""
+    tr = trace.Tracer(pid=7)
+    with tr.span("outer", deployment="single"):
+        with tr.span("inner", stage="hash"):
+            pass
+    doc = json.loads(json.dumps(tr.to_chrome_trace()))  # JSON round-trip
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    assert doc["displayTimeUnit"] == "ms"
+    assert [e["name"] for e in doc["traceEvents"]] == ["inner", "outer"]
+    for e in doc["traceEvents"]:
+        assert set(e) == {"name", "ph", "ts", "dur", "pid", "tid", "args"}
+        assert e["ph"] == "X" and e["pid"] == 7
+        assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+    inner, outer = doc["traceEvents"]
+    assert inner["args"] == {"stage": "hash"}
+    assert outer["args"] == {"deployment": "single"}
+    # complete events nest by time containment (no parent pointers)
+    assert outer["ts"] <= inner["ts"]
+    assert outer["ts"] + outer["dur"] >= inner["ts"] + inner["dur"]
+    assert tr.depth() == 0  # stack fully unwound
+
+
+def test_prometheus_text_golden_format():
+    """The exposition parses line-by-line as the Prometheus text format:
+    TYPE headers, label syntax, cumulative buckets ending at +Inf."""
+    reg = metrics.MetricsRegistry()
+    reg.counter("dslsh_queries_total", "queries").labels(
+        deployment="grid"
+    ).inc(3)
+    reg.gauge("dslsh_nodes_up", "live nodes").set(4)
+    h = reg.histogram("dslsh_query_latency_seconds", "latency")
+    for v in (2e-6, 5e-4, 5e-4, 0.2, 99.0):  # 99 s lands in +Inf
+        h.observe(v)
+    text = reg.prometheus_text()
+    sample_re = re.compile(
+        r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+        r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"(,[a-zA-Z_][a-zA-Z0-9_]*="[^"]*")*\})?'
+        r" -?[0-9.eE+\-]+(inf)?$"
+    )
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            assert re.match(r"^# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* ", line)
+        else:
+            assert sample_re.match(line), f"bad exposition line: {line!r}"
+    assert "# TYPE dslsh_queries_total counter" in text
+    assert "# TYPE dslsh_nodes_up gauge" in text
+    assert "# TYPE dslsh_query_latency_seconds histogram" in text
+    assert 'dslsh_queries_total{deployment="grid"} 3' in text
+    # cumulative buckets: non-decreasing, +Inf == _count == observations
+    bucket_re = re.compile(
+        r'dslsh_query_latency_seconds_bucket\{le="([^"]+)"\} (\d+)'
+    )
+    counts = [int(m.group(2)) for m in bucket_re.finditer(text)]
+    assert counts == sorted(counts)
+    assert counts[-1] == 5
+    assert text.count('le="+Inf"') == 1
+    assert "dslsh_query_latency_seconds_count 5" in text
+    assert counts[-2] == 4, "the 99 s observation must sit in +Inf only"
+
+
+def test_snapshot_json_roundtrip_and_kind_conflict():
+    reg = metrics.MetricsRegistry()
+    reg.counter("c_total", "help text").inc()
+    reg.histogram("h_seconds").observe(1e-3)
+    snap = json.loads(json.dumps(reg.snapshot()))
+    assert snap["c_total"] == {
+        "type": "counter", "help": "help text", "values": {"": 1.0}
+    }
+    hval = snap["h_seconds"]["values"][""]
+    assert hval["count"] == 1 and hval["sum"] == pytest.approx(1e-3)
+    assert hval["buckets"]["+Inf"] == 1
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("c_total")
+    with pytest.raises(ValueError, match="log_buckets"):
+        metrics.log_buckets(lo=0.0)
+
+
+# ----------------------------------------------------- bucket properties
+
+try:  # property tests ride along when hypothesis is installed; the
+    # deterministic boundary tests below always run
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        lo=st.floats(1e-9, 1e3),
+        ratio=st.floats(1.5, 1e9),
+        per_decade=st.integers(1, 12),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_log_buckets_boundary_properties(lo, ratio, per_decade):
+        """Boundaries are strictly increasing, start at ``lo``, and cover
+        ``hi`` (up to the 4-significant-digit label rounding)."""
+        hi = lo * ratio
+        b = metrics.log_buckets(lo, hi, per_decade)
+        assert all(x < y for x, y in zip(b, b[1:])), "not strictly increasing"
+        assert b[0] == pytest.approx(lo, rel=5e-4)
+        assert b[-1] >= hi * (1 - 1e-3), "top boundary must reach hi"
+        # one decade spans per_decade steps (up to rounding)
+        if len(b) > per_decade:
+            assert b[per_decade] == pytest.approx(10 * b[0], rel=1e-3)
+
+    @given(
+        values=st.lists(st.floats(1e-8, 100.0), min_size=1, max_size=50),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_histogram_observation_lands_in_first_covering_bucket(values):
+        h = metrics.Histogram(metrics.LATENCY_BUCKETS)
+        for v in values:
+            h.observe(v)
+        cum = h.cumulative()
+        assert cum == sorted(cum)
+        assert cum[-1] == h.count == len(values)
+        assert h.sum == pytest.approx(sum(values))
+        bounds = h.boundaries
+        for v in set(values):
+            i = next(
+                (j for j, b in enumerate(bounds) if v <= b), len(bounds)
+            )
+            # cumulative count at i covers every observation <= bounds[i]
+            assert cum[i] >= sum(1 for x in values if x <= v)
+
+
+def test_log_buckets_deterministic_boundaries():
+    """The deterministic core of the property: defaults span 1 µs..10 s,
+    strictly increasing, decade-aligned every ``per_decade`` steps."""
+    b = metrics.LATENCY_BUCKETS
+    assert b[0] == 1e-6 and b[-1] >= 10.0
+    assert all(x < y for x, y in zip(b, b[1:]))
+    for i in range(0, len(b) - 4, 4):  # per_decade=4 -> decade alignment
+        assert b[i + 4] == pytest.approx(10 * b[i], rel=1e-3)
+    b2 = metrics.log_buckets(1.0, 1e6, per_decade=2)
+    assert b2[0] == 1.0 and b2[-1] == pytest.approx(1e6, rel=1e-3)
+    assert len(b2) == 13
+
+
+def test_histogram_boundary_value_is_inclusive():
+    """``v == boundary`` counts in that boundary's bucket (le semantics)."""
+    b = (1.0, 10.0, 100.0)
+    h = metrics.Histogram(b)
+    for v in (1.0, 10.0, 100.0, 100.1):
+        h.observe(v)
+    assert h.counts == [1, 1, 1, 1]
+    assert h.cumulative() == [1, 2, 3, 4]
+
+
+# ------------------------------------------------------- monotonic clocks
+
+
+class _FakeClock:
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_monitor_immune_to_wall_clock_jumps(monkeypatch):
+    """Heartbeats measure on the monotonic clock: a wall-clock jump must
+    never mark a live node down (the PR-7 deadline bugfix)."""
+    from repro.runtime import ft
+
+    fake = _FakeClock()
+    monkeypatch.setattr(clock, "monotonic", fake)
+    monkeypatch.setattr("time.time", lambda: 1.7e9)  # never consulted
+    hb = ft.HeartbeatMonitor(n_nodes=2, deadline_s=0.5)
+    hb.beat(0)
+    hb.beat(1)
+    monkeypatch.setattr("time.time", lambda: 1.7e9 + 86400)  # wall jumps a day
+    fake.t += 0.4  # monotonic: still inside the deadline
+    assert hb.down_nodes() == []
+    fake.t += 0.2  # now past it
+    assert hb.down_nodes() == [0, 1]
+    hb.beat(1)
+    assert hb.down_nodes() == [0]
+    assert hb.drop_mask().tolist() == [True, False]
+
+
+class _SteppingClock:
+    """A clock that advances ``step`` seconds on every read."""
+
+    def __init__(self, t=0.0, step=0.0):
+        self.t = t
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+def test_serve_deadline_on_monotonic_clock(monkeypatch):
+    """A straggler deadline expires by monotonic elapsed time only: the
+    wall clock jumping an hour per read mid-decode neither expires nor
+    revives it (under the old ``time.time()`` deadlines, every request
+    here would time out instantly)."""
+    from repro import configs
+    from repro.models import api as models_api
+    from repro.serve import engine
+
+    cfg = configs.get("granite-8b", smoke=True)
+    model = models_api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    # monotonic advances 5 ms per read (~one read per decode step); the
+    # wall clock leaps an hour per read — consulting it at all breaks
+    monkeypatch.setattr(clock, "monotonic", _SteppingClock(1000.0, 0.005))
+    monkeypatch.setattr("time.time", _SteppingClock(1.7e9, 3600.0))
+    eng = engine.ServeEngine(model, params, max_batch=2, max_len=64)
+    healthy = engine.Request(
+        rid=0, tokens=rng.integers(0, cfg.vocab, 8), max_new=4, deadline_s=5.0
+    )
+    straggler = engine.Request(
+        rid=1, tokens=rng.integers(0, cfg.vocab, 8), max_new=64, deadline_s=0.012
+    )
+    done = eng.serve([healthy, straggler])
+    assert done[0].done and not done[0].timed_out, (
+        "wall-clock jumps must not expire a monotonic deadline"
+    )
+    assert len(done[0].result) == 4
+    assert done[1].timed_out and done[1].latency_s > 0.012
+    assert done[1].latency_s < 1.0, "latency must be monotonic elapsed, not wall"
+
+
+# ------------------------------------------------- spans, sections, obs
+
+
+def test_timed_section_records_span_and_histogram():
+    ob = obs.Obs()
+    with ob.activate():
+        with obs.timed_section("unit.test") as sec:
+            assert sec.elapsed_s >= 0.0
+    assert sec.dur_s >= 0.0
+    assert [e["name"] for e in ob.tracer.events] == ["unit.test"]
+    snap = ob.snapshot()["dslsh_section_seconds"]
+    assert snap["values"]['section="unit.test"']["count"] == 1
+
+
+def test_timed_section_without_obs_is_silent():
+    with obs.timed_section("nowhere") as sec:
+        pass
+    assert sec.dur_s >= 0.0 and sec.obs is None
+
+
+def test_obs_activate_nests_and_restores():
+    a, b = obs.Obs(), obs.Obs()
+    assert obs.get_active() is None
+    with a.activate():
+        assert obs.get_active() is a
+        with b.activate():
+            assert obs.get_active() is b
+        assert obs.get_active() is a
+    assert obs.get_active() is None
+
+
+def test_disabled_obs_has_no_recording_surface():
+    ob = obs.Obs.disabled()
+    assert not ob.enabled and not ob.tracing
+    assert ob.span("x") is obs.NULL_SPAN
+    with pytest.raises(ValueError, match="disabled"):
+        ob.save_trace("/tmp/never.json")
+
+
+# ------------------------------------------------------------ end-to-end
+
+
+def test_instrumented_query_yields_trace_and_metrics(tmp_path):
+    """The acceptance scenario: one instrumented single-deployment query
+    produces (a) a Perfetto-loadable trace with per-stage spans and (b) a
+    snapshot with latency histograms + the paper's accounting signals —
+    bit-identical to the uninstrumented result."""
+    cfg = _cfg()
+    data = jax.random.uniform(jax.random.PRNGKey(0), (256, 16))
+    q = jax.random.uniform(jax.random.PRNGKey(1), (32, 16))
+    ob = obs.Obs()
+    idx = dslsh.build(jax.random.PRNGKey(2), data, cfg, dslsh.single(), obs=ob)
+    res = idx.query(q)
+    bare = idx.with_obs(None)
+    np.testing.assert_array_equal(
+        np.asarray(res.knn_idx), np.asarray(bare.query(q).knn_idx)
+    )
+    names = {e["name"] for e in ob.tracer.events}
+    assert {"index.build", "index.query", "query.hash", "query.gather_work",
+            "query.gather_select", "query.tail"} <= names
+    # index.query wraps the stage spans (time containment on one track)
+    top = next(e for e in ob.tracer.events if e["name"] == "index.query")
+    assert top["args"]["deployment"] == "single" and top["args"]["queries"] == 32
+    for e in ob.tracer.events:
+        if e["name"].startswith("query."):
+            assert e["ts"] >= top["ts"]
+            assert e["ts"] + e["dur"] <= top["ts"] + top["dur"] + 1.0
+    snap = ob.snapshot()
+    assert snap["dslsh_queries_total"]["values"]['deployment="single"'] == 1.0
+    lat = snap["dslsh_query_latency_seconds"]["values"]['deployment="single"']
+    assert lat["count"] == 1 and lat["sum"] > 0.0
+    stages = snap["dslsh_stage_latency_seconds"]["values"]
+    assert {'stage="query.hash"', 'stage="query.tail"'} <= set(stages)
+    assert snap["dslsh_comparisons_total"]["values"][""] > 0
+    assert snap["dslsh_compaction_overflow_total"]["values"][""] >= 0
+    assert snap["dslsh_jit_retraces_total"]["values"]['stage="query_tail"'] >= 1
+    # exports are loadable artifacts
+    tr_path = ob.save_trace(str(tmp_path / "trace.json"))
+    doc = json.loads(open(tr_path).read())
+    assert doc["traceEvents"] and all(e["ph"] == "X" for e in doc["traceEvents"])
+    m_path = ob.save_metrics(str(tmp_path / "metrics.json"))
+    assert "dslsh_queries_total" in json.loads(open(m_path).read())
+    assert "# TYPE dslsh_query_latency_seconds histogram" in ob.prometheus()
+
+
+def test_routed_grid_populates_routing_metrics():
+    cfg = _cfg()
+    data = jax.random.uniform(jax.random.PRNGKey(3), (256, 16))
+    q = jax.random.uniform(jax.random.PRNGKey(4), (32, 16))
+    ob = obs.Obs(trace=False)  # metrics-only: grid path stays jitted
+    idx = dslsh.build(
+        jax.random.PRNGKey(5), data, cfg,
+        dslsh.grid(nu=2, p=2, routed=True), obs=ob,
+    )
+    idx.query(q)
+    snap = ob.snapshot()
+    assert snap["dslsh_routed_frac"]["values"][""]["count"] == 1
+    cells = snap["dslsh_routed_queries_per_cell_total"]["values"]
+    assert set(cells) == {f'cell="{j}/{c}"' for j in range(2) for c in range(2)}
+    assert sum(cells.values()) > 0
+
+
+def test_disabled_obs_query_overhead_within_5_percent():
+    """The obs_overhead gate's testable form: an instrumented-but-disabled
+    handle (sharing the bare handle's compile cache) pays at most 5% on
+    ``Index.query`` — one attribute check and one ContextVar.get."""
+    cfg = _cfg()
+    data = jax.random.uniform(jax.random.PRNGKey(6), (512, 16))
+    q = jax.random.uniform(jax.random.PRNGKey(7), (64, 16))
+    bare = dslsh.build(jax.random.PRNGKey(8), data, cfg, dslsh.single())
+    inst = bare.with_obs(obs.Obs.disabled())  # shares _compiled
+    for _ in range(3):  # warm both paths
+        jax.block_until_ready(bare.query(q).knn_idx)
+        jax.block_until_ready(inst.query(q).knn_idx)
+    ratios = []
+    for _ in range(40):
+        t0 = clock.monotonic()
+        jax.block_until_ready(bare.query(q).knn_idx)
+        t1 = clock.monotonic()
+        jax.block_until_ready(inst.query(q).knn_idx)
+        t2 = clock.monotonic()
+        ratios.append((t2 - t1) / max(t1 - t0, 1e-9))
+    med = float(np.median(ratios))
+    assert med <= 1.05, f"disabled-path overhead {med:.3f}x exceeds 1.05x"
