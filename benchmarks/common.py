@@ -25,13 +25,38 @@ def timer(fn, *args, repeats: int = 1):
 
 @functools.lru_cache(maxsize=4)
 def ahe_dataset(name: str, n_records: int, n_beats: int, n_test: int, seed: int = 0):
-    """Synthetic MIMIC-like dataset via the paper's rolling-window pipeline."""
+    """Synthetic MIMIC-like dataset via the paper's rolling-window pipeline.
+
+    Records synthesize and window one at a time (the chunked generator
+    discipline of DESIGN.md §13): only one record's beat waveform is ever
+    resident, so peak memory scales with ``n_beats``, not
+    ``n_records * n_beats``. The per-record PRNG keys match the old
+    whole-dataset ``synth_dataset_beats`` split, so the windows are
+    unchanged.
+    """
     from repro.data import abp, windows
 
     cfgw = {"AHE-301-30c": windows.AHE_301_30C, "AHE-51-5c": windows.AHE_51_5C}[name]
     cfg = abp.ABPConfig(n_beats=n_beats, episode_rate=1.0 / 2500.0)
-    mapv, valid = abp.synth_dataset_beats(jax.random.PRNGKey(seed), n_records, cfg)
-    ds = windows.build_dataset(np.asarray(mapv), np.asarray(valid), cfgw)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_records)
+    pts, labs = [], []
+    for r in range(n_records):
+        mapv, valid = abp.synth_record(keys[r], cfg)
+        p, y = windows.windows_from_record(
+            np.asarray(mapv), np.asarray(valid), cfgw
+        )
+        if p.shape[0]:
+            pts.append(p)
+            labs.append(y)
+    points = np.concatenate(pts, axis=0) if pts else np.zeros((0, cfgw.d), np.float32)
+    labels = np.concatenate(labs, axis=0) if labs else np.zeros((0,), np.int8)
+    frac_neg = float((labels == 0).mean()) if labels.size else 1.0
+    ds = {
+        "name": cfgw.name,
+        "points": points,
+        "labels": labels,
+        "pct_no_ahe": 100.0 * frac_neg,
+    }
     train, qx, qy = windows.train_test_split(ds, n_test=n_test, seed=seed)
     return train, qx, qy, ds["pct_no_ahe"]
 

@@ -18,6 +18,7 @@ def main() -> None:
         pipeline_bench,
         roofline,
         routing_bench,
+        scale_bench,
         stream_bench,
         table2_scaling,
         table3_scaling,
@@ -33,6 +34,7 @@ def main() -> None:
         "roofline": roofline,
         "stream": stream_bench,
         "routing": routing_bench,
+        "scale": scale_bench,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

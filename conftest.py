@@ -4,6 +4,8 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -11,3 +13,20 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running multi-device subprocess tests"
     )
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jit_state():
+    """Drop jax's compiled-executable caches after each test module.
+
+    The suite compiles thousands of distinct XLA:CPU executables in one
+    process; keeping them all loaded eventually segfaults the LLVM JIT on
+    a later (trivial) compile. Clearing per module bounds live code memory
+    at the cost of cross-module recompiles. Runs as teardown, so
+    within-module retrace pins (tests/test_compile_cache.py) are
+    unaffected.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()

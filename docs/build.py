@@ -37,6 +37,10 @@ MODULES: tuple[str, ...] = (
     "repro.core.topk",
     "repro.core.pknn",
     "repro.core.predict",
+    "repro.core.merge",
+    "repro.runtime.memory",
+    "repro.runtime.payload",
+    "repro.data.windows",
     "repro.obs",
     "repro.obs.trace",
     "repro.obs.metrics",

@@ -67,6 +67,8 @@ from repro.core.pipeline import (  # noqa: F401  (re-exported public API)
     RuntimeConfig,
     SLSHConfig,
 )
+from repro.runtime import memory as memory_mod
+from repro.runtime import payload as payload_mod
 from repro.stream import delta as delta_mod
 from repro.stream import shard as shard_mod
 
@@ -358,6 +360,28 @@ class Index:
             return self._state["core"].n_index()
         return int(self._state["data"].shape[0])
 
+    def memory_report(self) -> memory_mod.MemoryReport:
+        """Per-cell byte accounting of the resident index (DESIGN.md §13).
+
+        Decomposes tables/heavy/inner/data/payload bytes per (node, core)
+        cell from shape metadata alone — no sync. Batch deployments only;
+        streaming state lives in mutable per-node delta segments whose
+        occupancy the ingest reports already track.
+        """
+        pipeline._require(
+            self.deploy.kind != "streaming",
+            "memory_report covers batch deployments — streaming capacity"
+            " is tracked live by ingest/compact reports (DESIGN.md §9)",
+        )
+        cells = (
+            (1, 1) if self.deploy.kind == "single"
+            else (self.deploy.nu, self.deploy.p)
+        )
+        return memory_mod.index_report(
+            self._state["index"], self._state["data"],
+            self.cfg.payload, cells,
+        )
+
     # ------------------------------------------------------------- query
 
     def query(
@@ -432,7 +456,7 @@ class Index:
                 # (bit-identical; §12 sync-point policy)
                 res = pipeline.query_batch(
                     self._state["index"], self._state["data"], queries,
-                    self.cfg,
+                    self.cfg, payload=self._payload(),
                 )
                 return DistributedQueryResult(
                     res.knn_dist,
@@ -440,6 +464,8 @@ class Index:
                     res.comparisons[None, None],
                     res.compaction_overflow[None, None],
                     jnp.ones((1, 1, queries.shape[0]), bool),
+                    None if res.rerank_misses is None
+                    else res.rerank_misses[None, None],
                 )
             return self._single_fn()(queries)
         if kind == "grid":
@@ -496,6 +522,13 @@ class Index:
             "unique survivors beyond c_comp — non-zero means results are"
             " budget-truncated (DESIGN.md §3)",
         ).inc(float(overflow.sum()))
+        if res.rerank_misses is not None:
+            m.counter(
+                "dslsh_rerank_misses_total",
+                "compressed-payload shortlist misses — non-zero means the"
+                " quantized L1 pass may have excluded a true neighbour"
+                " (raise c_rerank; DESIGN.md §13)",
+            ).inc(float(np.asarray(res.rerank_misses).sum()))
         m.histogram(
             "dslsh_routed_frac",
             "fraction of (cell, query) pairs the §10 router visited",
@@ -573,19 +606,34 @@ class Index:
             self.cfg, self.grid, plan=self.plan, return_stats=True,
         )
 
+    def _payload(self) -> payload_mod.Payload | None:
+        """The handle's quantized candidate payload, built once and cached
+        (None for ``payload='f32'`` — exact rows serve directly)."""
+        if "payload" not in self._compiled:
+            self._compiled["payload"] = (
+                None
+                if self.cfg.payload == "f32"
+                else payload_mod.make_payload(
+                    self._state["data"], self.cfg.payload
+                )
+            )
+        return self._compiled["payload"]
+
     def _single_fn(self):
         if "q" not in self._compiled:
             index, data = self._state["index"], self._state["data"]
-            cfg = self.cfg
+            cfg, payload = self.cfg, self._payload()
 
             def run(q):
-                res = pipeline.query_batch(index, data, q, cfg)
+                res = pipeline.query_batch(index, data, q, cfg, payload=payload)
                 return DistributedQueryResult(
                     res.knn_dist,
                     res.knn_idx,
                     res.comparisons[None, None],
                     res.compaction_overflow[None, None],
                     jnp.ones((1, 1, q.shape[0]), bool),
+                    None if res.rerank_misses is None
+                    else res.rerank_misses[None, None],
                 )
 
             self._compiled["q"] = jax.jit(run)
@@ -695,6 +743,8 @@ def build(
         ):
             out = _build_impl(key, data, cfg, deploy, t0=t0, obs=obs)
             jax.block_until_ready(out._state.get("index"))
+            if obs.metrics is not None and deploy.kind != "streaming":
+                out.memory_report().feed_gauges(obs.metrics)
             return out
     return _build_impl(key, data, cfg, deploy, t0=t0, obs=obs)
 
@@ -707,6 +757,12 @@ def _build_impl(
     n = data.shape[0]
     g = deploy.grid
     if deploy.kind != "single":
+        pipeline._require(
+            cfg.payload == "f32",
+            f"payload={cfg.payload!r} (compressed candidate payload) rides"
+            " the single-shard fused tail — grid/mesh/streaming"
+            " deployments need payload='f32' (DESIGN.md §13)",
+        )
         pipeline._require(
             cfg.L_out % deploy.p == 0,
             f"L_out={cfg.L_out} does not divide across p={deploy.p} cores"

@@ -134,11 +134,25 @@ class DistributedQueryResult(NamedTuple):
     # which (cell, query) pairs the Forwarder visited — all True for
     # broadcast deployments, the §10 route mask otherwise
     routed: jax.Array  # (nu, p, Q) bool
+    # compressed-payload deployments only (None on the f32 path):
+    # candidates excluded from the c_rerank shortlist whose approximate
+    # distance came within the quantization error bound of the k-th exact
+    # distance — counted, never silent; 0 everywhere certifies knn_idx
+    # bit-identical to the f32 tail (DESIGN.md §13)
+    rerank_misses: jax.Array | None = None  # (nu, p, Q) int32
 
     @property
     def routed_frac(self) -> float:
         """Fraction of (cell, query) pairs visited (1.0 = broadcast)."""
         return float(jnp.mean(self.routed.astype(jnp.float32)))
+
+    @property
+    def rerank_miss_total(self) -> int:
+        """Total rerank-margin misses across cells and queries (0 for the
+        f32 payload path — the shortlist rerank is then a no-op)."""
+        if self.rerank_misses is None:
+            return 0
+        return int(jnp.sum(self.rerank_misses))
 
     @property
     def overflow_cells(self) -> int:

@@ -1,0 +1,73 @@
+"""Stable sorted-run merging shared by streaming compaction and the build.
+
+The repo has exactly one merge discipline for CSR table rows (DESIGN.md
+§9/§13): rows are ``(keys, idx)`` pairs sorted ascending by key with ties
+ascending by index, and two sorted rows combine with :func:`merge_sorted_rows`
+— the left operand wins key ties, so whenever every left index precedes
+every right index the merge reproduces exactly what one stable full sort
+over the union would give. ``stream.index.compact`` folds delta segments
+into the base with it, and the chunked sorted-run builder
+(``pipeline.build_from_params`` with ``build_mode="chunked"``) k-way-merges
+per-chunk runs into the final tables with the LSM-style ladder below.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# One ladder entry: (keys (T, s), idx (T, s)) — ``T`` table rows of one
+# sorted length-``s`` run each.
+Run = tuple[jax.Array, jax.Array]
+
+
+def merge_sorted_rows(
+    ak: jax.Array, ai: jax.Array, bk: jax.Array, bi: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Stable merge of two sorted (keys, idx) rows; ``a`` wins key ties.
+
+    When every ``a`` index precedes every ``b`` index (a delta segment
+    appended after the base, or a later build chunk after an earlier one),
+    tie-breaking a-first reproduces exactly what a stable full sort over
+    the union would give. O((n+m) log) via two vectorized binary searches —
+    no re-sort of either side.
+    """
+    n, m = ak.shape[0], bk.shape[0]
+    pa = jnp.arange(n, dtype=jnp.int32) + jnp.searchsorted(
+        bk, ak, side="left"
+    ).astype(jnp.int32)
+    pb = jnp.arange(m, dtype=jnp.int32) + jnp.searchsorted(
+        ak, bk, side="right"
+    ).astype(jnp.int32)
+    keys = jnp.zeros((n + m,), ak.dtype).at[pa].set(ak).at[pb].set(bk)
+    idx = jnp.zeros((n + m,), ai.dtype).at[pa].set(ai).at[pb].set(bi)
+    return keys, idx
+
+
+def merge_run_pair(a: Run, b: Run) -> Run:
+    """Merge two multi-table runs row-wise (``a`` older: it wins key ties)."""
+    return tuple(jax.vmap(merge_sorted_rows)(a[0], a[1], b[0], b[1]))
+
+
+def ladder_push(stack: list[Run], item: Run, merge_fn=merge_run_pair) -> None:
+    """Push one sorted run onto an LSM-style binary-counter ladder.
+
+    ``stack`` holds runs oldest-first with strictly decreasing sizes; a new
+    run folds into the top while the top is no larger, so total merge work
+    over ``c`` equal chunks stays O(n log c) instead of the left-fold's
+    O(n·c). Every entry on the stack covers strictly earlier dataset
+    indices than the entries above it — the precondition of
+    :func:`merge_sorted_rows`' tie rule. ``merge_fn`` lets eager callers
+    route pair merges through a cached jit of :func:`merge_run_pair`
+    (the chunked builder's per-dispatch schedule, DESIGN.md §13).
+    """
+    while stack and stack[-1][0].shape[-1] <= item[0].shape[-1]:
+        item = merge_fn(stack.pop(), item)
+    stack.append(item)
+
+
+def ladder_collapse(stack: list[Run], merge_fn=merge_run_pair) -> Run:
+    """Fold a non-empty ladder into one fully-sorted run (oldest wins ties)."""
+    acc = stack.pop()
+    while stack:
+        acc = merge_fn(stack.pop(), acc)
+    return acc

@@ -47,8 +47,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs as obs_mod
-from repro.core import hashing, tables, topk
+from repro.core import hashing, merge, tables, topk
 from repro.obs.metrics import count_retrace
+from repro.runtime.payload import Payload, make_payload
 
 # ------------------------------------------------------------ configuration
 
@@ -127,7 +128,10 @@ class BudgetConfig:
     ``p_max`` inner-layer population cap; ``c_comp`` the compacted distance
     buffer (§3 — unique survivors beyond it are counted in
     ``QueryResult.compaction_overflow``, never silently dropped; <= 0
-    disables the cap). Invalid budgets raise :class:`ConfigError`.
+    disables the cap); ``c_rerank`` the exact-rerank shortlist width of the
+    compressed-payload tail (DESIGN.md §13 — only read when
+    ``RuntimeConfig.payload != "f32"``). Invalid budgets raise
+    :class:`ConfigError`.
 
     >>> BudgetConfig(k=5, c_comp=0).c_comp
     0
@@ -139,6 +143,7 @@ class BudgetConfig:
     h_max: int = 8
     p_max: int = 512
     c_comp: int = 1024
+    c_rerank: int = 128
 
     def __post_init__(self):
         _require(self.k >= 1, f"k={self.k}: need at least one neighbour")
@@ -165,6 +170,11 @@ class BudgetConfig:
             " silently return fewer than k neighbours — raise c_comp to at"
             " least k, or set c_comp <= 0 to disable compaction",
         )
+        _require(
+            self.c_rerank >= 1,
+            f"c_rerank={self.c_rerank}: the payload rerank shortlist must"
+            " hold at least one candidate",
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,8 +184,15 @@ class RuntimeConfig:
     ``backend`` selects the compute backend for the hash and distance
     stages (``"reference"`` pure jnp, ``"pallas"`` the fused kernels);
     ``interpret`` overrides the Pallas interpret-mode platform policy;
-    ``build_chunk``/``query_chunk`` bound per-step memory. Unknown
-    backends are rejected at construction time, not at first build.
+    ``build_chunk``/``query_chunk`` bound per-step memory. ``build_mode``
+    picks the index-construction schedule (DESIGN.md §13): ``"monolithic"``
+    full-sorts all (L, n) keys in one launch (the bit-exactness oracle),
+    ``"chunked"`` builds per-chunk sorted runs and k-way-merges them so
+    peak build memory is O(chunk) + O(output), and ``"auto"`` (default)
+    switches to chunked once ``n > build_chunk``. ``payload`` opts the
+    fused query tail into compressed candidate rows (``"f16"``/``"i8"``,
+    DESIGN.md §13) with an exact f32 rerank. Unknown backends are rejected
+    at construction time, not at first build.
 
     >>> RuntimeConfig(backend="pallas").backend
     'pallas'
@@ -187,6 +204,8 @@ class RuntimeConfig:
     # Pallas interpret-mode override: None = platform policy (interpret
     # everywhere except real TPU), True/False forces it (DESIGN.md §6)
     interpret: bool | None = None
+    build_mode: str = "auto"
+    payload: str = "f32"
 
     def __post_init__(self):
         _require(
@@ -198,6 +217,17 @@ class RuntimeConfig:
             self.backend in _BACKENDS,
             f"unknown SLSH backend {self.backend!r}; registered:"
             f" {sorted(_BACKENDS)}",
+        )
+        _require(
+            self.build_mode in ("auto", "monolithic", "chunked"),
+            f"build_mode={self.build_mode!r}: expected 'auto' (chunked once"
+            " n > build_chunk), 'monolithic', or 'chunked'",
+        )
+        _require(
+            self.payload in ("f32", "f16", "i8"),
+            f"payload={self.payload!r}: expected 'f32' (uncompressed),"
+            " 'f16', or 'i8' (compressed candidate rows + exact f32"
+            " rerank, DESIGN.md §13)",
         )
 
 
@@ -253,11 +283,14 @@ class SLSHConfig:
     h_max: int = 8
     p_max: int = 512
     c_comp: int = 1024
+    c_rerank: int = 128
     # execution knobs (RuntimeConfig, DESIGN.md §6)
     build_chunk: int = 4096
     query_chunk: int = 64
     backend: str = "reference"
     interpret: bool | None = None
+    build_mode: str = "auto"
+    payload: str = "f32"
 
     def __post_init__(self):
         if not _COMPOSED_CTOR.get():
@@ -280,6 +313,19 @@ class SLSHConfig:
             " but the heavy-bucket registry holds zero buckets, so the"
             " inner layer would silently never fire — set h_max >= 1 or"
             " use_inner=False",
+        )
+        _require(
+            self.payload == "f32" or self.backend == "pallas",
+            f"payload={self.payload!r} with backend={self.backend!r}: the"
+            " compressed candidate payload is a fused-tail feature — set"
+            " backend='pallas' or payload='f32'",
+        )
+        _require(
+            self.payload == "f32" or self.c_rerank >= self.k,
+            f"c_rerank={self.c_rerank} < k={self.k} with"
+            f" payload={self.payload!r}: the exact-rerank shortlist cannot"
+            " hold k candidates, so every query would return approximate"
+            " neighbours — raise c_rerank to at least k",
         )
 
     # -------------------------------------------------- composed interface
@@ -388,6 +434,12 @@ class QueryResult(NamedTuple):
     # unique survivors beyond the c_comp budget, excluded from the distance
     # stage (0 everywhere means the compacted result is exact)
     compaction_overflow: jax.Array  # (...,) int32
+    # compressed-payload tail only (None on the f32 path): candidates whose
+    # approximate distance came within the quantization error bound of the
+    # k-th exact distance but missed the c_rerank shortlist — counted,
+    # never silent; 0 everywhere certifies knn_idx bit-identical to f32
+    # (DESIGN.md §13)
+    rerank_misses: jax.Array | None = None
 
 
 class DeltaView(NamedTuple):
@@ -439,12 +491,20 @@ class BackendOps(NamedTuple):
         keeps the staged dedup/compact/top-k path. A fused tail must be
         bit-exact with the staged stages, including the §6 lowest-position
         tie rule and ``compaction_overflow`` counts.
+    query_tail_payload (optional, default ``None``)
+        ``(data, qdata, meta, queries, cand, run=, c_comp=, c_rerank=, k=)
+        -> (kd, ki, comparisons, overflow, rerank_misses)`` — the fused
+        tail streaming quantized candidate rows (``runtime.payload``) with
+        an exact f32 rerank of the ``c_rerank`` shortlist (DESIGN.md §13).
+        Used only when ``cfg.payload != "f32"``; ``None`` falls back to
+        the exact ``query_tail`` (correct, just uncompressed).
     """
 
     signature_words: Callable[..., jax.Array]
     l1_topk: Callable[..., tuple[jax.Array, jax.Array]]
     probe_words: Callable[..., tuple[jax.Array, jax.Array]] | None = None
     query_tail: Callable[..., tuple[jax.Array, ...]] | None = None
+    query_tail_payload: Callable[..., tuple[jax.Array, ...]] | None = None
 
 
 _BACKENDS: dict[str, BackendOps | Callable[["SLSHConfig | None"], BackendOps]] = {}
@@ -505,6 +565,18 @@ def _pallas_query_tail(
     )
 
 
+def _pallas_query_tail_payload(
+    data, qdata, meta, queries, cand, *, run, c_comp, c_rerank, k,
+    interpret: bool | None = None,
+):
+    from repro.kernels.query_fused import ops as qf_ops
+
+    return qf_ops.query_tail_payload(
+        data, qdata, meta, queries, cand,
+        run=run, c_comp=c_comp, c_rerank=c_rerank, k=k, interpret=interpret,
+    )
+
+
 def _pallas_ops(cfg: "SLSHConfig | None") -> BackendOps:
     interp = None if cfg is None else cfg.interpret
     return BackendOps(
@@ -512,6 +584,9 @@ def _pallas_ops(cfg: "SLSHConfig | None") -> BackendOps:
         functools.partial(_pallas_l1_topk, interpret=interp),
         probe_words=functools.partial(_pallas_probe_words, interpret=interp),
         query_tail=functools.partial(_pallas_query_tail, interpret=interp),
+        query_tail_payload=functools.partial(
+            _pallas_query_tail_payload, interpret=interp
+        ),
     )
 
 
@@ -619,6 +694,169 @@ def empty_inner(l_out: int, cfg: SLSHConfig) -> tuple[jax.Array, jax.Array]:
     return jnp.full(shape, tables.PAD_KEY), jnp.full(shape, -1, jnp.int32)
 
 
+# Outer tables hashed + ladder-merged together per eager chunked-build pass:
+# peak transient state scales with _BUILD_GROUP * n while the dispatch count
+# scales with L / _BUILD_GROUP — 4 balances both at the bench shapes.
+_BUILD_GROUP = 4
+
+
+@functools.lru_cache(maxsize=64)
+def _build_hash_fn(cfg: SLSHConfig):
+    """Cached jit of one build chunk's hashing -> (L_g, c) keys."""
+    backend = get_backend(cfg.backend, cfg)
+
+    def run(params, x):
+        count_retrace("build_hash")
+        return hash_keys(params, x, backend).T
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=4)
+def _sort_run_fn():
+    """Cached jit sorting one chunk's (L_g, c) keys into a run (stable)."""
+
+    def run(k, i):
+        count_retrace("build_sort_run")
+        return tuple(
+            jax.vmap(lambda kk, ii: jax.lax.sort((kk, ii), num_keys=1))(k, i)
+        )
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=4)
+def _merge_pair_fn():
+    """Cached jit of one ladder pair-merge (eager chunked build)."""
+
+    def run(a, b):
+        count_retrace("build_merge")
+        return merge.merge_run_pair(a, b)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=4)
+def _write_rows_fn():
+    """Donated row-group write into the preallocated (L, n) output tables.
+
+    Donation makes XLA reuse the output buffers in place, so the eager
+    chunked build never holds two (L, n) copies; ``t`` stays dynamic (one
+    trace serves every row offset).
+    """
+
+    def run(out_k, out_i, rk, ri, t):
+        return (
+            jax.lax.dynamic_update_slice_in_dim(out_k, rk, t, 0),
+            jax.lax.dynamic_update_slice_in_dim(out_i, ri, t, 0),
+        )
+
+    return jax.jit(run, donate_argnums=(0, 1))
+
+
+def _chunk_bounds(n: int, chunk: int) -> list[tuple[int, int]]:
+    return [(lo, min(lo + chunk, n)) for lo in range(0, n, chunk)]
+
+
+def _build_tables_chunked_eager(
+    outer_params: hashing.BitSampleParams,
+    data: jax.Array,
+    cfg: SLSHConfig,
+    ob,
+) -> tables.TableSet:
+    """Chunked sorted-run construction, eager schedule (DESIGN.md §13).
+
+    Per group of ``_BUILD_GROUP`` tables: hash each ``build_chunk`` of rows
+    (a fresh hash of the group's tables costs the same total work as the
+    monolithic all-tables hash), sort each chunk into a run, fold runs
+    through the LSM-style binary-counter ladder (``core.merge``), and write
+    the merged rows into the donated (L, n) output. Every step is its own
+    cached jit dispatch — XLA CPU frees each transient between dispatches,
+    which a whole-build program does not (its scheduler keeps far more
+    live), so peak memory is O(group·n) + O(output) instead of the
+    monolithic path's O(L·n) transient sort + segment-scan state.
+    ``ob`` (an obs bundle with tracing enabled, or None) wraps each phase
+    in ``build.*`` spans with real device-time sync points.
+    """
+    n = data.shape[0]
+    l_out = outer_params.salts.shape[0]
+    chunk = min(cfg.build_chunk, n)
+    hash_fn = _build_hash_fn(cfg)
+    sort_fn = _sort_run_fn()
+    merge_fn = _merge_pair_fn()
+    write_fn = _write_rows_fn()
+    bounds = _chunk_bounds(n, chunk)
+    out_k = jnp.full((l_out, n), tables.PAD_KEY, jnp.uint32)
+    out_i = jnp.full((l_out, n), -1, jnp.int32)
+    for t0 in range(0, l_out, _BUILD_GROUP):
+        g = min(_BUILD_GROUP, l_out - t0)
+        params_g = jax.tree.map(lambda a: a[t0 : t0 + g], outer_params)
+
+        def hash_all():
+            return [hash_fn(params_g, data[lo:hi]) for lo, hi in bounds]
+
+        def sort_all(keys_list):
+            runs = []
+            for (lo, hi), kg in zip(bounds, keys_list):
+                ig = jnp.broadcast_to(
+                    jnp.arange(lo, hi, dtype=jnp.int32), kg.shape
+                )
+                runs.append(sort_fn(kg, ig))
+            return runs
+
+        def merge_all(runs):
+            stack: list[merge.Run] = []
+            for item in runs:
+                merge.ladder_push(stack, item, merge_fn)
+            return merge.ladder_collapse(stack, merge_fn)
+
+        if ob is None:
+            rk, ri = merge_all(sort_all(hash_all()))
+        else:
+            keys_list = _traced_stage(ob, "build.hash", hash_all)
+            runs = _traced_stage(ob, "build.sort_runs", sort_all, keys_list)
+            rk, ri = _traced_stage(ob, "build.merge", merge_all, runs)
+        out_k, out_i = write_fn(out_k, out_i, rk, ri, t0)
+    return tables.TableSet(out_k, out_i)
+
+
+def _build_tables_chunked_traced(
+    outer_params: hashing.BitSampleParams,
+    data: jax.Array,
+    cfg: SLSHConfig,
+    backend: BackendOps,
+) -> tables.TableSet:
+    """Chunked sorted-run construction, traceable form (all tables at once).
+
+    Used when the caller is already inside a jit (``distributed
+    simulate_build`` maps cells under ``lax.map``): the chunk loop unrolls
+    into the trace, XLA owns the memory schedule, and the result is
+    bit-identical to the eager schedule and the monolithic oracle.
+    """
+    n = data.shape[0]
+    chunk = min(cfg.build_chunk, n)
+    stack: list[merge.Run] = []
+    for lo, hi in _chunk_bounds(n, chunk):
+        kg = hash_keys(outer_params, data[lo:hi], backend).T  # (L, c)
+        ig = jnp.broadcast_to(jnp.arange(lo, hi, dtype=jnp.int32), kg.shape)
+        item = tuple(
+            jax.vmap(lambda kk, ii: jax.lax.sort((kk, ii), num_keys=1))(kg, ig)
+        )
+        merge.ladder_push(stack, item)
+    return tables.TableSet(*merge.ladder_collapse(stack))
+
+
+def _pick_build_mode(cfg: SLSHConfig, n: int) -> str:
+    """Resolve ``cfg.build_mode`` for an ``n``-point build: ``"auto"``
+    goes chunked only past one ``build_chunk`` of points (a single-chunk
+    ladder is the monolithic sort with extra steps), and ``n == 0`` always
+    takes the trivial full sort (no runs to merge)."""
+    mode = cfg.build_mode
+    if mode == "auto":
+        mode = "chunked" if n > cfg.build_chunk else "monolithic"
+    return "monolithic" if n == 0 else mode
+
+
 def build_from_params(
     data: jax.Array,
     outer_params: hashing.BitSampleParams,
@@ -630,18 +868,56 @@ def build_from_params(
     ``outer_params`` may be a row-slice of a larger family (each distributed
     core slices its L_out/p tables out of the root broadcast family); the
     table count is taken from the params, never from ``cfg.L_out``.
+
+    ``cfg.build_mode`` selects the construction schedule (DESIGN.md §13):
+    the monolithic full-sort oracle, or chunked sorted-run construction
+    whose peak memory is O(chunk) + O(output) — bit-exact with each other
+    on every output (tests/test_property_build.py). ``"auto"`` goes
+    chunked once ``n > build_chunk``. The chunked path also streams the
+    heavy-bucket scan per table (``tables.find_heavy_streamed``), whose
+    all-tables transients would otherwise dominate peak build memory.
     """
     n = data.shape[0]
     backend = get_backend(cfg.backend, cfg)
     l_out = outer_params.salts.shape[0]
-    keys = hash_keys_chunked(outer_params, data, cfg.build_chunk, backend)
-    outer = tables.build_tables(keys)
-    alpha_n = jnp.maximum(jnp.int32(cfg.alpha * n), 1)
-    heavy = tables.find_heavy(outer, alpha_n, cfg.h_max)
-    if cfg.use_inner:
-        inner_keys, inner_idx = build_inner(inner_params, data, outer, heavy, cfg)
+    traced = _contains_tracer(data, outer_params, inner_params)
+    mode = _pick_build_mode(cfg, n)
+    ob = obs_mod.get_active()
+    if ob is not None and (traced or not ob.tracing):
+        ob = None  # sync-point policy: build spans only under eager tracing
+    if mode == "chunked":
+        if traced:
+            outer = _build_tables_chunked_traced(outer_params, data, cfg, backend)
+        else:
+            outer = _build_tables_chunked_eager(outer_params, data, cfg, ob)
+        find_heavy = tables.find_heavy_streamed
     else:
-        inner_keys, inner_idx = empty_inner(l_out, cfg)
+        if ob is None:
+            keys = hash_keys_chunked(outer_params, data, cfg.build_chunk, backend)
+            outer = tables.build_tables(keys)
+        else:
+            keys = _traced_stage(
+                ob, "build.hash", hash_keys_chunked,
+                outer_params, data, cfg.build_chunk, backend,
+            )
+            outer = _traced_stage(ob, "build.sort_runs", tables.build_tables, keys)
+        find_heavy = tables.find_heavy
+    alpha_n = jnp.maximum(jnp.int32(cfg.alpha * n), 1)
+
+    def heavy_inner():
+        heavy = find_heavy(outer, alpha_n, cfg.h_max)
+        if cfg.use_inner:
+            ik, ii = build_inner(inner_params, data, outer, heavy, cfg)
+        else:
+            ik, ii = empty_inner(l_out, cfg)
+        return heavy, ik, ii
+
+    if ob is None:
+        heavy, inner_keys, inner_idx = heavy_inner()
+    else:
+        heavy, inner_keys, inner_idx = _traced_stage(
+            ob, "build.heavy_inner", heavy_inner
+        )
     return SLSHIndex(
         outer_params, inner_params, outer, heavy, inner_keys, inner_idx, jnp.int32(n)
     )
@@ -1073,12 +1349,18 @@ def _head_chunk(
     return _stage_gather(index, cfg, probe_keys, inner_keys, delta)
 
 
+def _use_payload(cfg: SLSHConfig, backend: BackendOps) -> bool:
+    """Whether this config runs the compressed-payload fused tail."""
+    return cfg.payload != "f32" and backend.query_tail_payload is not None
+
+
 def query_chunk(
     index: SLSHIndex,
     data: jax.Array,
     queries: jax.Array,
     cfg: SLSHConfig,
     delta: DeltaView | None = None,
+    payload: Payload | None = None,
 ) -> QueryResult:
     """Run the pipeline for one (Q, d) chunk of queries.
 
@@ -1088,12 +1370,25 @@ def query_chunk(
     covers streaming queries too. Backends providing ``query_tail``
     (pallas) run stages 3-5 as one fused megakernel launch
     (``kernels/query_fused``, DESIGN.md §4); the staged form below is the
-    reference path and the bit-exactness oracle.
+    reference path and the bit-exactness oracle. When ``cfg.payload`` is
+    compressed, the tail streams quantized rows from ``payload`` (built
+    here from ``data`` when the caller holds none — handles precompute it
+    once) and reranks exactly in f32 (DESIGN.md §13).
     """
     backend = get_backend(cfg.backend, cfg)
     if backend.query_tail is not None:
         cand, bucket_total = _head_chunk(index, queries, cfg, backend, delta)
         cc = _compact_width(cfg, cand.shape[1], data.shape[0])
+        if _use_payload(cfg, backend):
+            if payload is None:
+                payload = make_payload(data, cfg.payload)
+            kd, ki, comparisons, overflow, misses = backend.query_tail_payload(
+                data, payload.qdata, payload.meta, queries, cand,
+                run=_fused_run(cfg), c_comp=cc, c_rerank=cfg.c_rerank, k=cfg.k,
+            )
+            return QueryResult(
+                ki, kd, comparisons, bucket_total, overflow, misses
+            )
         kd, ki, comparisons, overflow = backend.query_tail(
             data, queries, cand, run=_fused_run(cfg), c_comp=cc, k=cfg.k
         )
@@ -1222,6 +1517,7 @@ def _query_batch_fused_eager(
     cfg: SLSHConfig,
     delta: DeltaView | None,
     backend: BackendOps,
+    payload: Payload | None = None,
 ) -> QueryResult:
     """Eager fused execution: hash, gather, and tail as cached jit dispatches.
 
@@ -1257,6 +1553,18 @@ def _query_batch_fused_eager(
         gather_fn = _fused_gather_delta_fn(cfg)
     run = _fused_run(cfg)
     cc = _compact_width(cfg, index.outer.sorted_keys.shape[0] * cfg.slot, data.shape[0])
+    use_payload = _use_payload(cfg, backend)
+    if use_payload and payload is None:
+        payload = make_payload(data, cfg.payload)
+
+    def tail(d, q, c):
+        if use_payload:
+            return backend.query_tail_payload(
+                d, payload.qdata, payload.meta, q, c,
+                run=run, c_comp=cc, c_rerank=cfg.c_rerank, k=cfg.k,
+            )
+        return backend.query_tail(d, q, c, run=run, c_comp=cc, k=cfg.k)
+
     ob = obs_mod.get_active()
     if ob is not None and not ob.tracing:
         ob = None  # sync-point policy: per-stage timing only under tracing
@@ -1270,9 +1578,7 @@ def _query_batch_fused_eager(
                 cand = select_fn(oc, ic, fnd)
             else:
                 cand, bucket_total = gather_fn(index, pk, ik, delta)
-            kd, ki, comparisons, overflow = backend.query_tail(
-                data, qs, cand, run=run, c_comp=cc, k=cfg.k
-            )
+            out = tail(data, qs, cand)
         else:
             pk, ik = _traced_stage(ob, "query.hash", hash_fn, index, qs)
             if delta is None:
@@ -1286,14 +1592,14 @@ def _query_batch_fused_eager(
                 cand, bucket_total = _traced_stage(
                     ob, "query.gather_delta", gather_fn, index, pk, ik, delta
                 )
-            kd, ki, comparisons, overflow = _traced_stage(
-                ob, "query.tail",
-                lambda d, q, c: backend.query_tail(
-                    d, q, c, run=run, c_comp=cc, k=cfg.k
-                ),
-                data, qs, cand,
-            )
-        outs.append(QueryResult(ki, kd, comparisons, bucket_total, overflow))
+            out = _traced_stage(ob, "query.tail", tail, data, qs, cand)
+        if use_payload:
+            kd, ki, comparisons, overflow, misses = out
+        else:
+            (kd, ki, comparisons, overflow), misses = out, None
+        outs.append(
+            QueryResult(ki, kd, comparisons, bucket_total, overflow, misses)
+        )
     if len(outs) == 1:
         res = outs[0]
     else:
@@ -1307,6 +1613,7 @@ def query_batch(
     queries: jax.Array,
     cfg: SLSHConfig,
     delta: DeltaView | None = None,
+    payload: Payload | None = None,
 ) -> QueryResult:
     """Chunked pipeline over queries -> stacked QueryResult (Q, ...).
 
@@ -1315,17 +1622,24 @@ def query_batch(
     and the pallas backend runs the per-stage fused schedule
     (``_query_batch_fused_eager``). Called under an outer jit (tracer
     inputs), both trace through the chunked pipeline unchanged — results
-    are bit-identical either way.
+    are bit-identical either way. ``payload`` is the precomputed quantized
+    dataset for compressed-payload configs (``cfg.payload != "f32"``,
+    DESIGN.md §13); omitted, the quantization is derived from ``data``.
     """
-    if _contains_tracer(index, data, queries, delta):
+    if _contains_tracer(index, data, queries, delta, payload):
+        backend = get_backend(cfg.backend, cfg)
+        if _use_payload(cfg, backend) and payload is None:
+            payload = make_payload(data, cfg.payload)
         return _chunked_map(
-            lambda qs: query_chunk(index, data, qs, cfg, delta),
+            lambda qs: query_chunk(index, data, qs, cfg, delta, payload),
             queries,
             cfg.query_chunk,
         )
     backend = get_backend(cfg.backend, cfg)
     if backend.query_tail is not None:
-        return _query_batch_fused_eager(index, data, queries, cfg, delta, backend)
+        return _query_batch_fused_eager(
+            index, data, queries, cfg, delta, backend, payload
+        )
     fn = _staged_batch_fn(cfg, delta is not None)
     ob = obs_mod.get_active()
     if ob is not None and ob.tracing:

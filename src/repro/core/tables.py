@@ -80,6 +80,22 @@ def find_heavy(tables: TableSet, alpha_n: jax.Array, h_max: int) -> HeavyBuckets
     return HeavyBuckets(key, start, size, valid, overflow)
 
 
+def find_heavy_streamed(
+    tables: TableSet, alpha_n: jax.Array, h_max: int
+) -> HeavyBuckets:
+    """:func:`find_heavy` computed one table at a time (``lax.map``).
+
+    Bit-identical to the vmapped form, but its segment-scan transients are
+    (n,)-sized instead of (L, n)-sized — the registry pass of the
+    memory-bounded chunked builder (DESIGN.md §13), where the all-tables
+    scan would otherwise dominate peak build memory.
+    """
+    key, start, size, valid, overflow = jax.lax.map(
+        lambda sk: _heavy_one_table(sk, alpha_n, h_max), tables.sorted_keys
+    )
+    return HeavyBuckets(key, start, size, valid, overflow)
+
+
 def bucket_range(sorted_keys_row: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
     """[lo, hi) slice of one table's sorted arrays holding ``key``."""
     lo = jnp.searchsorted(sorted_keys_row, key, side="left")

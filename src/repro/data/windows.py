@@ -151,3 +151,94 @@ def train_test_split(
         labels=dataset["labels"][train],
     )
     return train_ds, dataset["points"][test], dataset["labels"][test]
+
+
+# ------------------------------------------------- chunked window synthesis
+#
+# The paper-scale harness (benchmarks/scale_bench.py, DESIGN.md §13) feeds
+# 1.37M windows through the out-of-core build. Materializing the underlying
+# beat waveforms for that many rolling windows (~hours of MAP per window)
+# defeats the point of a bounded-memory build, so the scale path synthesizes
+# *window vectors* directly with the statistical shape the rolling pipeline
+# emits: a per-window patient baseline plus subwindow noise, and a
+# ``dip_frac`` minority whose MAP ramps down through the lag window toward a
+# hypotensive (< 60 mmHg) tail — the trajectory an imminent AHE presents to
+# a live monitor (§4). Generation is block-seeded: block ``j`` always draws
+# from ``SeedSequence([seed, j])`` over the full fixed block, and chunks
+# slice across blocks — so the stream is a pure function of ``(spec, row)``
+# and chunk size provably cannot change it.
+
+GEN_BLOCK = 4096  # fixed generation block; chunks slice across blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticWindowSpec:
+    """Shape of a directly-synthesized window stream (scale harness).
+
+    ``n`` rows of ``d`` per-subwindow MAP means: baseline uniform in
+    ``[baseline_lo, baseline_hi]`` mmHg + N(0, noise_mmhg) per subwindow;
+    a ``dip_frac`` minority ramps down by ``depth ~ U[dip_lo, dip_hi]``
+    mmHg scaled by a quadratic ramp toward the window tail. The label is
+    physical, not stored metadata: positive iff the final subwindow mean
+    sits below the AHE threshold (60 mmHg).
+    """
+
+    n: int
+    d: int = D_SUBWINDOWS
+    seed: int = 0
+    baseline_lo: float = 68.0
+    baseline_hi: float = 95.0
+    noise_mmhg: float = 2.0
+    dip_frac: float = 0.08
+    dip_lo: float = 15.0
+    dip_hi: float = 40.0
+
+
+def synth_window_block(spec: SyntheticWindowSpec, j: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate full block ``j`` -> (points (GEN_BLOCK, d) f32, labels i8).
+
+    Always the full fixed block, seeded ``SeedSequence([seed, j])`` —
+    callers slice; nothing about chunking reaches the RNG.
+    """
+    rng = np.random.default_rng(np.random.SeedSequence([spec.seed, j]))
+    b, d = GEN_BLOCK, spec.d
+    baseline = rng.uniform(spec.baseline_lo, spec.baseline_hi, size=(b, 1))
+    noise = rng.normal(0.0, spec.noise_mmhg, size=(b, d))
+    dip = rng.random(b) < spec.dip_frac
+    depth = rng.uniform(spec.dip_lo, spec.dip_hi, size=b)
+    ramp = np.linspace(0.0, 1.0, d) ** 2  # accelerating decline to the tail
+    pts = baseline + noise - (dip * depth)[:, None] * ramp[None, :]
+    pts = np.clip(pts, 20.0, 180.0).astype(np.float32)
+    labels = (pts[:, -1] < AHE_THRESHOLD_MMHG).astype(np.int8)
+    return pts, labels
+
+
+def synth_window_slice(
+    spec: SyntheticWindowSpec, lo: int, hi: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Rows ``[lo, hi)`` of the stream (assembled from full blocks)."""
+    if not 0 <= lo <= hi <= spec.n:
+        raise ValueError(f"slice [{lo}, {hi}) outside stream of n={spec.n}")
+    pts, labs = [], []
+    for j in range(lo // GEN_BLOCK, (max(hi, lo + 1) - 1) // GEN_BLOCK + 1):
+        p, y = synth_window_block(spec, j)
+        a = max(lo - j * GEN_BLOCK, 0)
+        b = min(hi - j * GEN_BLOCK, GEN_BLOCK)
+        pts.append(p[a:b])
+        labs.append(y[a:b])
+    return (
+        np.concatenate(pts, axis=0)
+        if pts else np.zeros((0, spec.d), np.float32),
+        np.concatenate(labs, axis=0) if labs else np.zeros((0,), np.int8),
+    )
+
+
+def synth_window_chunks(spec: SyntheticWindowSpec, chunk: int):
+    """Stream the ``n`` rows as ``(points, labels)`` chunks of ``chunk``
+    rows (final chunk ragged). Peak memory is O(chunk + GEN_BLOCK) — the
+    full array never exists; the stream is identical for every ``chunk``.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    for lo in range(0, spec.n, chunk):
+        yield synth_window_slice(spec, lo, min(lo + chunk, spec.n))

@@ -23,7 +23,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import blocking
-from repro.kernels.query_fused.query_fused import query_tail_pallas
+from repro.kernels.query_fused.query_fused import (
+    query_tail_pallas,
+    query_tail_payload_pallas,
+)
 from repro.obs.metrics import count_retrace
 
 
@@ -76,4 +79,49 @@ def query_tail(
     return query_tail_pallas(
         data, queries.astype(jnp.float32), cand,
         run=run, c_comp=c_comp, k=k, interpret=interp, **kwargs,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("run", "c_comp", "c_rerank", "k", "interpret")
+)
+def query_tail_payload(
+    data: jax.Array,  # (n, d) exact f32 rows (shortlist rerank)
+    qdata: jax.Array,  # (n, d) quantized rows (runtime.payload)
+    meta: jax.Array,  # (n, 2) f32 [dequant scale, L1 error bound]
+    queries: jax.Array,  # (Q, d) query chunk
+    cand: jax.Array,  # (Q, C) int32 candidate indices, -1 where masked
+    *,
+    run: int,
+    c_comp: int,
+    c_rerank: int,
+    k: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, ...]:
+    """Compressed-payload fused tail -> ``(kd, ki, comparisons, overflow,
+    rerank_misses)`` (DESIGN.md §13).
+
+    Same candidate contract as :func:`query_tail`; the distance stage
+    streams quantized rows, selects a ``c_rerank`` shortlist, and reranks
+    it exactly in f32. ``rerank_misses`` counts excluded candidates whose
+    approximate distance came within the row's quantization error bound of
+    the k-th exact distance — zero everywhere certifies ``kd``/``ki``
+    bit-identical to the f32 tail (``ref.query_tail_payload_ref`` is the
+    oracle; tests/test_property_kernels.py holds both to it).
+    """
+    count_retrace("query_tail_payload")
+    interp = blocking.resolve_interpret(interpret)
+    c = cand.shape[1]
+    c_pad = _run_padded_width(c, run)
+    if c_pad != c:
+        cand = blocking.pad_axis(cand, 1, c_pad, value=-1)
+    kwargs = {}
+    if not interp:
+        kwargs["c_blk"] = blocking.ring_chunk(
+            c_comp, qdata.shape[1], itemsize=qdata.dtype.itemsize
+        )
+    return query_tail_payload_pallas(
+        data, qdata, meta, queries.astype(jnp.float32), cand,
+        run=run, c_comp=c_comp, c_rerank=c_rerank, k=k,
+        interpret=interp, **kwargs,
     )

@@ -268,6 +268,176 @@ def _tail_kernel_dma(
     ovf_ref[...] = jnp.maximum(comparisons - jnp.int32(c_comp), 0)
 
 
+def _payload_finish(
+    comp, valid, ad, qerr, ed, spos, svalid, c_rerank: int, k: int
+):
+    """Shared payload-tail epilogue: position-ordered exact top-k + misses.
+
+    ``ad``/``qerr`` cover the full compacted width; ``ed`` is the exact
+    distance of shortlist entry ``spos[i]`` (inf where invalid). The exact
+    distances scatter back into a position-ordered full-width row (inf off
+    the shortlist), so ``lax.top_k`` keeps the §6 lowest-position tie rule
+    without re-sorting; the miss predicate then reads the k-th exact
+    distance off the finished ``kd``.
+    """
+    q_n, cc = ad.shape
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, (q_n, cc, c_rerank), 1)
+    match = (pos_iota == spos[:, None, :]) & svalid[:, None, :]  # (Q, cc, cr)
+    ed_full = jnp.min(
+        jnp.where(match, ed[:, None, :], jnp.inf), axis=-1
+    )  # (Q, cc) exact distances in compacted-position order
+    kd, ki = _finish_topk(ed_full, comp, valid, k)
+    dk = kd[:, k - 1][:, None]
+    in_short = jnp.any(match, axis=-1)
+    miss = valid & (~in_short) & (ad - qerr <= dk)
+    return kd, ki, jnp.sum(miss.astype(jnp.int32), axis=-1)
+
+
+def _tail_kernel_payload_interpret(
+    data_ref, qd_ref, meta_ref, q_ref, cand_ref,
+    kd_ref, ki_ref, cmp_ref, ovf_ref, mis_ref,
+    *, run: int, c_comp: int, c_rerank: int, k: int, n: int,
+):
+    """Whole-chunk compressed-payload megakernel body (interpret).
+
+    ``qd_ref``/``meta_ref``/``data_ref`` live in ``pltpu.ANY`` space: the
+    candidate gather streams *quantized* rows (the compressed HBM touch),
+    and only the ``c_rerank`` shortlist rows are re-gathered from the f32
+    dataset for the exact rerank (DESIGN.md §13).
+    """
+    cand = cand_ref[...]
+    qs = q_ref[...]
+    comp, comparisons = _dedup_compact(cand, run, c_comp, q_major=True)
+    valid = comp != _SENT
+    safe = jnp.clip(jnp.where(valid, comp, 0), 0, n - 1)
+    mrows = meta_ref[safe]  # (Q, cc, 2)
+    deq = qd_ref[safe].astype(jnp.float32) * mrows[..., 0:1]
+    ad = jnp.sum(jnp.abs(deq - qs[:, None, :]), axis=-1)
+    ad = jnp.where(valid, ad, jnp.inf)
+    cr = min(c_rerank, ad.shape[1])
+    _, spos = jax.lax.top_k(-ad, cr)  # ties -> lowest compacted position
+    scand = jnp.take_along_axis(comp, spos, axis=-1)
+    svalid = jnp.take_along_axis(valid, spos, axis=-1)
+    pts = data_ref[jnp.clip(jnp.where(svalid, scand, 0), 0, n - 1)]
+    ed = jnp.sum(jnp.abs(pts - qs[:, None, :]), axis=-1)
+    ed = jnp.where(svalid, ed, jnp.inf)
+    kd, ki, misses = _payload_finish(
+        comp, valid, ad, mrows[..., 1], ed, spos, svalid, cr, k
+    )
+    kd_ref[...], ki_ref[...] = kd, ki
+    cmp_ref[...] = comparisons
+    ovf_ref[...] = jnp.maximum(comparisons - jnp.int32(c_comp), 0)
+    mis_ref[...] = misses
+
+
+def _tail_kernel_payload_dma(
+    q_ref, cand_ref, data_ref, qd_ref, meta_ref,
+    kd_ref, ki_ref, cmp_ref, ovf_ref, mis_ref,
+    buf_ref, mbuf_ref, ebuf_ref, ad_ref, qe_ref, sem_ref, msem_ref, esem_ref,
+    *, run: int, c_comp: int, c_rerank: int, k: int, n: int, c_blk: int,
+):
+    """Per-query compressed-payload megakernel body (compiled Mosaic).
+
+    Same two-slot ring schedule as :func:`_tail_kernel_dma`, but the ring
+    streams *quantized* rows (``buf_ref``, half/quarter bytes) plus their
+    (scale, error) meta pairs (``mbuf_ref``); approximate distances and
+    error bounds accumulate in VMEM (``ad_ref``/``qe_ref`` — f32 rows of
+    the full compacted width, small enough to stay resident). After the
+    stream, the ``c_rerank`` shortlist is selected in-VMEM, its exact f32
+    rows gathered through one more burst of per-row copies (``ebuf_ref``),
+    and the shared epilogue finishes the position-ordered exact top-k and
+    the miss count. As with the base compiled body, this container has no
+    TPU — the schedule is exercised through the shared-logic interpret
+    tests.
+    """
+    comp, comparisons = _dedup_compact(cand_ref[...], run, c_comp)
+    valid = comp != _SENT
+    safe = jnp.clip(jnp.where(valid, comp, 0), 0, n - 1)
+    qrow = q_ref[...]  # (1, D)
+    n_chunks = c_comp // c_blk
+
+    def copy_row(slot, t, j):
+        return pltpu.make_async_copy(
+            qd_ref.at[pl.ds(safe[0, t * c_blk + j], 1), :],
+            buf_ref.at[slot, pl.ds(j, 1), :],
+            sem_ref.at[slot, j],
+        )
+
+    def copy_meta(slot, t, j):
+        return pltpu.make_async_copy(
+            meta_ref.at[pl.ds(safe[0, t * c_blk + j], 1), :],
+            mbuf_ref.at[slot, pl.ds(j, 1), :],
+            msem_ref.at[slot, j],
+        )
+
+    def start_chunk(slot, t):
+        def issue(j, carry):
+            copy_row(slot, t, j).start()
+            copy_meta(slot, t, j).start()
+            return carry
+
+        jax.lax.fori_loop(0, c_blk, issue, 0)
+
+    start_chunk(0, 0)
+
+    def step(t, carry):
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < n_chunks)
+        def _():
+            start_chunk(1 - slot, t + 1)
+
+        def wait(j, carry2):
+            copy_row(slot, t, j).wait()
+            copy_meta(slot, t, j).wait()
+            return carry2
+
+        jax.lax.fori_loop(0, c_blk, wait, 0)
+        mtile = mbuf_ref[slot]  # (C_BLK, 2)
+        deq = buf_ref[slot].astype(jnp.float32) * mtile[:, 0:1]
+        dist = jnp.sum(jnp.abs(deq - qrow), axis=-1)  # (C_BLK,)
+        ad_ref[0, pl.ds(t * c_blk, c_blk)] = dist
+        qe_ref[0, pl.ds(t * c_blk, c_blk)] = mtile[:, 1]
+        return carry
+
+    jax.lax.fori_loop(0, n_chunks, step, 0)
+
+    ad = jnp.where(valid, ad_ref[...], jnp.inf)  # (1, c_comp)
+    _, spos = jax.lax.top_k(-ad, c_rerank)
+    scand = jnp.take_along_axis(comp, spos, axis=1)
+    svalid = jnp.take_along_axis(valid, spos, axis=1)
+    ssafe = jnp.clip(jnp.where(svalid, scand, 0), 0, n - 1)
+
+    def issue_exact(j, carry):
+        pltpu.make_async_copy(
+            data_ref.at[pl.ds(ssafe[0, j], 1), :],
+            ebuf_ref.at[pl.ds(j, 1), :],
+            esem_ref.at[j],
+        ).start()
+        return carry
+
+    jax.lax.fori_loop(0, c_rerank, issue_exact, 0)
+
+    def wait_exact(j, carry):
+        pltpu.make_async_copy(
+            data_ref.at[pl.ds(ssafe[0, j], 1), :],
+            ebuf_ref.at[pl.ds(j, 1), :],
+            esem_ref.at[j],
+        ).wait()
+        return carry
+
+    jax.lax.fori_loop(0, c_rerank, wait_exact, 0)
+    ed = jnp.sum(jnp.abs(ebuf_ref[...] - qrow), axis=-1)[None, :]  # (1, cr)
+    ed = jnp.where(svalid, ed, jnp.inf)
+    kd, ki, misses = _payload_finish(
+        comp, valid, ad, qe_ref[...], ed, spos, svalid, c_rerank, k
+    )
+    kd_ref[...], ki_ref[...] = kd, ki
+    cmp_ref[...] = comparisons
+    ovf_ref[...] = jnp.maximum(comparisons - jnp.int32(c_comp), 0)
+    mis_ref[...] = misses
+
+
 @functools.partial(
     jax.jit, static_argnames=("run", "c_comp", "k", "interpret", "c_blk")
 )
@@ -349,3 +519,103 @@ def query_tail_pallas(
         ],
         interpret=False,
     )(queries, cand, data)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("run", "c_comp", "c_rerank", "k", "interpret", "c_blk"),
+)
+def query_tail_payload_pallas(
+    data: jax.Array,  # (n, d) exact f32 rows (rerank only)
+    qdata: jax.Array,  # (n, d) quantized rows (runtime.payload)
+    meta: jax.Array,  # (n, 2) f32 [dequant scale, L1 error bound]
+    queries: jax.Array,  # (Q, d)
+    cand: jax.Array,  # (Q, C) int32, run-sorted, C = run * 2^e
+    *,
+    run: int,
+    c_comp: int,
+    c_rerank: int,
+    k: int,
+    interpret: bool = True,
+    c_blk: int = 128,
+) -> tuple[jax.Array, ...]:
+    """Launch the compressed-payload fused tail (DESIGN.md §13).
+
+    Returns ``(kd, ki, comparisons, overflow, rerank_misses)``. Callers go
+    through :func:`repro.kernels.query_fused.ops.query_tail_payload`, which
+    pads ``cand``, clamps ``c_rerank`` to the compacted width, and resolves
+    the interpret policy.
+    """
+    q_n, c = cand.shape
+    n, d = data.shape
+    cr = min(c_rerank, c_comp)
+    out_shape = [
+        jax.ShapeDtypeStruct((q_n, k), jnp.float32),
+        jax.ShapeDtypeStruct((q_n, k), jnp.int32),
+        jax.ShapeDtypeStruct((q_n,), jnp.int32),
+        jax.ShapeDtypeStruct((q_n,), jnp.int32),
+        jax.ShapeDtypeStruct((q_n,), jnp.int32),
+    ]
+    if interpret:
+        kern = functools.partial(
+            _tail_kernel_payload_interpret,
+            run=run, c_comp=c_comp, c_rerank=cr, k=k, n=n,
+        )
+        return pl.pallas_call(
+            kern,
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),  # data: rerank gather
+                pl.BlockSpec(memory_space=pltpu.ANY),  # qdata: compressed rows
+                pl.BlockSpec(memory_space=pltpu.ANY),  # meta: scale + err
+                pl.BlockSpec((q_n, d), lambda i: (0, 0)),
+                pl.BlockSpec((q_n, c), lambda i: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((q_n, k), lambda i: (0, 0)),
+                pl.BlockSpec((q_n, k), lambda i: (0, 0)),
+                pl.BlockSpec((q_n,), lambda i: (0,)),
+                pl.BlockSpec((q_n,), lambda i: (0,)),
+                pl.BlockSpec((q_n,), lambda i: (0,)),
+            ],
+            out_shape=out_shape,
+            interpret=True,
+        )(data, qdata, meta, queries, cand)
+
+    c_blk = max(1, min(c_blk, c_comp))
+    while c_comp % c_blk:  # ring chunks must tile the compacted width
+        c_blk //= 2
+    kern = functools.partial(
+        _tail_kernel_payload_dma,
+        run=run, c_comp=c_comp, c_rerank=cr, k=k, n=n, c_blk=c_blk,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(q_n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # data: shortlist DMA
+            pl.BlockSpec(memory_space=pltpu.ANY),  # qdata: ring DMA
+            pl.BlockSpec(memory_space=pltpu.ANY),  # meta: ring DMA
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((2, c_blk, d), qdata.dtype),
+            pltpu.VMEM((2, c_blk, 2), jnp.float32),
+            pltpu.VMEM((cr, d), jnp.float32),
+            pltpu.VMEM((1, c_comp), jnp.float32),
+            pltpu.VMEM((1, c_comp), jnp.float32),
+            pltpu.SemaphoreType.DMA((2, c_blk)),
+            pltpu.SemaphoreType.DMA((2, c_blk)),
+            pltpu.SemaphoreType.DMA((cr,)),
+        ],
+        interpret=False,
+    )(queries, cand, data, qdata, meta)

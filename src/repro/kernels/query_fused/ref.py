@@ -50,3 +50,89 @@ def query_tail_ref(
         pos >= 0, jnp.take_along_axis(comp, jnp.maximum(pos, 0), axis=-1), -1
     )
     return kd, ki, comparisons, overflow
+
+
+def query_tail_payload_ref(
+    data: jax.Array,  # (n, d) exact f32 rows (rerank only)
+    qdata: jax.Array,  # (n, d) quantized rows (runtime.payload)
+    meta: jax.Array,  # (n, 2) f32 [dequant scale, L1 error bound]
+    queries: jax.Array,  # (Q, d)
+    cand: jax.Array,  # (Q, C) int32 candidate indices, -1 where masked
+    *,
+    c_comp: int,
+    c_rerank: int,
+    k: int,
+) -> tuple[jax.Array, ...]:
+    """Staged oracle of the compressed-payload tail (DESIGN.md §13).
+
+    Stages 3-4 match :func:`query_tail_ref`; the distance stage then runs
+    on dequantized payload rows to pick the ``c_rerank`` shortlist (ties
+    prefer the lower compacted position), reranks the shortlist exactly in
+    f32, and finishes top-k in compacted-position order so the §6
+    lowest-position tie rule matches the f32 path. Returns
+    ``(kd, ki, comparisons, overflow, rerank_misses)`` — a miss is a valid
+    candidate excluded from the shortlist whose approximate distance came
+    within its quantization error bound of the k-th exact distance;
+    ``rerank_misses == 0`` certifies ``kd``/``ki`` bit-identical to
+    :func:`query_tail_ref` on the same inputs.
+    """
+    n = data.shape[0]
+    cand_sorted = jnp.sort(cand, axis=-1)
+    uniq = jnp.concatenate(
+        [cand_sorted[:, :1] >= 0, cand_sorted[:, 1:] != cand_sorted[:, :-1]],
+        axis=-1,
+    ) & (cand_sorted >= 0)
+    comparisons = jnp.sum(uniq.astype(jnp.int32), axis=-1)
+    comp = jnp.sort(jnp.where(uniq, cand_sorted, _SENT), axis=-1)[:, :c_comp]
+    valid = comp != _SENT
+    overflow = jnp.maximum(comparisons - jnp.int32(c_comp), 0)
+    safe = jnp.clip(jnp.where(valid, comp, 0), 0, n - 1)
+
+    # approximate L1 pass over dequantized rows
+    mrows = meta[safe]  # (Q, cc, 2)
+    deq = qdata[safe].astype(jnp.float32) * mrows[..., 0:1]
+    ad = jnp.sum(jnp.abs(deq - queries[:, None, :]), axis=-1)
+    ad = jnp.where(valid, ad, jnp.inf)
+    qerr = mrows[..., 1]
+
+    # c_rerank shortlist: smallest approximate distances, ties -> lowest
+    # compacted position (lax.top_k prefers earlier positions on equals)
+    cr = min(c_rerank, ad.shape[1])
+    _, spos = jax.lax.top_k(-ad, cr)
+    scand = jnp.take_along_axis(comp, spos, axis=-1)
+    svalid = jnp.take_along_axis(valid, spos, axis=-1)
+
+    # exact f32 rerank of the shortlist, restored to position order
+    pts = data[jnp.clip(jnp.where(svalid, scand, 0), 0, n - 1)]
+    ed = jnp.sum(jnp.abs(pts - queries[:, None, :]), axis=-1)
+    ed = jnp.where(svalid, ed, jnp.inf)
+    spos_m = jnp.where(svalid, spos.astype(jnp.int32), _SENT)
+    spos_s, ed_s, scand_s = jax.lax.sort(
+        (spos_m, ed, scand), num_keys=1
+    )
+    svalid_s = spos_s != _SENT
+    if ed_s.shape[1] < k:
+        pad = k - ed_s.shape[1]
+        ed_s = jnp.pad(ed_s, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        scand_s = jnp.pad(scand_s, ((0, 0), (0, pad)), constant_values=_SENT)
+        svalid_s = jnp.pad(svalid_s, ((0, 0), (0, pad)), constant_values=False)
+    neg, p = jax.lax.top_k(-ed_s, k)
+    kd = -neg
+    ki = jnp.where(
+        jnp.isfinite(neg),
+        jnp.take_along_axis(
+            jnp.where(svalid_s, scand_s, -1), jnp.maximum(p, 0), axis=-1
+        ),
+        -1,
+    )
+
+    # rerank-margin misses: |L1_exact - L1_approx| <= qerr per row, so an
+    # excluded candidate with ad - qerr > D_k provably cannot displace the
+    # top-k; everything else is counted (never silent)
+    dk = kd[:, k - 1][:, None]
+    in_short = jax.vmap(
+        lambda m, s: m.at[s].set(True)
+    )(jnp.zeros(ad.shape, jnp.bool_), spos)
+    miss = valid & (~in_short) & (ad - qerr <= dk)
+    misses = jnp.sum(miss.astype(jnp.int32), axis=-1)
+    return kd, ki, comparisons, overflow, misses

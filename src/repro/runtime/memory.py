@@ -1,0 +1,128 @@
+"""Per-cell index memory accountant (DESIGN.md §13).
+
+Answers "what does one cell's index cost to hold resident?" from array
+shape metadata alone — no device sync, no host transfer. The accountant
+decomposes an :class:`~repro.core.pipeline.SLSHIndex` (single-cell, or the
+``(nu, p)``-stacked layout ``distributed.simulate_build`` / ``dslsh_build``
+emit) into the components the paper's capacity plan budgets:
+
+* ``tables`` — the outer CSR pair ``sorted_keys``/``sorted_idx`` (L, n);
+* ``heavy``  — the heavy-bucket directory (keys, starts, counts);
+* ``inner``  — stratified inner tables over heavy buckets (L, H, L_in, P);
+* ``data``   — the exact f32 rows the distance/rerank stage gathers;
+* ``payload`` — the optional quantized candidate payload + per-row meta
+  (zero when ``cfg.payload == "f32"``).
+
+Reports surface in three places: ``Index.memory_report()`` on the API
+handle, the ``dslsh_index_bytes{component,cell}`` obs gauge
+(:meth:`MemoryReport.feed_gauges`), and the scale benchmark's
+``BENCH_scale.json`` artifact (:meth:`MemoryReport.to_dict`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+
+from repro.runtime.payload import _META_COLS, payload_itemsize
+
+COMPONENTS = ("tables", "heavy", "inner", "data", "payload")
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes across all array leaves of ``tree`` (shape metadata
+    only — never syncs or transfers)."""
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(tree)
+        if hasattr(leaf, "dtype")
+    )
+
+
+class MemoryReport(NamedTuple):
+    """Byte accounting for one index: totals plus the per-cell split.
+
+    ``components`` maps each :data:`COMPONENTS` name to total bytes across
+    all cells; ``cells`` is the ``(nu, p)`` grid the totals divide over
+    (``(1, 1)`` for a single shard). Cells are shape-uniform by
+    construction (the grid build vmaps one cell program), so per-cell
+    bytes are exact integer shares, not averages.
+    """
+
+    components: dict[str, int]
+    cells: tuple[int, int]
+
+    @property
+    def total(self) -> int:
+        """Total resident bytes across every component and cell."""
+        return sum(self.components.values())
+
+    @property
+    def per_cell(self) -> dict[str, int]:
+        """Component bytes for one cell (totals / nu*p)."""
+        k = self.cells[0] * self.cells[1]
+        return {name: b // k for name, b in self.components.items()}
+
+    def to_dict(self) -> dict:
+        """JSON-ready form for bench artifacts and build reports."""
+        return {
+            "cells": list(self.cells),
+            "total_bytes": self.total,
+            "components": dict(self.components),
+            "per_cell": self.per_cell,
+        }
+
+    def feed_gauges(self, metrics) -> None:
+        """Set ``dslsh_index_bytes{component,cell}`` on a metrics registry.
+
+        One gauge sample per (component, cell); cells are shape-uniform so
+        every cell of a grid reports the same per-cell share.
+        """
+        fam = metrics.gauge(
+            "dslsh_index_bytes",
+            "resident index bytes by component per (node/core) cell"
+            " (DESIGN.md §13 capacity accounting)",
+        )
+        per = self.per_cell
+        for j in range(self.cells[0]):
+            for c in range(self.cells[1]):
+                for name, b in per.items():
+                    fam.labels(component=name, cell=f"{j}/{c}").set(float(b))
+
+
+def payload_nbytes(n: int, d: int, fmt: str) -> int:
+    """Bytes of the quantized candidate payload for ``n`` rows of width
+    ``d`` in format ``fmt`` (0 for ``"f32"`` — the exact rows already
+    counted under ``data`` serve directly).
+
+    >>> payload_nbytes(1000, 30, "f32")
+    0
+    >>> payload_nbytes(1000, 30, "i8")  # 30 i8 + 2 f32 meta per row
+    38000
+    """
+    if fmt == "f32":
+        return 0
+    return n * (d * payload_itemsize(fmt) + _META_COLS * 4)
+
+
+def index_report(index, data, fmt: str = "f32", cells=(1, 1)) -> MemoryReport:
+    """Account an :class:`SLSHIndex` + its dataset -> :class:`MemoryReport`.
+
+    ``index`` may be single-cell or ``(nu, p)``-stacked; pass the matching
+    ``cells``. ``data`` is the (stacked or flat) dataset the handle keeps
+    resident; ``fmt`` is ``cfg.payload`` and adds the quantized-payload
+    component when not ``"f32"``.
+    """
+    data_bytes = tree_nbytes(data)
+    d = data.shape[-1]
+    n_total = data_bytes // (d * data.dtype.itemsize)
+    return MemoryReport(
+        components={
+            "tables": tree_nbytes(index.outer),
+            "heavy": tree_nbytes(index.heavy),
+            "inner": tree_nbytes((index.inner_keys, index.inner_idx)),
+            "data": data_bytes,
+            "payload": payload_nbytes(n_total, d, fmt),
+        },
+        cells=(int(cells[0]), int(cells[1])),
+    )

@@ -1,0 +1,104 @@
+"""Compressed candidate payloads for the fused query tail (DESIGN.md §13).
+
+The megakernel's dominant HBM traffic is the candidate-row gather: ``c_comp``
+rows of ``d`` f32 per query. An opt-in payload (``RuntimeConfig.payload``)
+quantizes the dataset once at build time — ``"f16"`` halves the gathered
+bytes, ``"i8"`` quarters them with one f32 scale per row — and the tail
+runs its L1 pass on the compressed rows to select a ``c_rerank`` shortlist,
+then reranks the shortlist *exactly* in f32. Alongside each row's dequant
+scale we store its exact L1 quantization error ``qerr = sum_j |x_j - deq_j|``,
+which bounds the approximation: ``|L1(q, x) - L1(q, deq(x))| <= qerr``. A
+candidate excluded from the shortlist whose approximate distance comes
+within ``qerr`` of the k-th exact distance is a *rerank-margin miss* —
+counted in ``QueryResult.rerank_misses``, never silent (the same contract
+shape as ``compaction_overflow``). A zero miss count certifies the payload
+query bit-identical to the f32 path: every excluded candidate's exact
+distance provably exceeds the k-th.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PAYLOAD_FORMATS = ("f32", "f16", "i8")
+
+# f32 bytes per meta row: [dequant scale, L1 quantization error bound]
+_META_COLS = 2
+
+
+class Payload(NamedTuple):
+    """A quantized copy of the dataset consumed by the payload query tail.
+
+    ``qdata`` holds the compressed rows (float16 or int8); ``meta`` carries
+    two f32 columns per row — the dequantization scale (1.0 for f16) and
+    the exact L1 error bound of the row's reconstruction. Dequantization is
+    one formula for every format: ``deq = qdata.astype(f32) * scale``.
+    """
+
+    qdata: jax.Array  # (n, d) float16 | int8 quantized rows
+    meta: jax.Array  # (n, 2) float32 — [:, 0] scale, [:, 1] L1 error bound
+
+    @property
+    def nbytes(self) -> int:
+        """Total device bytes this payload holds resident."""
+        return int(self.qdata.nbytes) + int(self.meta.nbytes)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def make_payload(data: jax.Array, fmt: str) -> Payload:
+    """Quantize ``data`` (n, d) f32 into a :class:`Payload`.
+
+    ``"f16"`` rounds each element to float16 (scale 1.0); ``"i8"`` uses a
+    symmetric per-row scale ``amax / 127`` with round-to-nearest. Both
+    record the exact per-row L1 reconstruction error in ``meta[:, 1]``.
+
+    >>> import jax.numpy as jnp
+    >>> p = make_payload(jnp.ones((4, 8)), "i8")
+    >>> p.qdata.dtype, p.meta.shape
+    (dtype('int8'), (4, 2))
+    """
+    data = data.astype(jnp.float32)
+    if fmt == "f16":
+        q = data.astype(jnp.float16)
+        scale = jnp.ones((data.shape[0],), jnp.float32)
+        deq = q.astype(jnp.float32)
+    elif fmt == "i8":
+        amax = jnp.max(jnp.abs(data), axis=1)
+        scale = jnp.maximum(amax, jnp.float32(1e-30)) / 127.0
+        q = jnp.clip(jnp.round(data / scale[:, None]), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale[:, None]
+    else:
+        raise ValueError(
+            f"unknown payload format {fmt!r}; expected one of"
+            f" {PAYLOAD_FORMATS[1:]} (f32 runs the uncompressed tail)"
+        )
+    qerr = jnp.sum(jnp.abs(data - deq), axis=1)
+    return Payload(q, jnp.stack([scale, qerr], axis=1))
+
+
+def payload_itemsize(fmt: str) -> int:
+    """Bytes per element of a payload format's quantized rows."""
+    return {"f32": 4, "f16": 2, "i8": 1}[fmt]
+
+
+def tail_gather_bytes(c_comp: int, c_rerank: int, d: int, fmt: str) -> int:
+    """Per-query candidate bytes the fused tail gathers from HBM.
+
+    The analytic model behind the bench artifacts' HBM-byte deltas
+    (``benchmarks/scale_bench.py``): the f32 tail streams ``c_comp`` full
+    rows; a payload tail streams ``c_comp`` quantized rows plus their meta
+    columns, then gathers only the ``c_rerank`` shortlist rows in f32 for
+    the exact rerank.
+
+    >>> tail_gather_bytes(1024, 128, 30, "f32")
+    122880
+    >>> tail_gather_bytes(1024, 128, 30, "f16") < 122880 / 1.3
+    True
+    """
+    if fmt == "f32":
+        return c_comp * d * 4
+    approx = c_comp * (d * payload_itemsize(fmt) + _META_COLS * 4)
+    return approx + min(c_rerank, c_comp) * d * 4

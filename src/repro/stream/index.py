@@ -31,7 +31,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import pipeline, tables
+from repro.core import merge, pipeline, tables
 from repro.stream import delta as delta_mod
 
 
@@ -211,21 +211,9 @@ def query_batch(
 # ------------------------------------------------------------- compaction
 
 
-def _merge_sorted_rows(
-    ak: jax.Array, ai: jax.Array, bk: jax.Array, bi: jax.Array
-) -> tuple[jax.Array, jax.Array]:
-    """Stable merge of two sorted (keys, idx) rows; base (``a``) wins ties.
-
-    Every base index precedes every delta index, so tie-breaking base-first
-    reproduces exactly what a stable full sort over the union would give.
-    O((n+m) log) via two vectorized binary searches — no re-sort of the base.
-    """
-    n, m = ak.shape[0], bk.shape[0]
-    pa = jnp.arange(n, dtype=jnp.int32) + jnp.searchsorted(bk, ak, side="left").astype(jnp.int32)
-    pb = jnp.arange(m, dtype=jnp.int32) + jnp.searchsorted(ak, bk, side="right").astype(jnp.int32)
-    keys = jnp.zeros((n + m,), ak.dtype).at[pa].set(ak).at[pb].set(bk)
-    idx = jnp.zeros((n + m,), ai.dtype).at[pa].set(ai).at[pb].set(bi)
-    return keys, idx
+# The run-merge discipline is shared with the chunked sorted-run builder
+# (core/merge.py): base rows are the older run, so base-wins-ties below.
+_merge_sorted_rows = merge.merge_sorted_rows
 
 
 def compact(sidx: StreamIndex, cfg: pipeline.SLSHConfig) -> StreamIndex:

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.data import abp, windows
 
@@ -95,3 +96,66 @@ def test_train_test_split_disjoint():
     train_set = {tuple(r) for r in train["points"]}
     test_set = {tuple(r) for r in qx}
     assert not (train_set & test_set)
+
+
+# ----------------------------------------------- chunked window synthesis
+
+
+def _spec(**kw):
+    base = dict(n=10_000, seed=7)
+    base.update(kw)
+    return windows.SyntheticWindowSpec(**base)
+
+
+def test_synth_window_chunk_size_invariance():
+    """The stream is a pure function of (spec, row): any chunking yields
+    the identical concatenated stream (block-seeded generation)."""
+    spec = _spec(n=9_001)
+    ref_p, ref_y = windows.synth_window_slice(spec, 0, spec.n)
+    for chunk in (1_000, 4_096, 7_777, spec.n):
+        ps, ys = zip(*windows.synth_window_chunks(spec, chunk))
+        np.testing.assert_array_equal(np.concatenate(ps, axis=0), ref_p)
+        np.testing.assert_array_equal(np.concatenate(ys, axis=0), ref_y)
+
+
+def test_synth_window_seed_determinism():
+    spec = _spec()
+    a = windows.synth_window_slice(spec, 100, 5_000)
+    b = windows.synth_window_slice(spec, 100, 5_000)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    other = windows.synth_window_slice(_spec(seed=8), 100, 5_000)
+    assert not np.array_equal(a[0], other[0])
+
+
+def test_synth_window_slice_matches_blocks():
+    """A slice crossing block boundaries equals the stitched full blocks."""
+    spec = _spec()
+    lo, hi = windows.GEN_BLOCK - 5, windows.GEN_BLOCK + 5
+    p, y = windows.synth_window_slice(spec, lo, hi)
+    p0, y0 = windows.synth_window_block(spec, 0)
+    p1, y1 = windows.synth_window_block(spec, 1)
+    np.testing.assert_array_equal(p, np.concatenate([p0[-5:], p1[:5]]))
+    np.testing.assert_array_equal(y, np.concatenate([y0[-5:], y1[:5]]))
+
+
+def test_synth_window_physical_labels_and_range():
+    spec = _spec(n=20_000)
+    p, y = windows.synth_window_slice(spec, 0, spec.n)
+    assert p.dtype == np.float32 and y.dtype == np.int8
+    assert (p >= 20.0).all() and (p <= 180.0).all()
+    # the label is the physical AHE condition, not stored metadata
+    np.testing.assert_array_equal(
+        y, (p[:, -1] < windows.AHE_THRESHOLD_MMHG).astype(np.int8)
+    )
+    # dips ramp toward the tail: positives decline, negatives stay healthy
+    frac_pos = float(y.mean())
+    assert 0.01 < frac_pos < 0.10  # Table 1's class-imbalance direction
+    assert p[y == 1, -1].mean() < 60.0 < p[y == 0, -1].mean()
+
+
+def test_synth_window_chunks_validation():
+    with pytest.raises(ValueError):
+        next(windows.synth_window_chunks(_spec(), 0))
+    with pytest.raises(ValueError):
+        windows.synth_window_slice(_spec(n=10), 5, 11)

@@ -352,6 +352,56 @@ def test_instrumented_query_yields_trace_and_metrics(tmp_path):
     assert "# TYPE dslsh_query_latency_seconds histogram" in ob.prometheus()
 
 
+def test_instrumented_chunked_build_spans_and_index_bytes():
+    """An instrumented out-of-core build records the §13 build-stage spans
+    (hash -> sort_runs -> merge -> heavy_inner) inside index.build, and
+    the memory accountant feeds dslsh_index_bytes{component,cell}."""
+    cfg = _cfg(build_chunk=64, build_mode="chunked")
+    data = jax.random.uniform(jax.random.PRNGKey(0), (300, 16))
+    ob = obs.Obs()
+    idx = dslsh.build(jax.random.PRNGKey(2), data, cfg, dslsh.single(), obs=ob)
+    names = {e["name"] for e in ob.tracer.events}
+    assert {"index.build", "build.hash", "build.sort_runs", "build.merge",
+            "build.heavy_inner"} <= names
+    top = next(e for e in ob.tracer.events if e["name"] == "index.build")
+    for e in ob.tracer.events:
+        if e["name"].startswith("build."):
+            assert e["ts"] >= top["ts"]
+            assert e["ts"] + e["dur"] <= top["ts"] + top["dur"] + 1.0
+    snap = ob.snapshot()
+    gauges = snap["dslsh_index_bytes"]["values"]
+    want = idx.memory_report().per_cell
+    for name, b in want.items():
+        assert gauges[f'cell="0/0",component="{name}"'] == float(b)
+    assert gauges['cell="0/0",component="data"'] == 300 * 16 * 4.0
+    # the instrumented chunked build answers queries identically to an
+    # uninstrumented monolithic build (spans never change results)
+    bare = dslsh.build(
+        jax.random.PRNGKey(2), data, cfg.replace(build_mode="monolithic"),
+        dslsh.single(),
+    )
+    q = jax.random.uniform(jax.random.PRNGKey(1), (8, 16))
+    np.testing.assert_array_equal(
+        np.asarray(idx.with_obs(None).query(q).knn_idx),
+        np.asarray(bare.query(q).knn_idx),
+    )
+
+
+def test_instrumented_payload_query_counts_misses():
+    """A compressed-payload query under obs feeds the rerank-miss counter
+    (zero at default budgets — the §13 exactness certificate)."""
+    cfg = _cfg(payload="f16", c_comp=64, c_rerank=64)
+    data = jax.random.uniform(jax.random.PRNGKey(0), (256, 16))
+    q = jax.random.uniform(jax.random.PRNGKey(1), (16, 16))
+    ob = obs.Obs(trace=False)
+    idx = dslsh.build(jax.random.PRNGKey(2), data, cfg, dslsh.single(), obs=ob)
+    res = idx.query(q)
+    snap = ob.snapshot()
+    assert snap["dslsh_rerank_misses_total"]["values"][""] == float(
+        res.rerank_miss_total
+    )
+
+
 def test_routed_grid_populates_routing_metrics():
     cfg = _cfg()
     data = jax.random.uniform(jax.random.PRNGKey(3), (256, 16))

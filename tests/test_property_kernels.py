@@ -104,6 +104,58 @@ def test_query_tail_fused_property(q_n, d, n, run_exp, windows, cc, k, fill, see
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
 
 
+@given(
+    q_n=st.integers(1, 4),
+    d=st.integers(1, 40),
+    n=st.integers(4, 160),
+    run_exp=st.integers(2, 4),
+    windows=st.integers(1, 5),
+    cc=st.integers(1, 40),
+    cr=st.integers(1, 40),  # independent of cc: starved and saturated
+    k=st.integers(1, 10),
+    fmt=st.sampled_from(["f16", "i8"]),
+    fill=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=20, deadline=None)
+def test_query_tail_payload_property(
+    q_n, d, n, run_exp, windows, cc, cr, k, fmt, fill, seed
+):
+    """The compressed-payload tail is bit-exact against its staged oracle
+    on every output, and certified-exact (misses == 0) results match the
+    f32 tail bit-for-bit (DESIGN.md §13)."""
+    from repro.runtime import payload as payload_mod
+
+    run = 1 << run_exp
+    key = jax.random.PRNGKey(seed)
+    kd_, kq_, kc_ = jax.random.split(key, 3)
+    data = jnp.round(jax.random.uniform(kd_, (n, d)) * 4.0) / 4.0
+    qs = jnp.round(jax.random.uniform(kq_, (q_n, d)) * 4.0) / 4.0
+    cand = _gather_shaped_candidates(kc_, q_n, windows, run, n, fill)
+    p = payload_mod.make_payload(data, fmt)
+    want = qf_ref.query_tail_payload_ref(
+        data, p.qdata, p.meta, qs, cand, c_comp=cc, c_rerank=cr, k=k
+    )
+    got = qf_ops.query_tail_payload(
+        data, p.qdata, p.meta, qs, cand, run=run, c_comp=cc, c_rerank=cr, k=k
+    )
+    names = ("kd", "ki", "comparisons", "overflow", "rerank_misses")
+    for g, w, name in zip(got, want, names):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+    f32 = qf_ref.query_tail_ref(data, qs, cand, c_comp=cc, k=k)
+    misses = np.asarray(got[4])
+    for row in range(q_n):
+        if misses[row] == 0:
+            np.testing.assert_array_equal(
+                np.asarray(got[0][row]), np.asarray(f32[0][row]),
+                err_msg="certified kd row",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got[1][row]), np.asarray(f32[1][row]),
+                err_msg="certified ki row",
+            )
+
+
 @pytest.mark.parametrize("backend", ["reference", "pallas"])
 def test_query_tail_all_overflow(backend):
     """cc=1 with saturated candidate rows: every query overflows, and the
