@@ -1,0 +1,204 @@
+"""Elastic-operations benchmark (DESIGN.md §14): availability under chaos.
+
+A scripted kill + repair scenario over a routed grid deployment:
+
+* step a simulated clock; each step answers one query batch through an
+  :class:`repro.runtime.elastic.ElasticIndex` and ticks the controller;
+* at ``kill_step`` every replica of one (deliberately unreplicated) cell
+  dies — queries routed there are degraded-but-flagged until the
+  controller's hysteresis confirms the failure and repairs it;
+* **availability** is counted per query row: a row is available when its
+  answer's routed coverage equals the healthy index's coverage for that
+  row (a degraded row is exactly one whose lost-cell rows were flagged
+  off). The CI gate holds availability ≥ 0.99 over the whole scenario.
+* per-step latency lands in an obs histogram; p50/p99 come from the new
+  ``Histogram.quantile`` read;
+* **rebalance cost vs rebuild**: the save→load migration (plus replan +
+  epoch swap) is timed against a from-scratch ``api.build`` of the same
+  deployment — the CI gate holds rebalance < rebuild, which is the whole
+  point of reusing built cells.
+
+Emitted to BENCH_elastic.json (override: REPRO_BENCH_ELASTIC_JSON); CSV
+rows go through benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+
+ELASTIC_JSON = os.environ.get(
+    "REPRO_BENCH_ELASTIC_JSON",
+    os.path.join(os.path.dirname(__file__), "artifacts", "BENCH_elastic.json"),
+)
+
+
+def _clustered(key, n, d, spread=0.01):
+    kc, kp = jax.random.split(key)
+    n_centers = max(n // 32, 1)
+    centers = jax.random.uniform(kc, (n_centers, d))
+    pts = centers[:, None, :] + spread * jax.random.normal(
+        kp, (n_centers, 32, d)
+    )
+    return pts.reshape(-1, d)[:n]
+
+
+def run():
+    from repro import api, obs as obs_mod
+    from repro.obs import log_buckets
+    from repro.runtime import elastic as elastic_mod
+
+    if common.FULL:
+        n, d, nq, nu, p, steps = 16384, 32, 256, 4, 2, 400
+    else:
+        n, d, nq, nu, p, steps = 2560, 16, 64, 2, 2, 300
+    kill_step = 10
+    data = _clustered(jax.random.PRNGKey(0), n, d)
+    queries = jnp.asarray(
+        np.asarray(data)[:: max(1, n // nq)][:nq]
+        + 0.002 * np.asarray(
+            jax.random.normal(jax.random.PRNGKey(1), (nq, d))
+        )
+    )
+    cfg = common.slsh_cfg(
+        m_out=24, L_out=8, m_in=8, L_in=4, alpha=0.01, val_lo=0.0,
+        val_hi=1.0, c_max=64, c_in=16, h_max=8, p_max=128,
+        build_chunk=512, query_chunk=32,
+    )
+    deploy = api.grid(nu=nu, p=p, replication=2, routed=True)
+    ob = obs_mod.Obs(trace=False)
+    index = api.build(jax.random.PRNGKey(2), jnp.asarray(data), cfg, deploy,
+                      obs=ob)
+    healthy = index.query(queries)
+    healthy_cov = np.asarray(healthy.routed).sum(axis=(0, 1))  # (Q,) rows
+
+    el = elastic_mod.ElasticIndex(index, deadline_s=1.0, now=0.0)
+    with tempfile.TemporaryDirectory() as workdir:
+        ctl = elastic_mod.ElasticController(
+            el,
+            elastic_mod.ElasticConfig(
+                deadline_s=1.0, repair_ticks=2, scale_ticks=10**9,
+                workdir=workdir,
+            ),
+        )
+        # victim: a cell the heat plan left at r=1 (worst case: its only
+        # replica dies and the cell is lost outright until repair)
+        plan = index.plan
+        r1 = [
+            (j, c) for j in range(nu) for c in range(p)
+            if int(plan.replicas[j, c]) == 1
+        ]
+        victim_cell = r1[0] if r1 else (0, 0)
+        victim_devs = [
+            int(x) for x in plan.cell_device[victim_cell] if x >= 0
+        ]
+
+        lat = ob.metrics.histogram(
+            "bench_elastic_step_latency_seconds",
+            "per-step elastic query wall time under the chaos scenario",
+            buckets=log_buckets(1e-4, 10.0, per_decade=8),
+        ).labels()
+        dead: set[int] = set()
+        avail_rows = total_rows = 0
+        degraded_steps = repair_step = None
+        degraded_count = 0
+        t = 0.0
+        for step in range(steps):
+            t += 1.0
+            if step == kill_step:
+                dead |= set(victim_devs)
+            for dev in range(el.n_devices):
+                if dev not in dead:
+                    el.beat(dev, t=t)
+            t0 = time.perf_counter()
+            r = el.query(queries, now=t)
+            jax.block_until_ready(r.result.knn_dist)
+            lat.observe(time.perf_counter() - t0)
+            rep = ctl.tick(now=t)
+            if rep.rebalanced:
+                dead.clear()  # migration landed on fresh hosts
+                if repair_step is None:
+                    repair_step = step
+            cov = np.asarray(r.result.routed).sum(axis=(0, 1))
+            avail_rows += int((cov >= healthy_cov).sum())
+            total_rows += nq
+            if r.degraded:
+                degraded_count += 1
+
+        availability = avail_rows / total_rows
+
+        # rebalance cost vs from-scratch rebuild (same deployment)
+        t0 = time.perf_counter()
+        ctl.rebalance(el.index.plan.replicas.copy(), now=t + 1.0)
+        rebalance_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rebuilt = api.build(
+            jax.random.PRNGKey(2), jnp.asarray(data), cfg, deploy
+        )
+        jax.block_until_ready(rebuilt.pipeline_index)
+        rebuild_s = time.perf_counter() - t0
+
+    # post-repair sanity: serving is healthy and bit-exact again
+    final = el.query(queries, now=t + 2.0)
+    assert not final.degraded and final.failover_cells == ()
+    np.testing.assert_array_equal(
+        np.asarray(final.result.knn_idx), np.asarray(healthy.knn_idx)
+    )
+
+    snap = ob.snapshot()
+    failovers = sum(
+        snap.get("dslsh_failovers_total", {}).get("values", {}).values()
+    )
+    migrated = (
+        snap.get("dslsh_cells_migrated_total", {})
+        .get("values", {})
+        .get("", 0.0)
+    )
+    report = {
+        "n": n, "d": d, "nq": nq, "nu": nu, "p": p, "steps": steps,
+        "kill_step": kill_step, "repair_step": repair_step,
+        "victim_cell": list(victim_cell),
+        "availability": availability,
+        "degraded_steps": degraded_count,
+        "p50_latency_s": lat.quantile(0.5),
+        "p99_latency_s": lat.quantile(0.99),
+        "rebalance_s": rebalance_s,
+        "rebuild_s": rebuild_s,
+        "failovers_total": failovers,
+        "cells_migrated_total": migrated,
+    }
+    os.makedirs(os.path.dirname(ELASTIC_JSON), exist_ok=True)
+    with open(ELASTIC_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        (
+            "elastic_availability",
+            lat.quantile(0.5) * 1e6,
+            f"avail={availability:.4f}_deg={degraded_count}steps",
+        ),
+        (
+            "elastic_latency",
+            lat.quantile(0.99) * 1e6,
+            f"p50={report['p50_latency_s'] * 1e3:.1f}ms"
+            f"_p99={report['p99_latency_s'] * 1e3:.1f}ms",
+        ),
+        (
+            "elastic_rebalance_vs_rebuild",
+            rebalance_s * 1e6,
+            f"rebuild={rebuild_s:.2f}s"
+            f"_ratio={rebalance_s / max(rebuild_s, 1e-9):.2f}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -12,6 +12,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        elastic_bench,
         fig3_tradeoff,
         fig4_slsh,
         kernels_bench,
@@ -35,6 +36,7 @@ def main() -> None:
         "stream": stream_bench,
         "routing": routing_bench,
         "scale": scale_bench,
+        "elastic": elastic_bench,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

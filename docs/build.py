@@ -40,6 +40,7 @@ MODULES: tuple[str, ...] = (
     "repro.core.merge",
     "repro.runtime.memory",
     "repro.runtime.payload",
+    "repro.runtime.elastic",
     "repro.data.windows",
     "repro.obs",
     "repro.obs.trace",

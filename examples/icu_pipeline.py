@@ -2,9 +2,10 @@
 
 Simulates the paper's deployment: a DSLSH cluster answers latency-critical
 AHE queries; one node goes down mid-stream (heartbeat missed); the Reducer
-first proceeds without it (straggler deadline), then the cluster elastically
-re-shards onto the survivors and keeps serving. Every phase answers through
-the same typed ``repro.dslsh`` handle.
+first proceeds without it (straggler deadline), then the cluster restores
+the lost node's cells in place — surviving cells reused untouched — and
+keeps serving. Every phase answers through the same typed ``repro.dslsh``
+handle.
 
 Run:  PYTHONPATH=src python examples/icu_pipeline.py
 """
@@ -58,13 +59,15 @@ res = index.query(jnp.asarray(qx[100:200]), drop_mask=drop)
 print(f"phase 2 (node 2 down, deadline reducer): MCC={mcc_of(res, labs, qy[100:200]):.3f}"
       f"  (answers stay available, recall degrades gracefully)")
 
-# phase 3: permanent failure -> elastic re-shard onto 3 nodes, rebuild
+# phase 3: permanent failure -> restore node 2's cells in place on the
+# same grid (pass the live handle: surviving cells' tables are reused
+# untouched, and answers come back bit-identical to the healthy index)
 index2, labs2, _ = ft.elastic_reshard_index(
-    jax.random.PRNGKey(1), train["points"], train["labels"], cfg, deploy, [2]
+    jax.random.PRNGKey(1), train["points"], train["labels"], cfg, index, [2]
 )
 res = index2.query(jnp.asarray(qx[200:]))
 comps = np.asarray(res.max_comparisons_per_cell)
-print(f"phase 3 (re-sharded to nu={index2.deploy.nu}): MCC="
+print(f"phase 3 (node 2 restored on nu={index2.deploy.nu}): MCC="
       f"{mcc_of(res, labs2, qy[200:]):.3f}  "
       f"median comps/proc={float(np.median(comps)):.0f}")
 print("pipeline complete: detection -> degraded service -> elastic recovery")

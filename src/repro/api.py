@@ -391,6 +391,7 @@ class Index:
         budget: float | None = None,
         max_cells: int | None = None,
         drop_mask=None,
+        drop_cells=None,
     ) -> DistributedQueryResult:
         """Resolve a query batch -> one typed :class:`DistributedQueryResult`.
 
@@ -399,7 +400,10 @@ class Index:
         caps it directly (both require a routed deployment and are
         approximate by design — the paper's latency-first mode).
         ``drop_mask`` (nu,) excludes straggler nodes from the Reducer
-        (grid/mesh deployments).
+        (grid/mesh deployments). ``drop_cells`` (nu, p) excludes individual
+        lost cells (grid deployments — the elastic failover channel,
+        DESIGN.md §14): dropped cells flip off in ``res.routed`` so the
+        degradation is flagged, never silent.
 
         With an obs bundle bound (``build(..., obs=...)``) or ambiently
         activated, the call records an ``index.query`` span, syncs the
@@ -424,22 +428,29 @@ class Index:
                 " routed=True) or dslsh.mesh(..., routed=True)) — the cap"
                 " rides the §10 routing plan",
             )
+        if drop_cells is not None:
+            pipeline._require(
+                self.deploy.kind == "grid",
+                "drop_cells (per-cell failover drops) applies to grid"
+                " deployments — nodes on other deployments drop whole via"
+                " drop_mask",
+            )
         ob = self._obs if self._obs is not None else obs_mod.get_active()
         if ob is None or not ob.enabled:
-            return self._query_impl(queries, max_cells, drop_mask)
+            return self._query_impl(queries, max_cells, drop_mask, drop_cells)
         with ob.activate():
             with ob.span(
                 "index.query", deployment=self.deploy.kind,
                 queries=int(queries.shape[0]),
             ) as sp:
-                res = self._query_impl(queries, max_cells, drop_mask)
+                res = self._query_impl(queries, max_cells, drop_mask, drop_cells)
                 jax.block_until_ready(res)
         if ob.metrics is not None:
             self._record_query_metrics(ob, res, sp.dur_s)
         return res
 
     def _query_impl(
-        self, queries, max_cells: int | None, drop_mask
+        self, queries, max_cells: int | None, drop_mask, drop_cells=None
     ) -> DistributedQueryResult:
         """Deployment dispatch behind :meth:`query` (validation done)."""
         kind = self.deploy.kind
@@ -474,7 +485,16 @@ class Index:
                 if drop_mask is None
                 else jnp.asarray(drop_mask)
             )
-            return self._grid_fn(max_cells)(queries, dm)
+            # drop_cells is always passed as an array so the jitted program
+            # is knob-independent: the no-drop query shares the compiled
+            # executable (and stays bit-identical — the masks are no-ops
+            # when all-False; tests/test_compile_cache.py)
+            dc = (
+                jnp.zeros((self.deploy.nu, self.deploy.p), bool)
+                if drop_cells is None
+                else jnp.asarray(drop_cells)
+            )
+            return self._grid_fn(max_cells)(queries, dm, dc)
         if kind == "mesh":
             dm = None if drop_mask is None else jnp.asarray(drop_mask)
             return D.mesh_query(
@@ -645,9 +665,9 @@ class Index:
             index, data = self._state["index"], self._state["data"]
             cfg, g, plan = self.cfg, self.grid, self.plan
             self._compiled[key] = jax.jit(
-                lambda q, dm: D.grid_query(
+                lambda q, dm, dc: D.grid_query(
                     index, data, q, cfg, g, plan=plan, max_cells=max_cells,
-                    drop_mask=dm,
+                    drop_mask=dm, drop_cells=dc,
                 )
             )
         return self._compiled[key]

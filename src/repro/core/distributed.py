@@ -459,6 +459,7 @@ def grid_query(
     *,
     plan: routing.RoutingPlan | None = None,
     drop_mask: jax.Array | None = None,
+    drop_cells: jax.Array | None = None,
     max_cells: int | None = None,
     return_stats: bool = False,
 ):
@@ -478,9 +479,13 @@ def grid_query(
     ``max_cells`` enables deadline degradation: only the ``max_cells``
     best-landing cells are probed per query (approximate by design —
     requires a ``plan``). ``drop_mask`` (nu,) excludes straggler nodes from
-    the Reducer. ``return_stats`` appends a ``routing.RoutingStats`` with
-    the route mask, per-device load, and Reducer payload accounting
-    (``plan`` required).
+    the Reducer. ``drop_cells`` (nu, p) excludes individual *lost* cells
+    (elastic failover, DESIGN.md §14): a dropped cell contributes no
+    partial, its counters zero, and its rows flip off in ``routed`` — so
+    degradation is flagged through ``routed_frac``, never silent.
+    ``return_stats`` appends a ``routing.RoutingStats`` with the route
+    mask, per-device load, and Reducer payload accounting (``plan``
+    required).
     """
     if drop_mask is None:
         drop_mask = jnp.zeros((grid.nu,), bool)
@@ -496,20 +501,28 @@ def grid_query(
     if plan is None:
         kd = jnp.where(drop_mask[:, None, None, None], jnp.inf, res.knn_dist)
         ki = jnp.where(drop_mask[:, None, None, None], -1, res.knn_idx)
+        comps, overflow = res.comparisons, res.compaction_overflow
+        visited = jnp.ones((grid.nu, grid.p, q), bool)
+        if drop_cells is not None:
+            dc = jnp.asarray(drop_cells)[:, :, None]  # (nu, p, 1) over Q
+            kd = jnp.where(dc[..., None], jnp.inf, kd)
+            ki = jnp.where(dc[..., None], -1, ki)
+            comps = jnp.where(dc, 0, comps)
+            overflow = jnp.where(dc, 0, overflow)
+            visited = visited & ~dc
         kd = jnp.moveaxis(kd, 2, 0).reshape(q, -1)
         ki = jnp.moveaxis(ki, 2, 0).reshape(q, -1)
         fd, fi = jax.vmap(
             lambda a, b: topk.masked_topk_smallest(a, b, cfg.k)
         )(kd, ki)
-        visited = jnp.ones((grid.nu, grid.p, q), bool)
-        return DistributedQueryResult(
-            fd, fi, res.comparisons, res.compaction_overflow, visited
-        )
+        return DistributedQueryResult(fd, fi, comps, overflow, visited)
 
     pk = routing.probe_keys(routing.family_from_index(index), queries, cfg)
     routed, scores = routing.route_mask(plan.occupancy, pk, grid)
     if max_cells is not None:
         routed = routing.apply_cell_budget(routed, scores, max_cells)
+    if drop_cells is not None:
+        routed = routed & ~jnp.asarray(drop_cells)[None, :, :]
     mask = jnp.transpose(routed, (1, 2, 0))  # (nu, p, Q)
     kd = jnp.where(mask[..., None], res.knn_dist, jnp.inf)
     ki = jnp.where(mask[..., None], res.knn_idx, -1)

@@ -195,6 +195,31 @@ class RoutingPlan(NamedTuple):
         return int(self.cell_device.max()) + 1
 
 
+def deal_devices(replicas: np.ndarray) -> np.ndarray:
+    """Assign sequential logical-device ids to every cell replica.
+
+    ``replicas`` is the ``(nu, p)`` per-cell replica count; returns the
+    ``(nu, p, r_max)`` device-id tensor (-1 pads replica slots a cell does
+    not use). Ids are dealt in ascending cell order, so the pool size is
+    ``sum(replicas)`` — the shared placement rule of :func:`make_plan` and
+    :func:`replan`.
+
+    >>> deal_devices(np.asarray([[2, 1]])).tolist()
+    [[[0, 1], [2, -1]]]
+    """
+    replicas = np.asarray(replicas, np.int32)
+    nu, p = replicas.shape
+    r_max = int(replicas.max())
+    cell_device = np.full((nu, p, r_max), -1, np.int32)
+    dev = 0
+    for j in range(nu):
+        for c in range(p):
+            for r in range(int(replicas[j, c])):
+                cell_device[j, c, r] = dev
+                dev += 1
+    return cell_device
+
+
 def make_plan(index, cfg, grid, *, replication: int = 1, bits: int = DEFAULT_BITS) -> RoutingPlan:
     """Routing plan for a cell-stacked index (``simulate_build``/``dslsh_build``).
 
@@ -211,15 +236,46 @@ def make_plan(index, cfg, grid, *, replication: int = 1, bits: int = DEFAULT_BIT
     replicas = np.ones((grid.nu, grid.p), np.int32)
     if replication > 1:
         replicas[heat >= heat.mean()] = replication
-    r_max = int(replicas.max())
-    cell_device = np.full((grid.nu, grid.p, r_max), -1, np.int32)
-    dev = 0
-    for j in range(grid.nu):
-        for c in range(grid.p):
-            for r in range(int(replicas[j, c])):
-                cell_device[j, c, r] = dev
-                dev += 1
-    return RoutingPlan(occupancy, replicas, heat, cell_device)
+    return RoutingPlan(occupancy, replicas, heat, deal_devices(replicas))
+
+
+def replan(plan: RoutingPlan, replicas: np.ndarray) -> RoutingPlan:
+    """A new plan with explicit per-cell replica counts (elastic rebalance).
+
+    Reuses the build-time key→cell ``occupancy`` map and ``heat`` (neither
+    depends on placement — the cells' CSR tables are unchanged) and re-deals
+    the logical device pool for the new counts. Queries under the new plan
+    are bit-identical to the old one: replication changes *where* a cell's
+    routed rows are answered, never *what* any cell answers
+    (tests/test_property_elastic.py).
+    """
+    replicas = np.asarray(replicas, np.int32)
+    if replicas.shape != plan.replicas.shape:
+        raise ValueError(
+            f"replicas shape {replicas.shape} != plan grid"
+            f" {plan.replicas.shape}"
+        )
+    if (replicas < 1).any():
+        raise ValueError("every cell needs at least one replica")
+    return RoutingPlan(
+        plan.occupancy, replicas.copy(), plan.heat, deal_devices(replicas)
+    )
+
+
+def live_replicas(plan: RoutingPlan, device_down: np.ndarray) -> np.ndarray:
+    """Live replica count per cell given a device drop mask.
+
+    ``device_down`` is a ``(plan.n_devices,)`` bool heartbeat mask (True =
+    missed deadline). Returns ``(nu, p)`` int32 — the replica-failover
+    signal: a cell with ``live >= 1`` still answers bit-exactly through a
+    surviving replica; ``live == 0`` means the cell is lost and must be
+    dropped *flagged*, never silently (DESIGN.md §14).
+    """
+    down = np.asarray(device_down, bool)
+    dev = plan.cell_device  # (nu, p, r_max), -1 pad
+    placed = dev >= 0
+    alive = placed & ~down[np.clip(dev, 0, None)]
+    return alive.sum(axis=-1).astype(np.int32)
 
 
 def route_mask(

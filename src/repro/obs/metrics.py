@@ -127,6 +127,22 @@ class Histogram:
             out.append(acc)
         return out
 
+    def quantile(self, q: float) -> float:
+        """Upper-bound estimate of the ``q``-quantile from bucket counts
+        — the ``histogram_quantile`` read (benchmarks report p50/p99
+        latency through it). Returns the smallest boundary whose
+        cumulative count covers ``q * count``; observations in the +Inf
+        bucket clamp to the largest finite boundary; NaN when empty."""
+        if self.count == 0 or not self.boundaries:
+            return float("nan")
+        target = q * self.count
+        acc = 0
+        for b, c in zip(self.boundaries, self.counts):
+            acc += c
+            if acc >= target:
+                return b
+        return self.boundaries[-1]
+
 
 class Family:
     """One named metric family: kind + help text + labeled children."""

@@ -21,7 +21,9 @@ hold disjoint slices), so the recovery story is:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
+import warnings
 from typing import Callable
 
 import jax
@@ -32,9 +34,25 @@ from repro.obs import clock
 
 @dataclasses.dataclass
 class HeartbeatMonitor:
+    """Per-node liveness from heartbeats against a deadline.
+
+    A node that has never beaten is measured from ``start`` (monitor
+    creation), not from the beginning of time: a fresh monitor grants
+    every node one full ``deadline_s`` of grace before declaring it
+    down. Without that grace the first ``drop_mask()`` after a monitor
+    swap marks the whole fleet down and the controller responds to a
+    phantom total outage (tests/test_chaos.py pins this). Pass ``start``
+    explicitly when driving the monitor on a simulated clock.
+    """
+
     n_nodes: int
     deadline_s: float = 1.0
     last_beat: dict = dataclasses.field(default_factory=dict)
+    start: float | None = None
+
+    def __post_init__(self):
+        if self.start is None:
+            self.start = clock.monotonic()
 
     def beat(self, node: int, t: float | None = None):
         """Record liveness for ``node`` — on the monotonic clock (a
@@ -47,7 +65,7 @@ class HeartbeatMonitor:
         return [
             n
             for n in range(self.n_nodes)
-            if now - self.last_beat.get(n, -1e18) > self.deadline_s
+            if now - self.last_beat.get(n, self.start) > self.deadline_s
         ]
 
     def drop_mask(self, now: float | None = None) -> np.ndarray:
@@ -95,18 +113,117 @@ def elastic_reshard_dslsh(key, points, labels, cfg, old_grid, failed_nodes: list
     return grid, index, pts_j, jnp.asarray(labs), n_real
 
 
-def elastic_reshard_index(key, points, labels, cfg, deploy, failed_nodes: list[int]):
-    """Deployment-API form of :func:`elastic_reshard_dslsh`.
+@functools.lru_cache(maxsize=None)
+def _node_restore_fn(cfg):
+    """Jitted per-node cell restore, cached on the (hashable) config.
 
-    Rebuilds on the surviving nodes and returns ``(index, labels, n_real)``
-    where ``index`` is a fresh ``repro.dslsh`` grid handle (same hash-family
-    key — queries remain exactly comparable) and ``labels`` is padded to the
-    new grid.
+    One compiled executable restores any node of any index built with
+    ``cfg`` and matching shapes: restoring a second failed node — or the
+    same node again after a later failure — must not retrace
+    (``obs.metrics.retrace_count("cell_restore")`` pins this in
+    tests/test_chaos.py).
+    """
+    from repro.core import pipeline
+    from repro.obs import metrics as obs_metrics
+
+    @jax.jit
+    def restore(data_local, outer_params, inner_params):
+        obs_metrics.count_retrace("cell_restore")
+        return jax.vmap(
+            lambda op, ip: pipeline.build_from_params(data_local, op, ip, cfg)
+        )(outer_params, inner_params)
+
+    return restore
+
+
+def elastic_restore_cells(index, failed_nodes: list[int]):
+    """Rebuild only the failed nodes' cells of a grid ``repro.dslsh`` handle.
+
+    The replacement hosts re-read the lost slice from the durable store
+    (here: the handle's own resident data array) and rebuild their L_out/p
+    tables **from the hash-family params already stacked in the index** —
+    no root key is needed, and the surviving cells' CSR tables, heavy
+    buckets, and inner tables are reused untouched. The restored handle
+    answers queries bit-identically to the original (same family, same
+    data, same construction path), which is exactly the repair primitive
+    the elastic controller needs (DESIGN.md §14).
+
+    Returns a new :class:`repro.api.Index`; the input handle is unchanged.
+    """
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.core import pipeline
+
+    pipeline._require(
+        index.deploy.kind == "grid",
+        "elastic_restore_cells repairs grid deployments — streaming"
+        " state lives in per-node delta segments (DESIGN.md §9)",
+    )
+
+    failed = sorted(set(int(j) for j in failed_nodes))
+    nu = index.deploy.nu
+    assert all(0 <= j < nu for j in failed), "failed node out of range"
+    if not failed:
+        return index
+
+    stacked = index._state["index"]  # SLSHIndex, leading dims (nu, p)
+    data = index._state["data"]
+    n = data.shape[0]
+    data_n = data.reshape(nu, n // nu, -1)
+    restore = _node_restore_fn(index.cfg)
+
+    parts = [
+        restore(
+            data_n[j],
+            jax.tree.map(lambda leaf, j=j: leaf[j], stacked.outer_params),
+            jax.tree.map(lambda leaf, j=j: leaf[j], stacked.inner_params),
+        )
+        for j in failed
+    ]
+    rows = jnp.asarray(failed)
+    part_stack = jax.tree.map(lambda *ls: jnp.stack(ls), *parts)
+    new_stacked = jax.tree.map(
+        lambda full, part: full.at[rows].set(part), stacked, part_stack
+    )
+    state = dict(index._state)
+    state["index"] = new_stacked
+    return api.Index(index.deploy, index.cfg, state, obs=index._obs)
+
+
+def elastic_reshard_index(key, points, labels, cfg, deploy, failed_nodes: list[int]):
+    """Deployment-API reshard after permanent node failures.
+
+    Pass the live ``repro.dslsh`` grid handle as ``deploy`` and the failed
+    nodes' cells are rebuilt **in place on the same grid** via
+    :func:`elastic_restore_cells` — surviving cells' CSR tables are reused
+    untouched and the result answers queries bit-identically to the
+    pre-failure index. Returns ``(index, labels, n_real)`` with ``labels``
+    padded to the handle's grid.
+
+    Passing a :class:`repro.api.Deployment` descriptor instead keeps the
+    legacy behavior — shrink the grid by ``len(failed_nodes)`` and rebuild
+    everything from scratch with the same hash-family key — and warns:
+    the full rebuild pays the entire construction cost to recover a
+    sliver of it (the bug the elastic PR fixed).
     """
     import jax.numpy as jnp
 
     from repro import api
 
+    if isinstance(deploy, api.Index):
+        index = elastic_restore_cells(deploy, failed_nodes)
+        _, labs, n_real = api.pad_to_multiple(
+            np.asarray(points), np.asarray(labels), index.deploy.cells
+        )
+        return index, jnp.asarray(labs), n_real
+
+    warnings.warn(
+        "elastic_reshard_index(deploy=Deployment) rebuilds every cell from"
+        " scratch; pass the live Index handle to reuse surviving cells",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     nu_new = deploy.nu - len(failed_nodes)
     assert nu_new >= 1, "no surviving nodes"
     new_deploy = api.grid(

@@ -1,0 +1,304 @@
+"""Fault-injection harness for the elastic tests (DESIGN.md §14).
+
+Everything here is **seeded and deterministic**: time is simulated (every
+``beat`` / ``tick`` / ``query`` takes an explicit ``now``), schedules are
+plain sorted event lists, and any jitter comes from
+``np.random.default_rng(seed)``. The same seed replays the same outage
+bit-for-bit, which is what lets tests/test_chaos.py assert exact counter
+values and bit-identical query results through a kill.
+
+Building blocks:
+
+* :func:`make_cluster` — a small routed grid deployment + its healthy
+  reference answer, wrapped in an :class:`repro.runtime.elastic.ElasticIndex`.
+* :class:`ChaosSchedule` — sorted ``(t, kind, device)`` events with named
+  constructors for the scenarios the controller is defined by:
+  ``kill_device``, ``kill_cell`` (every replica), ``flapping_node``
+  (periodic kill/revive), ``delayed_heartbeat`` (beats arrive with a
+  stale timestamp — the transient-failover case).
+* :class:`ChaosRunner` — steps simulated time: applies due events, beats
+  every live device, runs the query batch, ticks the controller, and
+  records everything. A device killed by the schedule stays dead until a
+  ``revive`` event or an epoch swap (migration lands the cells on fresh
+  hosts — the runner re-registers against the new epoch's devices).
+
+``mid_migration_kill`` is the one scenario that can't ride a time
+schedule: it installs itself as the controller's ``on_phase`` hook and
+kills a device at a chosen rebalance phase, so tests can prove the old
+epoch serves until the swap.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import api as dslsh
+from repro.core import slsh
+from repro.runtime import elastic as elastic_mod
+
+
+def chaos_cfg(backend: str = "reference", **kw) -> slsh.SLSHConfig:
+    """The small-but-real config every chaos scenario runs on."""
+    base = dict(
+        m_out=12, L_out=8, m_in=6, L_in=4, alpha=0.02, k=5,
+        val_lo=0.0, val_hi=1.0, c_max=32, c_in=8, h_max=4, p_max=64,
+        build_chunk=128, query_chunk=8, backend=backend,
+    )
+    base.update(kw)
+    return slsh.SLSHConfig.compose(**base)
+
+
+def clustered(n=256, d=12, seed=1):
+    """Clustered points (16-point clumps) — gives the router real skew."""
+    kc, kp = jax.random.split(jax.random.PRNGKey(seed))
+    centers = jax.random.uniform(kc, (n // 16, d))
+    pts = centers[:, None, :] + 0.01 * jax.random.normal(kp, (n // 16, 16, d))
+    return pts.reshape(-1, d)
+
+
+@dataclasses.dataclass
+class Cluster:
+    """One deployed grid under chaos: the handle, its healthy answer, and
+    the elastic wrapper every scenario drives."""
+
+    cfg: slsh.SLSHConfig
+    data: jax.Array
+    queries: jax.Array
+    index: object  # routed grid repro.dslsh handle
+    healthy: object  # DistributedQueryResult on the intact cluster
+    elastic: elastic_mod.ElasticIndex
+
+    @property
+    def plan(self):
+        """The §10 routing plan of the build-time epoch."""
+        return self.index.plan
+
+    def cell_devices(self, j: int, c: int) -> list[int]:
+        """Logical devices hosting cell (j, c) in the build-time epoch."""
+        return [int(d) for d in self.plan.cell_device[j, c] if d >= 0]
+
+    def replicated_cell(self) -> tuple:
+        """The first cell the heat plan gave ≥ 2 replicas (killing one of
+        its devices is the bit-exact failover scenario)."""
+        cells = [
+            (j, c)
+            for j in range(self.plan.replicas.shape[0])
+            for c in range(self.plan.replicas.shape[1])
+            if int(self.plan.replicas[j, c]) >= 2
+        ]
+        assert cells, "plan placed no replicas — build with replication>=2"
+        return cells[0]
+
+
+def make_cluster(
+    seed: int = 0,
+    *,
+    nu: int = 2,
+    p: int = 2,
+    replication: int = 2,
+    n: int = 256,
+    n_queries: int = 16,
+    backend: str = "reference",
+    deadline_s: float = 1.0,
+    obs=None,
+    **cfg_overrides,
+) -> Cluster:
+    """Build a routed grid + elastic wrapper, fully deterministic in
+    ``seed``. The healthy reference answer is computed before any chaos."""
+    cfg = chaos_cfg(backend, **cfg_overrides)
+    data = clustered(n=n, seed=seed + 1)
+    kq = jax.random.PRNGKey(seed + 2)
+    # queries sampled across the whole dataset (every node's slice) so
+    # routed load reaches every cell — a failover scenario must actually
+    # route traffic through the failed-over cell
+    base = data[:: max(1, n // n_queries)][:n_queries]
+    queries = base + 0.001 * jax.random.normal(kq, base.shape)
+    index = dslsh.build(
+        jax.random.PRNGKey(seed), data, cfg,
+        dslsh.grid(nu=nu, p=p, replication=replication, routed=True),
+        obs=obs,
+    )
+    healthy = index.query(queries)
+    jax.block_until_ready(healthy)
+    el = elastic_mod.ElasticIndex(index, deadline_s=deadline_s, now=0.0)
+    return Cluster(cfg, data, queries, index, healthy, el)
+
+
+# ------------------------------------------------------------- schedules
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One scheduled fault: at ``t``, ``device`` is killed or revived."""
+
+    t: float
+    kind: str  # "kill" | "revive"
+    device: int
+
+
+class ChaosSchedule:
+    """A sorted, deterministic fault timeline (merge schedules with +)."""
+
+    def __init__(self, events=()):
+        self.events = sorted(events, key=lambda e: (e.t, e.device))
+
+    def __add__(self, other: "ChaosSchedule") -> "ChaosSchedule":
+        """Merged timeline of both schedules."""
+        return ChaosSchedule(self.events + other.events)
+
+    def due(self, t0: float, t1: float) -> list[ChaosEvent]:
+        """Events with ``t0 < t <= t1`` (what one runner step applies)."""
+        ts = [e.t for e in self.events]
+        return self.events[bisect.bisect_right(ts, t0): bisect.bisect_right(ts, t1)]
+
+    # ---- named scenarios -------------------------------------------------
+
+    @classmethod
+    def kill_device(cls, device: int, t: float) -> "ChaosSchedule":
+        """Permanently kill one replica placement at ``t``."""
+        return cls([ChaosEvent(t, "kill", device)])
+
+    @classmethod
+    def kill_cell(cls, cluster: Cluster, cell, t: float) -> "ChaosSchedule":
+        """Kill every replica of ``cell=(j, c)`` at ``t`` — the cell is
+        lost outright (the degraded-but-flagged scenario when r=1)."""
+        j, c = cell
+        return cls(
+            [ChaosEvent(t, "kill", d) for d in cluster.cell_devices(j, c)]
+        )
+
+    @classmethod
+    def flapping_node(
+        cls, device: int, t0: float, period: float, flaps: int,
+        seed: int = 0,
+    ) -> "ChaosSchedule":
+        """Kill/revive ``device`` every ``period`` (± seeded jitter ≤ 10%):
+        down for one half-period, up for the next, ``flaps`` times. The
+        controller's hysteresis must ride this out without churn."""
+        rng = np.random.default_rng(seed)
+        events, t = [], t0
+        for _ in range(flaps):
+            events.append(ChaosEvent(t, "kill", device))
+            t += period / 2 * (1 + 0.1 * float(rng.uniform(-1, 1)))
+            events.append(ChaosEvent(t, "revive", device))
+            t += period / 2 * (1 + 0.1 * float(rng.uniform(-1, 1)))
+        return cls(events)
+
+
+def delayed_heartbeat(cluster: Cluster, device: int, delay_s: float):
+    """A beat function whose timestamps for ``device`` lag by ``delay_s``
+    (network delay): with ``delay_s > deadline_s`` the device *looks* down
+    though it is alive — transient failover, never repair (hysteresis)."""
+
+    def beat(dev: int, now: float):
+        cluster.elastic.beat(
+            dev, t=now - delay_s if dev == device else now
+        )
+
+    return beat
+
+
+# --------------------------------------------------------------- runner
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """Everything one runner step observed (for exact assertions)."""
+
+    t: float
+    epoch: int
+    dead: tuple  # devices dead per the schedule at this step
+    result: object  # ElasticQueryResult of this step's query batch
+    report: object  # TickReport of this step's controller tick
+
+
+class ChaosRunner:
+    """Step simulated time over (elastic, controller, schedule).
+
+    Per step: apply due events → beat live devices (via ``beat_fn``,
+    default ``elastic.beat``) → query → tick. On an epoch swap the dead
+    set clears: migration placed the cells on fresh hosts, and the
+    schedule's device ids refer to the old epoch.
+    """
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        controller: elastic_mod.ElasticController,
+        schedule: ChaosSchedule,
+        *,
+        dt: float = 0.5,
+        beat_fn=None,
+    ):
+        self.cluster = cluster
+        self.controller = controller
+        self.schedule = schedule
+        self.dt = dt
+        self.beat_fn = beat_fn
+        self.dead: set[int] = set()
+        self.records: list[StepRecord] = []
+        self._t = 0.0
+        self._epoch = cluster.elastic.epoch.n
+
+    def step(self) -> StepRecord:
+        """Advance one dt: faults, beats, one query batch, one tick."""
+        el = self.cluster.elastic
+        t0, self._t = self._t, self._t + self.dt
+        for ev in self.schedule.due(t0, self._t):
+            if ev.kind == "kill":
+                self.dead.add(ev.device)
+            else:
+                self.dead.discard(ev.device)
+        for dev in range(el.n_devices):
+            if dev not in self.dead:
+                if self.beat_fn is None:
+                    el.beat(dev, t=self._t)
+                else:
+                    self.beat_fn(dev, self._t)
+        result = el.query(self.cluster.queries, now=self._t)
+        report = self.controller.tick(now=self._t)
+        if report.epoch != self._epoch:
+            self._epoch = report.epoch
+            self.dead.clear()  # fresh hosts after migration
+        rec = StepRecord(
+            self._t, report.epoch, tuple(sorted(self.dead)), result, report
+        )
+        self.records.append(rec)
+        return rec
+
+    def run(self, steps: int) -> list[StepRecord]:
+        """Run ``steps`` steps; returns all records so far."""
+        for _ in range(steps):
+            self.step()
+        return self.records
+
+
+def mid_migration_kill(
+    cluster: Cluster,
+    controller: elastic_mod.ElasticController,
+    *,
+    at_phase: str,
+    device: int,
+    now: float,
+    probe=None,
+):
+    """Install an ``on_phase`` hook that kills ``device`` when the
+    rebalance reaches ``at_phase`` ("restore" | "save" | "load" — all
+    pre-swap) and runs ``probe(phase)`` at every phase. Returns the list
+    of phases seen (so tests can assert the kill actually fired)."""
+    seen: list[str] = []
+
+    def hook(phase: str) -> None:
+        seen.append(phase)
+        if phase == at_phase:
+            # the device misses its deadline mid-migration: stop beating
+            # it and let the monitor expire it
+            cluster.elastic.monitor.last_beat.pop(device, None)
+        if probe is not None:
+            probe(phase)
+
+    controller.on_phase = hook
+    return seen

@@ -1,0 +1,370 @@
+"""Kill-and-recover scenarios for the elastic loop (DESIGN.md §14).
+
+The controller's behaviors are *defined* by what survives these seeded
+chaos schedules (tests/chaos.py):
+
+* kill one replica of an r=2 cell → every answer stays **bit-identical**
+  to the healthy index (failover to the survivor) and
+  ``dslsh_failovers_total`` counts it;
+* kill an r=1 cell → the answer is degraded but **flagged** (the cell's
+  rows flip off in ``res.routed``) — never silently wrong;
+* kill during a migration → the old epoch serves until the swap;
+* a flapping node → hysteresis holds, zero rebalances, zero churn;
+* a sustained kill → repair: a new epoch that answers bit-exactly with no
+  failovers left.
+
+Plus the regression pins for the two bugs this PR fixed: a fresh
+``HeartbeatMonitor`` declaring the whole fleet down before anyone could
+beat, and resharding rebuilding every cell from scratch instead of
+reusing the survivors.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import chaos
+from repro import api as dslsh
+from repro import obs as obs_mod
+from repro.obs import metrics as obs_metrics
+from repro.runtime import elastic as elastic_mod
+from repro.runtime import ft
+
+jax.config.update("jax_platform_name", "cpu")
+
+BACKENDS = ["reference", "pallas"]
+
+
+def _bit_exact(result, healthy):
+    res = result.result if hasattr(result, "result") else result
+    np.testing.assert_array_equal(
+        np.asarray(res.knn_dist), np.asarray(healthy.knn_dist)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.knn_idx), np.asarray(healthy.knn_idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.comparisons), np.asarray(healthy.comparisons)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.routed), np.asarray(healthy.routed)
+    )
+
+
+# ------------------------------------------------------- kill, replicated
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kill_replicated_cell_bit_exact(backend):
+    """Acceptance: killing one replica of an r=2 cell never changes a
+    result bit — the survivor answers — and the failover is counted."""
+    ob = obs_mod.Obs(trace=False)
+    cl = chaos.make_cluster(seed=3, replication=2, backend=backend, obs=ob)
+    victim_cell = cl.replicated_cell()
+    victim = cl.cell_devices(*victim_cell)[0]
+
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=99, scale_ticks=99
+        )
+    )
+    runner = chaos.ChaosRunner(
+        cl, ctl, chaos.ChaosSchedule.kill_device(victim, t=1.0), dt=0.5
+    )
+    records = runner.run(8)
+    for rec in records:
+        _bit_exact(rec.result, cl.healthy)  # every step, outage included
+        assert not rec.result.degraded
+    failovers = [r for r in records if victim_cell in r.result.failover_cells]
+    assert failovers, "the dead replica never registered as a failover"
+    snap = ob.snapshot()
+    j, c = victim_cell
+    counted = snap["dslsh_failovers_total"]["values"][f'cell="{j}/{c}"']
+    assert counted == len(failovers)
+
+
+# ----------------------------------------------------- kill, unreplicated
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kill_unreplicated_cell_flagged_never_silent(backend):
+    """Acceptance: losing an r=1 cell degrades the answer but flags it —
+    the lost cell's rows are off in ``res.routed`` and the result object
+    says ``degraded``; the healthy cells still answer."""
+    ob = obs_mod.Obs(trace=False)
+    cl = chaos.make_cluster(seed=4, replication=1, backend=backend, obs=ob)
+    victim_cell = (0, 1)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=99, scale_ticks=99
+        )
+    )
+    runner = chaos.ChaosRunner(
+        cl, ctl, chaos.ChaosSchedule.kill_cell(cl, victim_cell, t=1.0),
+        dt=0.5,
+    )
+    records = runner.run(6)
+    degraded = [r for r in records if r.result.degraded]
+    assert degraded, "losing the only replica must flag degradation"
+    for rec in degraded:
+        res = rec.result.result
+        assert victim_cell in rec.result.lost_cells
+        j, c = victim_cell
+        assert not np.asarray(res.routed)[j, c].any()  # flagged off
+        assert res.routed_frac < cl.healthy.routed_frac
+    # pre-kill steps are still bit-exact
+    _bit_exact(records[0].result, cl.healthy)
+    snap = ob.snapshot()
+    assert snap["dslsh_degraded_queries_total"]["values"][""] == len(degraded)
+
+
+# --------------------------------------------------- kill during migration
+
+
+def test_kill_during_migration_old_epoch_serves():
+    """A device dying mid-rebalance must not corrupt serving: queries at
+    every pre-swap phase come from the old epoch bit-exactly; the swap
+    publishes the new epoch atomically."""
+    cl = chaos.make_cluster(seed=5, replication=2)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(deadline_s=1.0)
+    )
+    victim = cl.cell_devices(0, 0)[0]
+    probed = []
+
+    def probe(phase):
+        r = cl.elastic.query(cl.queries, now=5.0)
+        probed.append((phase, r.epoch))
+        if phase != "swap":
+            assert r.epoch == 0, "old epoch must serve until the swap"
+            _bit_exact(r, cl.healthy)
+        else:
+            assert r.epoch == 1
+
+    seen = chaos.mid_migration_kill(
+        cl, ctl, at_phase="load", device=victim, now=5.0, probe=probe
+    )
+    # everyone beat recently except what the hook kills mid-flight
+    for d in range(cl.elastic.n_devices):
+        cl.elastic.beat(d, t=5.0)
+    ctl.rebalance(cl.plan.replicas.copy(), now=5.0)
+    assert seen == ["restore", "save", "load", "swap"]
+    assert [p for p, _ in probed] == seen
+    # post-swap: fresh hosts, no failover, bit-exact
+    r = cl.elastic.query(cl.queries, now=5.1)
+    assert r.epoch == 1 and not r.degraded and r.failover_cells == ()
+    _bit_exact(r, cl.healthy)
+
+
+# ------------------------------------------------------------ flap / delay
+
+
+def test_flapping_node_no_replica_churn():
+    """Hysteresis pin: a node flapping faster than ``repair_ticks`` never
+    triggers a rebalance — zero churn, epoch stays 0."""
+    cl = chaos.make_cluster(seed=6, replication=2)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=3, scale_ticks=99
+        )
+    )
+    flapper = cl.cell_devices(*cl.replicated_cell())[0]
+    sched = chaos.ChaosSchedule.flapping_node(
+        flapper, t0=1.0, period=4.0, flaps=5, seed=6
+    )
+    records = chaos.ChaosRunner(cl, ctl, sched, dt=1.0).run(20)
+    assert all(not r.report.rebalanced for r in records)
+    assert cl.elastic.epoch.n == 0
+    # the flap was real: some ticks saw the device down
+    assert any(flapper in r.report.down_devices for r in records)
+    # and every single answer stayed bit-exact (failover covered the dips)
+    for r in records:
+        _bit_exact(r.result, cl.healthy)
+
+
+def test_delayed_heartbeat_transient_failover_no_repair():
+    """Beats arriving later than the deadline make a live device *look*
+    down: transient failover (bit-exact), but hysteresis must not let the
+    controller repair a healthy node."""
+    cl = chaos.make_cluster(seed=7, replication=2)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=5, scale_ticks=99
+        )
+    )
+    laggard = cl.cell_devices(*cl.replicated_cell())[0]
+    beat = chaos.delayed_heartbeat(cl, laggard, delay_s=1.5)
+    runner = chaos.ChaosRunner(
+        cl, ctl, chaos.ChaosSchedule(), dt=1.0, beat_fn=beat
+    )
+    records = runner.run(4)
+    assert any(laggard in r.report.down_devices for r in records)
+    assert all(not r.report.rebalanced for r in records)
+    for r in records:
+        _bit_exact(r.result, cl.healthy)
+
+
+# ------------------------------------------------------------------ repair
+
+
+def test_sustained_kill_repairs_to_clean_epoch():
+    """A device down for ``repair_ticks`` consecutive ticks is repaired:
+    the controller publishes a new epoch that serves bit-exactly with no
+    failovers left, and the migration counters tell the story."""
+    ob = obs_mod.Obs(trace=False)
+    cl = chaos.make_cluster(seed=8, replication=2, obs=ob)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=2, scale_ticks=99
+        )
+    )
+    victim = cl.cell_devices(*cl.replicated_cell())[0]
+    runner = chaos.ChaosRunner(
+        cl, ctl, chaos.ChaosSchedule.kill_device(victim, t=1.0), dt=1.0
+    )
+    records = runner.run(8)
+    swaps = [r for r in records if r.report.rebalanced]
+    assert len(swaps) == 1, "exactly one repair for one sustained failure"
+    assert swaps[0].report.migrated_cells >= 1
+    assert cl.elastic.epoch.n == 1
+    tail = records[-1]
+    assert tail.epoch == 1
+    assert tail.result.failover_cells == () and not tail.result.degraded
+    _bit_exact(tail.result, cl.healthy)
+    snap = ob.snapshot()
+    assert snap["dslsh_rebalances_total"]["values"][""] == 1.0
+    assert snap["dslsh_epoch"]["values"][""] == 1.0
+
+
+def test_lost_cell_restored_on_repair():
+    """Even a cell lost outright (r=1, host dead) comes back: the repair
+    restores it from the durable store and the new epoch is bit-exact."""
+    cl = chaos.make_cluster(seed=9, replication=1)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=2, scale_ticks=99
+        )
+    )
+    sched = chaos.ChaosSchedule.kill_cell(cl, (1, 0), t=1.0)
+    records = chaos.ChaosRunner(cl, ctl, sched, dt=1.0).run(6)
+    assert any(r.result.degraded for r in records)  # the outage was real
+    swaps = [r for r in records if r.report.rebalanced]
+    assert swaps and 1 in swaps[0].report.repaired_nodes
+    tail = records[-1]
+    assert not tail.result.degraded
+    _bit_exact(tail.result, cl.healthy)
+
+
+# ------------------------------------------------------- regression pins
+
+
+def test_fresh_monitor_grace_no_phantom_outage():
+    """Regression: a fresh monitor used to mark every never-beaten node
+    down, so the first controller tick saw a phantom total outage and
+    rebuilt the world. Grace = one full deadline from monitor start."""
+    mon = ft.HeartbeatMonitor(4, deadline_s=1.0, start=0.0)
+    assert not mon.drop_mask(now=0.9).any()
+    assert mon.drop_mask(now=1.5).all()  # grace over, still silent => down
+    # end-to-end: tick 0 on a brand-new cluster must be a no-op
+    cl = chaos.make_cluster(seed=10, replication=2)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=1, scale_ticks=99
+        )
+    )
+    rep = ctl.tick(now=0.5)
+    assert rep.down_devices == () and not rep.rebalanced
+
+
+def test_restore_cells_reuses_survivors_no_retrace_no_rebuild(monkeypatch):
+    """Regression: resharding used to rebuild every cell from scratch.
+    ``elastic_restore_cells`` must (a) answer bit-exactly, (b) never call
+    the from-scratch build path, and (c) reuse one compiled restore
+    executable — restoring another node must not retrace."""
+    cl = chaos.make_cluster(seed=11, nu=3, p=2, replication=1, n=288)
+    healthy = cl.healthy
+
+    # (b) from-scratch build is off the table while restoring
+    def boom(*a, **kw):  # pragma: no cover - failure path
+        raise AssertionError("restore must not rebuild from scratch")
+
+    monkeypatch.setattr(dslsh, "build", boom)
+    monkeypatch.setattr("repro.core.distributed.simulate_build", boom)
+
+    before = obs_metrics.retrace_count("cell_restore")
+    restored = ft.elastic_restore_cells(cl.index, [1])
+    first = obs_metrics.retrace_count("cell_restore") - before
+    assert first <= 1  # one trace ever per config+shape
+    restored2 = ft.elastic_restore_cells(restored, [0, 2])
+    assert obs_metrics.retrace_count("cell_restore") - before == first
+    # (a) bit-exact after restoring every node once
+    for idx in (restored, restored2):
+        res = idx.query(cl.queries)
+        np.testing.assert_array_equal(
+            np.asarray(res.knn_dist), np.asarray(healthy.knn_dist)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.knn_idx), np.asarray(healthy.knn_idx)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.comparisons), np.asarray(healthy.comparisons)
+        )
+    # survivors' tables were carried over, not recomputed: values identical
+    old = cl.index.pipeline_index
+    new = restored.pipeline_index
+    for j in (0, 2):  # surviving nodes
+        np.testing.assert_array_equal(
+            np.asarray(old.outer.sorted_keys[j]),
+            np.asarray(new.outer.sorted_keys[j]),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(old.outer.sorted_idx[j]),
+            np.asarray(new.outer.sorted_idx[j]),
+        )
+
+
+def test_elastic_reshard_index_reuses_with_handle():
+    """`elastic_reshard_index` given the live handle repairs in place
+    (bit-exact, grid unchanged); the legacy Deployment form still shrinks
+    the grid but now warns that it rebuilds from scratch."""
+    cl = chaos.make_cluster(seed=12, nu=3, p=2, replication=1, n=288)
+    labels = np.arange(cl.data.shape[0])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # must not warn
+        idx2, labs, n_real = ft.elastic_reshard_index(
+            None, cl.data, labels, cl.cfg, cl.index, [2]
+        )
+    assert idx2.deploy.nu == 3 and n_real == cl.data.shape[0]
+    res = idx2.query(cl.queries)
+    np.testing.assert_array_equal(
+        np.asarray(res.knn_idx), np.asarray(cl.healthy.knn_idx)
+    )
+    with pytest.warns(DeprecationWarning):
+        idx3, _, _ = ft.elastic_reshard_index(
+            jax.random.PRNGKey(0), cl.data, labels, cl.cfg, cl.index.deploy,
+            [2],
+        )
+    assert idx3.deploy.nu == 2
+
+
+def test_drop_cells_requires_grid():
+    """drop_cells is the grid failover channel; other deployments must
+    reject it loudly rather than ignore it."""
+    cfg = chaos.chaos_cfg()
+    data = chaos.clustered(n=128)
+    idx = dslsh.build(jax.random.PRNGKey(0), data, cfg, dslsh.single())
+    with pytest.raises(ValueError):
+        idx.query(data[:4], drop_cells=np.zeros((1, 1), bool))
+
+
+def test_elastic_requires_routed_grid():
+    """ElasticIndex needs a plan to know replicas; unrouted handles are
+    rejected at construction, not at first failure."""
+    cfg = chaos.chaos_cfg()
+    data = chaos.clustered(n=128)
+    idx = dslsh.build(
+        jax.random.PRNGKey(0), data, cfg, dslsh.grid(nu=2, p=2)
+    )
+    with pytest.raises(ValueError):
+        elastic_mod.ElasticIndex(idx)

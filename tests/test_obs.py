@@ -441,3 +441,135 @@ def test_disabled_obs_query_overhead_within_5_percent():
         ratios.append((t2 - t1) / max(t1 - t0, 1e-9))
     med = float(np.median(ratios))
     assert med <= 1.05, f"disabled-path overhead {med:.3f}x exceeds 1.05x"
+
+
+# ------------------------------------------------------- elastic (§14) obs
+
+
+def test_elastic_spans_nest_under_controller_tick():
+    """A tick that rebalances records the whole story on one track:
+    ``elastic.rebalance`` (and the ``index.save`` / ``index.load``
+    migration spans inside it) nests by time containment under
+    ``elastic.tick``."""
+    import chaos
+    from repro.runtime import elastic as elastic_mod
+
+    ob = obs.Obs()
+    cl = chaos.make_cluster(seed=20, replication=2, obs=ob)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic,
+        elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=2, scale_ticks=99
+        ),
+    )
+    victim = cl.cell_devices(*cl.replicated_cell())[0]
+    runner = chaos.ChaosRunner(
+        cl, ctl, chaos.ChaosSchedule.kill_device(victim, t=1.0), dt=1.0
+    )
+    records = runner.run(6)
+    assert any(r.report.rebalanced for r in records)
+    names = [e["name"] for e in ob.tracer.events]
+    assert "elastic.tick" in names and "elastic.rebalance" in names
+    assert "index.save" in names and "index.load" in names
+    reb = next(e for e in ob.tracer.events if e["name"] == "elastic.rebalance")
+    ticks = [e for e in ob.tracer.events if e["name"] == "elastic.tick"]
+    host = [
+        t for t in ticks
+        if t["ts"] <= reb["ts"]
+        and reb["ts"] + reb["dur"] <= t["ts"] + t["dur"] + 1.0
+    ]
+    assert host, "elastic.rebalance must nest inside its elastic.tick"
+    for name in ("index.save", "index.load"):
+        e = next(ev for ev in ob.tracer.events if ev["name"] == name)
+        assert e["ts"] >= reb["ts"]
+        assert e["ts"] + e["dur"] <= reb["ts"] + reb["dur"] + 1.0
+
+
+def test_elastic_counters_match_chaos_ground_truth():
+    """The §14 counters are exact, not samples: failovers, degraded
+    batches, migrated cells, and the replica gauge all equal what the
+    chaos runner's records say actually happened."""
+    import chaos
+    from repro.runtime import elastic as elastic_mod
+
+    ob = obs.Obs(trace=False)
+    cl = chaos.make_cluster(seed=21, replication=2, obs=ob)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic,
+        elastic_mod.ElasticConfig(
+            deadline_s=1.0, repair_ticks=3, scale_ticks=99
+        ),
+    )
+    victim_cell = cl.replicated_cell()
+    victim = cl.cell_devices(*victim_cell)[0]
+    runner = chaos.ChaosRunner(
+        cl, ctl, chaos.ChaosSchedule.kill_device(victim, t=1.0), dt=1.0
+    )
+    records = runner.run(8)
+    snap = ob.snapshot()
+
+    expected_failovers: dict = {}
+    for r in records:
+        for j, c in r.result.failover_cells:
+            k = f'cell="{j}/{c}"'
+            expected_failovers[k] = expected_failovers.get(k, 0) + 1
+    assert expected_failovers, "scenario produced no failovers to check"
+    assert snap["dslsh_failovers_total"]["values"] == {
+        k: float(v) for k, v in expected_failovers.items()
+    }
+
+    swaps = [r for r in records if r.report.rebalanced]
+    assert len(swaps) == 1
+    assert snap["dslsh_rebalances_total"]["values"][""] == float(len(swaps))
+    assert snap["dslsh_cells_migrated_total"]["values"][""] == float(
+        sum(r.report.migrated_cells for r in swaps)
+    )
+    assert snap["dslsh_epoch"]["values"][""] == float(records[-1].epoch)
+    # replica gauge reflects the last tick's live counts
+    last_live = snap["dslsh_replicas"]["values"]
+    plan = cl.elastic.index.plan
+    for j in range(plan.replicas.shape[0]):
+        for c in range(plan.replicas.shape[1]):
+            assert last_live[f'cell="{j}/{c}"'] == float(plan.replicas[j, c])
+    assert "dslsh_degraded_queries_total" not in snap  # replica covered it
+
+
+def test_elastic_instrumented_equals_uninstrumented():
+    """Instrumentation never changes a bit: the same chaos scenario with
+    and without an obs bundle yields identical results step by step."""
+    import chaos
+    from repro.runtime import elastic as elastic_mod
+
+    def run(obs_bundle):
+        cl = chaos.make_cluster(seed=22, replication=2, obs=obs_bundle)
+        ctl = elastic_mod.ElasticController(
+            cl.elastic,
+            elastic_mod.ElasticConfig(
+                deadline_s=1.0, repair_ticks=2, scale_ticks=99
+            ),
+        )
+        victim = cl.cell_devices(*cl.replicated_cell())[0]
+        runner = chaos.ChaosRunner(
+            cl, ctl, chaos.ChaosSchedule.kill_device(victim, t=1.0), dt=1.0
+        )
+        return runner.run(6)
+
+    instrumented = run(obs.Obs())
+    bare = run(None)
+    assert len(instrumented) == len(bare)
+    for a, b in zip(instrumented, bare):
+        assert a.epoch == b.epoch
+        assert a.result.failover_cells == b.result.failover_cells
+        assert a.result.lost_cells == b.result.lost_cells
+        np.testing.assert_array_equal(
+            np.asarray(a.result.result.knn_dist),
+            np.asarray(b.result.result.knn_dist),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(a.result.result.knn_idx),
+            np.asarray(b.result.result.knn_idx),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(a.result.result.routed),
+            np.asarray(b.result.result.routed),
+        )

@@ -1,0 +1,194 @@
+"""Property sweep: elastic operations never change a result bit (§14).
+
+Two invariants, each with an always-run seeded core plus a hypothesis
+sweep (requirements-dev.txt) over arbitrary grids and replica maps:
+
+* **rebalance is invisible** — after any ``ElasticController.rebalance``
+  to any valid replica map (grow, shrink, mixed), the new epoch answers
+  the same queries bit-identically to the pre-rebalance index: replicas
+  are placement, never math.
+* **migration composes** — the ``save`` → ``load`` round-trip (the
+  migration primitive) composes with ``routing.replan`` for arbitrary
+  nu, p, r: the moved + re-planned handle is bit-exact too, including a
+  second hop (migrate twice).
+"""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+import chaos
+from repro import api as dslsh
+from repro.core import routing
+from repro.runtime import elastic as elastic_mod
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAS_HYPOTHESIS = False
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _assert_bitexact(res, healthy):
+    np.testing.assert_array_equal(
+        np.asarray(res.knn_dist), np.asarray(healthy.knn_dist)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.knn_idx), np.asarray(healthy.knn_idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.comparisons), np.asarray(healthy.comparisons)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.compaction_overflow),
+        np.asarray(healthy.compaction_overflow),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.routed), np.asarray(healthy.routed)
+    )
+
+
+def _rebalance_case(seed, nu, p, replication, target_replicas):
+    """One full scenario: build → rebalance to ``target_replicas`` →
+    assert the new epoch is bit-exact on the same queries."""
+    n = 48 * nu * p
+    cl = chaos.make_cluster(
+        seed=seed, nu=nu, p=p, replication=replication, n=max(n, 128)
+    )
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(deadline_s=1.0)
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        ctl._workdir = tmp
+        epoch, _ = ctl.rebalance(target_replicas, now=0.5)
+        res = cl.elastic.query(cl.queries, now=0.6)
+        assert res.epoch == epoch.n == 1
+        assert res.failover_cells == () and not res.degraded
+        _assert_bitexact(res.result, cl.healthy)
+        np.testing.assert_array_equal(
+            epoch.index.plan.replicas, np.asarray(target_replicas, np.int32)
+        )
+
+
+# ------------------------------------------------- always-run seeded core
+
+
+@pytest.mark.parametrize(
+    "seed,nu,p,replication",
+    [(0, 1, 1, 1), (1, 2, 2, 2), (2, 4, 2, 1), (3, 2, 4, 2)],
+)
+def test_rebalance_bit_exact_seeded(seed, nu, p, replication):
+    """Seeded core: grow/shrink/mixed replica maps over 1/4/8-cell grids
+    leave every answer bit unchanged."""
+    rng = np.random.default_rng(seed)
+    target = rng.integers(1, 4, size=(nu, p)).astype(np.int32)
+    _rebalance_case(seed, nu, p, replication, target)
+
+
+def test_migration_roundtrip_composes_seeded(tmp_path):
+    """Seeded core: save → load → replan, twice over (a migration chain),
+    stays bit-exact for every intermediate and final handle."""
+    cl = chaos.make_cluster(seed=5, nu=2, p=2, replication=2)
+    rng = np.random.default_rng(5)
+    hop = cl.index
+    for i in range(2):
+        path = str(tmp_path / f"hop{i}")
+        hop.save(path)
+        moved = dslsh.load(path)
+        replicas = rng.integers(1, 4, size=(2, 2)).astype(np.int32)
+        plan = routing.replan(moved.plan, replicas)
+        import dataclasses
+
+        deploy = dataclasses.replace(
+            moved.deploy, replication=int(replicas.max())
+        )
+        hop = dslsh.Index(deploy, moved.cfg, {**moved._state, "plan": plan})
+        res = hop.query(cl.queries)
+        _assert_bitexact(res, cl.healthy)
+        assert plan.n_devices == int(replicas.sum())
+
+
+def test_rebalance_during_load_accumulation_seeded():
+    """Seeded core: a rebalance mid-stream (queries before and after)
+    keeps serving bit-exact answers and the controller keeps counting
+    load on the new grid shape."""
+    cl = chaos.make_cluster(seed=6, nu=2, p=2, replication=1)
+    ctl = elastic_mod.ElasticController(
+        cl.elastic, elastic_mod.ElasticConfig(deadline_s=1.0)
+    )
+    for i in range(3):
+        r = cl.elastic.query(cl.queries, now=0.1 * i)
+        _assert_bitexact(r.result, cl.healthy)
+    with tempfile.TemporaryDirectory() as tmp:
+        ctl._workdir = tmp
+        ctl.rebalance(np.full((2, 2), 2, np.int32), now=0.5)
+        for i in range(3):
+            r = cl.elastic.query(cl.queries, now=0.6 + 0.1 * i)
+            _assert_bitexact(r.result, cl.healthy)
+        load = cl.elastic.take_load()
+        assert load.shape == (2, 2) and load.sum() > 0
+
+
+# ------------------------------------------------------- hypothesis sweep
+
+
+if HAS_HYPOTHESIS:
+
+    @given(
+        seed=st.integers(0, 2**16),
+        grid=st.sampled_from([(1, 1), (2, 2), (4, 2), (2, 4)]),
+        replication=st.integers(1, 2),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_rebalance_bitexact_property(seed, grid, replication):
+        """Any valid replica map, any grid: rebalance never changes a
+        bit."""
+        nu, p = grid
+        rng = np.random.default_rng(seed)
+        target = rng.integers(1, 4, size=(nu, p)).astype(np.int32)
+        _rebalance_case(seed % 97, nu, p, replication, target)
+
+    @given(
+        seed=st.integers(0, 2**16),
+        grid=st.sampled_from([(2, 2), (4, 2)]),
+        hops=st.integers(1, 3),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_migration_composes_property(seed, grid, hops):
+        """save → load → replan chains of arbitrary length stay
+        bit-exact."""
+        nu, p = grid
+        cl = chaos.make_cluster(
+            seed=seed % 97, nu=nu, p=p, replication=2, n=48 * nu * p
+        )
+        rng = np.random.default_rng(seed)
+        hop = cl.index
+        import dataclasses
+
+        with tempfile.TemporaryDirectory() as tmp:
+            for i in range(hops):
+                path = f"{tmp}/hop{i}"
+                hop.save(path)
+                moved = dslsh.load(path)
+                replicas = rng.integers(1, 4, size=(nu, p)).astype(np.int32)
+                plan = routing.replan(moved.plan, replicas)
+                deploy = dataclasses.replace(
+                    moved.deploy, replication=int(replicas.max())
+                )
+                hop = dslsh.Index(
+                    deploy, moved.cfg, {**moved._state, "plan": plan}
+                )
+            res = hop.query(cl.queries)
+            _assert_bitexact(res, cl.healthy)
+else:  # pragma: no cover - minimal installs
+
+    @pytest.mark.skip(
+        reason="property sweep needs hypothesis (requirements-dev.txt);"
+        " the seeded core above always runs"
+    )
+    def test_rebalance_bitexact_property():
+        """Placeholder so the skip is visible in reports."""
