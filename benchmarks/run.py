@@ -20,6 +20,7 @@ def main() -> None:
         roofline,
         routing_bench,
         scale_bench,
+        serve_bench,
         stream_bench,
         table2_scaling,
         table3_scaling,
@@ -37,6 +38,7 @@ def main() -> None:
         "routing": routing_bench,
         "scale": scale_bench,
         "elastic": elastic_bench,
+        "serve": serve_bench,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -1,0 +1,206 @@
+"""Serving front-end benchmark (DESIGN.md §15): open-loop load vs naive.
+
+An open-loop load generator fires a fixed arrival schedule of small
+query requests at an overload factor calibrated so a **naive
+one-batch-at-a-time server** (each request queries the index alone, in
+arrival order) demonstrably misses deadlines. The same schedule then
+drives the coalescing front end in real time. Both sides report
+sustained QPS, p50/p99 latency, timeout and shed rates, and **goodput**
+(in-deadline responses/s) — the ISSUE-10 acceptance gates:
+
+* front-end goodput ≥ 2x naive under the same overload,
+* coalesced p99 < naive p99 and timeout rate ≤ naive,
+* zero silent drops (the request ledger balances exactly),
+* zero new retraces after warmup (``obs.query_retraces`` pin),
+* undegraded responses bit-identical to a direct ``Index.query``.
+
+The naive baseline runs each request's query back-to-back on the real
+clock and replays the measured durations through a virtual FIFO queue
+(``start_i = max(arrival_i, completion_{i-1})``) — the standard
+open-loop model of a serial server, immune to sleep jitter.
+
+Emitted to BENCH_serve.json (override: REPRO_BENCH_SERVE_JSON); CSV rows
+go through benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+SERVE_JSON = os.environ.get(
+    "REPRO_BENCH_SERVE_JSON",
+    os.path.join(os.path.dirname(__file__), "artifacts", "BENCH_serve.json"),
+)
+
+#: arrivals per solo-serve duration — the overload the naive server
+#: cannot sustain (its queue grows by ~3 requests per request served)
+OVERLOAD = 4.0
+#: deadline as a multiple of the solo-serve duration
+DEADLINE_MULT = 10.0
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def _summary(latencies, ok, shed, makespan_s, n, rows_per_req):
+    return {
+        "requests": n,
+        "completed": len(latencies),
+        "in_deadline": int(ok),
+        "shed": int(shed),
+        "timeout_rate": 1.0 - (ok + shed) / n,
+        "shed_rate": shed / n,
+        "p50_latency_ms": _percentile(latencies, 50) * 1e3,
+        "p99_latency_ms": _percentile(latencies, 99) * 1e3,
+        "sustained_qps": (
+            len(latencies) * rows_per_req / max(makespan_s, 1e-9)
+        ),
+        "goodput_rps": ok / max(makespan_s, 1e-9),
+    }
+
+
+def run():
+    from repro import api, obs as obs_mod
+    from repro.obs import clock
+    from repro.serve import frontend as frontend_mod
+
+    if common.FULL:
+        n, d, n_req, req_q = 16384, 32, 400, 4
+    else:
+        n, d, n_req, req_q = 2560, 16, 120, 4
+    rng = np.random.default_rng(0)
+    data = rng.uniform(0.0, 1.0, (n, d)).astype(np.float32)
+    cfg = common.slsh_cfg(
+        m_out=24, L_out=8, m_in=8, L_in=4, alpha=0.01, val_lo=0.0,
+        val_hi=1.0, c_max=64, c_in=16, h_max=8, p_max=128,
+        build_chunk=512, query_chunk=32,
+    )
+    index = api.build(
+        jax.random.PRNGKey(0), data, cfg,
+        api.grid(nu=2, p=2, routed=True),
+    )
+    req_queries = [
+        (data[rng.integers(0, n, req_q)]
+         + rng.normal(0, 0.002, (req_q, d))).astype(np.float32)
+        for _ in range(n_req)
+    ]
+
+    # ---- calibrate: solo per-request serve time (warmed) ---------------
+    jax.block_until_ready(index.query(req_queries[0]).knn_dist)
+    t0 = time.perf_counter()
+    for q in req_queries[:8]:
+        jax.block_until_ready(index.query(q).knn_dist)
+    solo_s = (time.perf_counter() - t0) / 8
+    gap_s = solo_s / OVERLOAD
+    deadline_s = DEADLINE_MULT * solo_s
+
+    # ---- naive one-batch-at-a-time baseline ----------------------------
+    # measured durations replayed through a virtual FIFO queue
+    durs = []
+    for q in req_queries:
+        t0 = time.perf_counter()
+        jax.block_until_ready(index.query(q).knn_dist)
+        durs.append(time.perf_counter() - t0)
+    naive_lat, completion = [], 0.0
+    for i, dur in enumerate(durs):
+        arrival = i * gap_s
+        completion = max(arrival, completion) + dur
+        naive_lat.append(completion - arrival)
+    naive_ok = sum(lat <= deadline_s for lat in naive_lat)
+    naive = _summary(naive_lat, naive_ok, 0, completion, n_req, req_q)
+
+    # ---- coalescing front end under the same open-loop schedule --------
+    fe = index.frontend(frontend_mod.FrontendConfig(ladder=(8, 32, 128)))
+    fe.warmup()
+    retraces0 = obs_mod.query_retraces()
+    start = clock.monotonic()
+    arrivals = [start + i * gap_s for i in range(n_req)]
+    reqs, i = [], 0
+    while i < n_req or fe.queue_depth:
+        now = clock.monotonic()
+        while i < n_req and arrivals[i] <= now:
+            reqs.append(fe.submit(
+                req_queries[i], deadline_s=deadline_s, now=arrivals[i]
+            ))
+            i += 1
+        if fe.queue_depth:
+            fe.pump()
+        elif i < n_req:
+            while clock.monotonic() < arrivals[i]:
+                pass  # open-loop: idle until the next scheduled arrival
+    makespan = clock.monotonic() - start
+    retraces = obs_mod.query_retraces() - retraces0
+
+    stats = fe.assert_conserved()  # zero silent drops, or die here
+    served = [r for r in reqs if r.status == "done"]
+    fe_ok = sum(
+        r.status == "done" and r.latency_s <= deadline_s for r in reqs
+    )
+    fe_lat = [r.latency_s for r in served]
+    front = _summary(fe_lat, fe_ok, stats.shed, makespan, n_req, req_q)
+    front["timeout_rate"] = (
+        stats.timed_out + len(served) - fe_ok
+    ) / n_req
+    front["retraces_after_warmup"] = retraces
+    front["ledger_balance"] = stats.balance
+
+    # undegraded responses are bit-identical to a direct Index.query
+    for r in rng.choice(served, size=min(4, len(served)), replace=False):
+        assert not r.degraded
+        solo = index.query(r.queries)
+        np.testing.assert_array_equal(r.knn_dist, np.asarray(solo.knn_dist))
+        np.testing.assert_array_equal(r.knn_idx, np.asarray(solo.knn_idx))
+
+    report = {
+        "n": n, "d": d, "requests": n_req, "queries_per_request": req_q,
+        "overload": OVERLOAD, "deadline_mult": DEADLINE_MULT,
+        "solo_request_ms": solo_s * 1e3,
+        "interarrival_ms": gap_s * 1e3,
+        "deadline_ms": deadline_s * 1e3,
+        "frontend": front,
+        "naive": naive,
+        "goodput_ratio": front["goodput_rps"] / max(
+            naive["goodput_rps"], 1e-9
+        ),
+        "p99_ratio": front["p99_latency_ms"] / max(
+            naive["p99_latency_ms"], 1e-9
+        ),
+    }
+    os.makedirs(os.path.dirname(SERVE_JSON), exist_ok=True)
+    with open(SERVE_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        (
+            "serve_frontend",
+            front["p99_latency_ms"] * 1e3,
+            f"goodput={front['goodput_rps']:.1f}rps"
+            f"_qps={front['sustained_qps']:.1f}"
+            f"_timeout={front['timeout_rate']:.3f}",
+        ),
+        (
+            "serve_naive",
+            naive["p99_latency_ms"] * 1e3,
+            f"goodput={naive['goodput_rps']:.1f}rps"
+            f"_timeout={naive['timeout_rate']:.3f}",
+        ),
+        (
+            "serve_goodput_ratio",
+            report["goodput_ratio"] * 1e6,
+            f"ratio={report['goodput_ratio']:.2f}"
+            f"_p99ratio={report['p99_ratio']:.2f}"
+            f"_retraces={retraces}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -51,6 +51,9 @@ MODULES: tuple[str, ...] = (
     "repro.stream.shard",
     "repro.stream.monitor",
     "repro.serve.engine",
+    "repro.serve.frontend",
+    "repro.serve.coalesce",
+    "repro.serve.admission",
     "repro.launch.mesh",
     "repro.kernels.blocking",
     "repro.kernels.hash_pack.ops",

@@ -645,6 +645,7 @@ class Index:
             cfg, payload = self.cfg, self._payload()
 
             def run(q):
+                obs_mod.count_retrace("single_query")
                 res = pipeline.query_batch(index, data, q, cfg, payload=payload)
                 return DistributedQueryResult(
                     res.knn_dist,
@@ -664,12 +665,18 @@ class Index:
         if key not in self._compiled:
             index, data = self._state["index"], self._state["data"]
             cfg, g, plan = self.cfg, self.grid, self.plan
-            self._compiled[key] = jax.jit(
-                lambda q, dm, dc: D.grid_query(
+
+            def run(q, dm, dc):
+                # count_retrace runs only while tracing: the §15 serving
+                # pin reads this stage to prove steady state retraces
+                # nothing after the ladder warmup
+                obs_mod.count_retrace("grid_query")
+                return D.grid_query(
                     index, data, q, cfg, g, plan=plan, max_cells=max_cells,
                     drop_mask=dm, drop_cells=dc,
                 )
-            )
+
+            self._compiled[key] = jax.jit(run)
         return self._compiled[key]
 
     # --------------------------------------------------------- streaming
@@ -708,6 +715,41 @@ class Index:
             return self._core().compact_all(float(ts))
         with ob.activate(), ob.span("index.compact", ts=float(ts)):
             return self._core().compact_all(float(ts))
+
+    def snapshot(self) -> "Index":
+        """An RCU snapshot of this handle for ingest-while-serving
+        (DESIGN.md §15).
+
+        Batch deployments are immutable, so the snapshot is the handle
+        itself. Streaming deployments get a new handle over a
+        :meth:`~repro.stream.shard.ShardedStream.clone` of the core —
+        the per-node state list is copied, every array and compiled
+        program is shared — so the §15 front end can ingest into the
+        snapshot aside and publish it with one epoch swap while
+        in-flight queries keep the old state bit-exactly.
+        """
+        if self.deploy.kind != "streaming":
+            return self
+        state = dict(self._state)
+        state["core"] = self._state["core"].clone()
+        out = Index(self.deploy, self.cfg, state, self._obs)
+        out._compiled = self._compiled  # shared jit cache: zero retraces
+        return out
+
+    # ----------------------------------------------------------- serving
+
+    def frontend(self, cfg=None, **kw):
+        """An async multi-tenant serving front end over this handle
+        (DESIGN.md §15): admission control, micro-batch coalescing onto
+        the ladder of static shapes, deadline-aware degradation, and
+        (streaming) RCU ingest-while-serving. ``cfg`` is a
+        :class:`repro.serve.frontend.FrontendConfig`; keywords pass
+        through to :class:`repro.serve.frontend.ServeFrontend`.
+        """
+        from repro.serve import frontend as frontend_mod
+
+        kw.setdefault("obs", self._obs)
+        return frontend_mod.ServeFrontend(self, cfg, **kw)
 
     # ------------------------------------------------------- persistence
 

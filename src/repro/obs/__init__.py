@@ -199,3 +199,29 @@ def retraces(stage: str) -> int:
     ``dslsh_jit_retraces_total`` counter fed from inside the traced
     bodies — the observable form of the PR-6 compile-cache contract."""
     return metrics.retrace_count(stage)
+
+
+#: Every instrumented stage the query path can trace through, whatever
+#: the deployment (routed/unrouted grid, payload tail, streaming). The
+#: §15 serving front end pins :func:`query_retraces` flat across
+#: steady-state serving after warmup.
+QUERY_STAGES: tuple[str, ...] = (
+    "single_query",
+    "grid_query",
+    "stream_query",
+    "hash",
+    "gather_work",
+    "gather_select",
+    "gather_delta",
+    "query_tail",
+    "query_tail_payload",
+    "staged_batch",
+)
+
+
+def query_retraces() -> int:
+    """Total jit retraces across every query-path stage
+    (:data:`QUERY_STAGES`) — the steady-state serving pin: after
+    :meth:`repro.serve.frontend.ServeFrontend.warmup`, serving any
+    arrival pattern on the bucket ladder must leave this unchanged."""
+    return sum(metrics.retrace_count(s) for s in QUERY_STAGES)

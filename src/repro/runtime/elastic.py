@@ -129,6 +129,19 @@ class ElasticConfig:
     workdir: str | None = None
 
 
+def advance(epoch: Epoch, index) -> Epoch:
+    """The next generation of ``epoch`` serving ``index`` (RCU publish).
+
+    Pure bookkeeping for single-swap publishers outside the elastic
+    controller — the §15 serving front end builds a streaming ingest
+    delta aside and publishes it by assigning ``advance(epoch, new)``
+    over the old reference; in-flight readers keep the epoch they
+    snapshotted. The monitor (if any) carries over: liveness is about
+    devices, which an ingest swap does not change.
+    """
+    return Epoch(epoch.n + 1, index, epoch.monitor)
+
+
 def _fresh_monitor(
     n_devices: int, deadline_s: float, now: float | None
 ) -> ft.HeartbeatMonitor:

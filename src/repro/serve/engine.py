@@ -26,8 +26,8 @@ class Request:
     rid: int
     tokens: np.ndarray  # (prompt_len,)
     max_new: int = 16
-    deadline_s: float = float("inf")  # straggler deadline (from prefill start)
-    submitted_at: float = 0.0
+    deadline_s: float = float("inf")  # straggler deadline (from submission)
+    submitted_at: float = 0.0  # monotonic; 0.0 = stamped at serve() entry
     result: list = dataclasses.field(default_factory=list)
     done: bool = False
     timed_out: bool = False
@@ -81,11 +81,20 @@ class ServeEngine:
         at expiry, no further tokens appended. The batch keeps decoding for
         the surviving requests (and stops early once all are finalized).
 
-        Deadlines measure on the monotonic clock (``repro.obs.clock``):
-        a wall-clock jump mid-decode must never expire (or revive) a
-        straggler deadline. With an obs bundle bound, each micro-batch
-        records a ``serve.batch`` span and every finalized request feeds
-        the per-request latency histogram and the timeout counter."""
+        Deadlines are **submission-relative** on the monotonic clock
+        (``repro.obs.clock``): ``deadline_s`` counts from
+        ``submitted_at`` — stamped here at serve entry when the caller
+        left it 0.0 — so time spent queued behind earlier micro-batch
+        groups counts against the SLA (a request cannot look "fast"
+        because it waited; tests/test_serve.py pins this). A wall-clock
+        jump mid-decode must never expire (or revive) a straggler
+        deadline. With an obs bundle bound, each micro-batch records a
+        ``serve.batch`` span and every finalized request feeds the
+        per-request latency histogram and the timeout counter."""
+        t_in = clock.monotonic()
+        for r in requests:
+            if not r.submitted_at:
+                r.submitted_at = t_in
         ob = self.obs
         ctx = ob.activate() if ob is not None else contextlib.nullcontext()
         with ctx:
@@ -109,7 +118,8 @@ class ServeEngine:
             m = ob.metrics
             m.histogram(
                 "dslsh_serve_request_latency_seconds",
-                "per-request serve latency (prefill start -> finalize)",
+                "per-request serve latency (submission -> finalize;"
+                " queued time counts)",
             ).observe(elapsed)
             m.counter(
                 "dslsh_serve_requests_total", "requests finalized"
@@ -121,7 +131,6 @@ class ServeEngine:
                 ).inc()
 
     def _serve_group(self, group: list[Request]) -> None:
-        t0 = clock.monotonic()
         caches, logits_list = [], []
         for r in group:
             lg, ch = self._prefill_one(r)
@@ -132,15 +141,16 @@ class ServeEngine:
         logits = jnp.concatenate(logits_list, axis=0)
         steps = max(r.max_new for r in group)
         for step in range(steps):
-            elapsed = clock.monotonic() - t0
+            now = clock.monotonic()
             for r in group:
                 # completion is checked first: a request that produced all
                 # its tokens can no longer time out (its deadline expiring
-                # while batchmates keep decoding is not an SLA miss)
+                # while batchmates keep decoding is not an SLA miss).
+                # elapsed is submission-relative: queued time counts.
                 if not r.done and len(r.result) >= r.max_new:
-                    self._finalize(r, elapsed)
-                if not r.done and elapsed > r.deadline_s:
-                    self._finalize(r, elapsed, timed_out=True)
+                    self._finalize(r, now - r.submitted_at)
+                if not r.done and now - r.submitted_at > r.deadline_s:
+                    self._finalize(r, now - r.submitted_at, timed_out=True)
             if all(r.done for r in group):
                 break
             if self.logits_hook is not None:
@@ -148,7 +158,10 @@ class ServeEngine:
                     # tightest remaining latency budget in the batch —
                     # the router degrades retrieval when it runs short
                     budget = min(
-                        (r.deadline_s - elapsed for r in group if not r.done),
+                        (
+                            r.deadline_s - (now - r.submitted_at)
+                            for r in group if not r.done
+                        ),
                         default=float("inf"),
                     )
                     logits = self.logits_hook(logits, cache, budget)
@@ -159,9 +172,10 @@ class ServeEngine:
                 if not r.done and len(r.result) < r.max_new:
                     r.result.append(int(tok[i]))
             logits, cache = self._decode(self.params, cache, tok[:, None])
+        t_end = clock.monotonic()
         for r in group:
             if not r.done:
-                self._finalize(r, clock.monotonic() - t0)
+                self._finalize(r, t_end - r.submitted_at)
 
     @staticmethod
     def _batch_axis_guess(leaf):

@@ -214,11 +214,35 @@ class ShardedStream:
         self._jit_programs()
         return self
 
+    def clone(self) -> "ShardedStream":
+        """Cheap RCU copy for ingest-while-serving (DESIGN.md §15).
+
+        The per-node state is a Python list of immutable NamedTuples —
+        ``ingest``/``maintain`` only ever *replace* list slots, never
+        mutate leaves — so a clone is just a new list sharing every
+        array. The clone also shares the source's **compiled**
+        insert/query programs (their closed-over constants — cfg,
+        capacities — are identical), so publishing a new epoch per
+        ingest batch retraces nothing.
+        """
+        out = self.__class__.__new__(self.__class__)
+        out.cfg, out.grid = self.cfg, self.grid
+        out.node_capacity, out.delta_cap = self.node_capacity, self.delta_cap
+        out.retention_s = self.retention_s
+        out.route, out.route_bits = self.route, self.route_bits
+        out.family = self.family
+        out.rr = self.rr
+        out.state = list(self.state)
+        out._insert = self._insert  # shared jit caches: zero retraces
+        out._query = self._query
+        return out
+
     # ------------------------------------------------------------- jitted
 
     def _insert_impl(self, node: NodeState, xs, t):
         """Ingest one batch into one node: every cell hashes the batch with
         its own table slice; the shared store is written once."""
+        obs_mod.count_retrace("stream_insert")  # §15: RCU clones share jits
         n = node.cells.base.n[0]  # identical across the node's cells
         room = stream_index.delta_room(self.node_capacity, self.delta_cap, n)
 
@@ -277,6 +301,7 @@ class ShardedStream:
         return res.knn_dist, gidx, res.comparisons, res.compaction_overflow, routed
 
     def _query_impl(self, state: list[NodeState], queries):
+        obs_mod.count_retrace("stream_query")  # fires on trace only (§15 pin)
         q = queries.shape[0]
         l_loc = self.cfg.L_out // self.grid.p
         pk = routing.probe_keys(self.family[0], queries, self.cfg)

@@ -1,0 +1,151 @@
+"""Admission control under chaos (DESIGN.md §15 x §14).
+
+Drives the serving front end over an ``ElasticIndex`` with the
+tests/chaos.py discipline — simulated clocks, deterministic schedules —
+through a tenant burst and a mid-serve cell kill, and asserts the exact
+shed / degraded / exact counts against hand-computed ground truth. The
+headline invariant: **no request is ever silently dropped** — the ledger
+``submitted == completed + shed + timed_out + in_queue`` balances at
+every phase, and every degraded response carries the flag.
+"""
+import jax
+import numpy as np
+
+import chaos
+from repro.serve import admission, frontend as frontend_mod
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _beat_all(cluster, t, dead=()):
+    for dev in range(cluster.elastic.n_devices):
+        if dev not in dead:
+            cluster.elastic.beat(dev, t=t)
+
+
+def test_tenant_burst_and_cell_kill_exact_counts():
+    cluster = chaos.make_cluster(
+        seed=0, nu=2, p=2, replication=1, n=256, n_queries=16,
+        deadline_s=1.0,
+    )
+    q = np.asarray(cluster.queries, np.float32)
+    fe = frontend_mod.ServeFrontend(
+        cluster.elastic,
+        frontend_mod.FrontendConfig(
+            ladder=(4, 8, 16),
+            degrade=((0.25, None), (0.0, 1)),
+            quotas=(
+                ("burst", admission.TenantQuota(
+                    rate_qps=4.0, burst=8.0, degrade_overdraft=4.0
+                )),
+            ),
+        ),
+    )
+    fe.warmup()
+
+    # ---- phase 1 (t=0.1, healthy): steady tenant, exact service --------
+    _beat_all(cluster, 0.1)
+    exact = [
+        fe.submit(q[0:4], tenant="steady", now=0.1),
+        fe.submit(q[4:8], tenant="steady", now=0.1),
+    ]
+    fe.pump(now=0.1)
+    for r, (lo, hi) in zip(exact, ((0, 4), (4, 8))):
+        assert r.status == "done" and not r.degraded
+        # exact responses are bit-identical to the healthy cluster answer
+        np.testing.assert_array_equal(
+            r.knn_dist, np.asarray(cluster.healthy.knn_dist)[lo:hi]
+        )
+        np.testing.assert_array_equal(
+            r.knn_idx, np.asarray(cluster.healthy.knn_idx)[lo:hi]
+        )
+    fe.assert_conserved()
+
+    # ---- phase 2 (t=1.0): tenant burst over quota ----------------------
+    # bucket: burst 8 covers two 4-query requests; the overdraft band (4)
+    # covers a third at degraded service; the fourth sheds. Ground truth:
+    # verdicts [admit, admit, degrade, shed], in order.
+    _beat_all(cluster, 1.0)
+    burst = [fe.submit(q[i * 4:(i + 1) * 4], tenant="burst", now=1.0)
+             for i in range(4)]
+    assert [r.verdict for r in burst] == [
+        "admit", "admit", "degrade", "shed"
+    ]
+    assert burst[3].status == "shed" and burst[3].knn_dist is None
+    fe.pump(now=1.0)
+    # the DEGRADE rider pins the whole micro-batch to the worst routing
+    # level: all three served requests are capped and flagged
+    for r in burst[:3]:
+        assert r.status == "done" and r.degraded and r.max_cells == 1
+    s = fe.assert_conserved()
+    assert (s.submitted, s.shed, s.completed) == (6, 1, 5)
+    assert s.degraded_responses == 3
+
+    # ---- phase 3 (t=3.5): mid-serve cell kill --------------------------
+    # cell (0,0)'s only replica stops beating after t=1.0; past the 1 s
+    # heartbeat deadline it is lost outright, so post-kill batches are
+    # served degraded-and-flagged (drop_cells), never silently wrong.
+    dead = set(cluster.cell_devices(0, 0))
+    assert dead, "replication=1 cell must map to at least one device"
+    _beat_all(cluster, 2.0, dead=dead)
+    _beat_all(cluster, 3.5, dead=dead)
+    late = [
+        fe.submit(q[0:4], tenant="steady", now=3.5),
+        fe.submit(q[8:12], tenant="steady", now=3.5),
+    ]
+    fe.pump(now=3.5)
+    for r in late:
+        assert r.status == "done" and r.degraded
+        assert r.max_cells is None  # degradation came from the lost cell
+        assert r.epoch == 0  # no controller in the loop: same epoch
+
+    # ---- ground-truth totals ------------------------------------------
+    s = fe.assert_conserved()  # zero silent drops, balance == 0
+    assert s.submitted == 8
+    assert s.admitted == 7  # 2 exact + (2 admit + 1 degrade) + 2 late
+    assert s.shed == 1
+    assert s.completed == 7
+    assert s.timed_out == 0
+    assert s.degraded_responses == 5  # 3 burst-capped + 2 lost-cell
+    assert s.in_queue == 0
+    a = fe.admission.stats
+    assert (a.admitted, a.degraded, a.shed) == (6, 1, 1)
+    a.check()
+
+
+def test_flapping_burst_sheds_deterministically():
+    """Replaying the same burst schedule twice (fresh front ends, same
+    seed) produces identical verdict sequences and counters — the
+    property the chaos harness's exact assertions stand on."""
+    def run():
+        cluster = chaos.make_cluster(
+            seed=3, nu=2, p=1, replication=1, n=128, n_queries=8,
+            deadline_s=1.0,
+        )
+        q = np.asarray(cluster.queries, np.float32)
+        fe = frontend_mod.ServeFrontend(
+            cluster.elastic,
+            frontend_mod.FrontendConfig(
+                ladder=(4, 8),
+                quotas=(("t", admission.TenantQuota(
+                    rate_qps=2.0, burst=4.0, degrade_overdraft=2.0
+                )),),
+            ),
+        )
+        rng = np.random.default_rng(9)
+        verdicts = []
+        t = 0.0
+        for _ in range(12):
+            _beat_all(cluster, t)
+            nq = int(rng.integers(1, 5))
+            r = fe.submit(q[:nq], tenant="t", now=t)
+            verdicts.append(r.verdict)
+            fe.pump(now=t)
+            t += float(rng.uniform(0.1, 0.6))
+        s = fe.assert_conserved()
+        return verdicts, (s.submitted, s.shed, s.completed, s.timed_out)
+
+    v1, c1 = run()
+    v2, c2 = run()
+    assert v1 == v2 and c1 == c2
+    assert "shed" in v1 and "admit" in v1  # the schedule exercises both

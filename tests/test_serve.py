@@ -197,6 +197,37 @@ def test_serve_engine_all_deadlines_expired_stops_early():
     assert all(r.latency_s > 0.0 for r in done)
 
 
+def test_serve_engine_deadline_is_submission_relative():
+    """Regression: deadlines count from ``submitted_at``, not from prefill
+    start. A request that already sat queued past its deadline before its
+    micro-batch group starts must finalize ``timed_out`` with zero tokens,
+    and its latency must include the queued time — queued time silently
+    not counting against ``deadline_s`` was the bug."""
+    from repro.obs import clock
+
+    cfg = configs.get("granite-8b", smoke=True)
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    stale = engine.Request(
+        rid=0, tokens=rng.integers(0, cfg.vocab, 8), max_new=8, deadline_s=5.0,
+        submitted_at=clock.monotonic() - 10.0,  # queued 10 s ago
+    )
+    fresh = engine.Request(
+        rid=1, tokens=rng.integers(0, cfg.vocab, 8), max_new=3, deadline_s=60.0
+    )
+    done = engine.ServeEngine(model, params, max_batch=2, max_len=64).serve(
+        [stale, fresh]
+    )
+    assert done[0].done and done[0].timed_out, "queued time must count"
+    assert done[0].result == []
+    assert done[0].latency_s >= 10.0, "latency measures from submission"
+    # the fresh request was stamped at serve entry and completes normally
+    assert done[1].submitted_at > 0.0
+    assert done[1].done and not done[1].timed_out
+    assert len(done[1].result) == 3 and done[1].latency_s < 60.0
+
+
 def test_serve_engine_batched_requests():
     cfg = configs.get("granite-8b", smoke=True)
     model = api.build_model(cfg)
